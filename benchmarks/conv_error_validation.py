@@ -1,0 +1,63 @@
+"""Validation of the paper's convolution-level error equations.
+
+Eq. 12  (no CV):   E = k*mu_AM,  Var = k*sigma_AM^2
+Eq. 20  (CV, perforated/recursive):  Var = Var(x) * sum_j (W_j - E[W])^2
+Eqs. 22/28 (CV):   E = 0
+
+Empirical vs analytic, for k=256-term dot products, uniform activations,
+fixed random weights — the exact setting of Sec. 3.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import control_variate as cv
+from repro.core import multipliers as am
+
+K = 256
+N_TRIALS = 20_000
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for mode, m in [("perforated", 1), ("perforated", 2), ("perforated", 3),
+                    ("recursive", 2), ("recursive", 3), ("recursive", 4),
+                    ("truncated", 5), ("truncated", 6), ("truncated", 7)]:
+        w = rng.integers(0, 256, (K, 1))
+        a = rng.integers(0, 256, (N_TRIALS, K))
+        exact = a.astype(np.int64) @ w.astype(np.int64)
+        t0 = time.perf_counter()
+        acc = np.asarray(am.approx_matmul(a, w, mode, m)).astype(np.float64)
+        const = cv.cv_constants(w, mode, m)
+        v = np.asarray(cv.cv_term(a, const, mode, m))
+        dt = (time.perf_counter() - t0) * 1e6
+
+        err_no = (exact[:, 0] - acc[:, 0])
+        err_cv = (exact[:, 0] - acc[:, 0] - v[:, 0])
+
+        # analytic predictions (both-random Eq.12 moments serve as scale ref)
+        mu12, sig12 = cv.predicted_conv_error_no_cv_uniform(mode, m, K)
+        row = {
+            "name": f"conv_error/{mode}/m{m}",
+            "us_per_call": round(dt, 1),
+            "mean_no_cv": round(err_no.mean(), 1),
+            "mean_cv": round(err_cv.mean(), 3),
+            "std_no_cv": round(err_no.std(), 1),
+            "std_cv": round(err_cv.std(), 2),
+            "rms_improvement": round(
+                float(np.sqrt((err_no**2).mean() / max((err_cv**2).mean(), 1e-12))), 1),
+            "mean_nullified": bool(
+                abs(err_cv.mean()) < 5 * err_cv.std() / np.sqrt(N_TRIALS) + 1e-9),
+        }
+        if mode == "perforated":
+            pred = cv.predicted_var_with_cv_perforated(w[:, 0], m)
+            row["eq20_var_rel_err"] = round(abs(err_cv.var() - pred) / pred, 4)
+        if mode == "recursive":
+            pred = cv.predicted_var_with_cv_recursive(w[:, 0], m)
+            row["eq20_var_rel_err"] = round(abs(err_cv.var() - pred) / pred, 4)
+        rows.append(row)
+    return rows

@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: wall time of the jnp (XLA) execution paths and
+of the Pallas kernels in interpret mode (CPU container; interpret timings
+measure Python-loop emulation, NOT TPU performance — the TPU-relevant
+numbers are the §Roofline terms; these rows track relative costs and
+regressions)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multipliers as am
+from repro.core import control_variate as cv
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    m_, k_, n_ = 256, 1024, 256
+    a = jnp.asarray(rng.integers(0, 256, (m_, k_)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 256, (k_, n_)), jnp.int32)
+
+    exact = jax.jit(lambda a, w: am.approx_matmul(a, w, "exact", 0))
+    rows.append({"name": "kernel/xla_int_matmul_256x1024x256",
+                 "us_per_call": round(_time(exact, a, w), 1),
+                 "gflops": round(2 * m_ * k_ * n_ / 1e9, 3)})
+
+    for mode, m in [("perforated", 2), ("recursive", 3), ("truncated", 6)]:
+        f = jax.jit(lambda a, w, mode=mode, m=m: cv.approx_matmul_cv(a, w, mode, m))
+        us = _time(f, a, w)
+        rows.append({"name": f"kernel/xla_approx_cv/{mode}_m{m}",
+                     "us_per_call": round(us, 1),
+                     "overhead_vs_exact": round(us / max(_time(exact, a, w), 1e-9), 2)})
+
+    # Pallas interpret-mode correctness-path timing (NOT TPU performance)
+    from repro.kernels import ops
+
+    aq = jnp.asarray(rng.integers(0, 256, (128, 512)), jnp.uint8)
+    wq = jnp.asarray(rng.integers(0, 256, (512, 128)), jnp.uint8)
+    c = jnp.zeros((128,), jnp.float32)
+    sqw = jnp.sum(wq.astype(jnp.int32), 0)
+    f = lambda: ops.approx_matmul_cv_op(
+        aq, wq, c, c, sqw, c, 0.01, 0.01, 0.0, 0.0,
+        mode="perforated", m=2, interpret=True)
+    rows.append({"name": "kernel/pallas_interpret_approx_matmul_128x512x128",
+                 "us_per_call": round(_time(lambda _: f(), None, reps=2), 1),
+                 "note": "interpret mode (CPU emulation), TPU is the target"})
+
+    from repro.kernels.rwkv6_scan import rwkv6_scan
+    from repro.kernels import ref as kref
+
+    b, t, h, d = 1, 256, 4, 64
+    r = jnp.asarray(rng.normal(0, 1, (b, t, h, d)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(0, 1, (b, t, h, d)), jnp.float32)
+    v2 = jnp.asarray(rng.normal(0, 1, (b, t, h, d)), jnp.float32)
+    wd = jnp.asarray(np.clip(np.exp(-np.exp(rng.normal(-1, 1, (b, t, h, d)))),
+                             1e-4, 0.9999), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 0.3, (h, d)), jnp.float32)
+    seq = jax.jit(lambda *xs: kref.rwkv6_scan_ref(*xs, jnp.zeros((b, h, d, d)))[0])
+    rows.append({"name": "kernel/rwkv6_sequential_ref_T256",
+                 "us_per_call": round(_time(seq, r, k2, v2, wd, u), 1)})
+    chunked = jax.jit(lambda *xs: rwkv6_scan(*xs, chunk=32, interpret=True))
+    rows.append({"name": "kernel/rwkv6_chunked_interpret_T256",
+                 "us_per_call": round(_time(chunked, r, k2, v2, wd, u, reps=2), 1)})
+    return rows

@@ -1,0 +1,67 @@
+"""Roofline summary over the dry-run artifacts: per (arch x shape), the
+three terms, the dominant bottleneck, MODEL_FLOPS/HLO ratio, and the
+multi-pod compile proof.  Reads artifacts/dryrun/*.json (run
+`python -m repro.launch.dryrun --all` first)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    "..", "artifacts", "dryrun"))
+
+
+def run() -> list[dict]:
+    rows = []
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    if not recs:
+        return [{"name": "roofline/summary",
+                 "status": "pending (run `python -m repro.launch.dryrun --all`)"}]
+
+    by_cell: dict = {}
+    for r in recs:
+        by_cell.setdefault((r["arch"], r["shape"]), {})[r["multi_pod"]] = r
+
+    for (arch, shape), cells in sorted(by_cell.items()):
+        sp = cells.get(False)
+        mp = cells.get(True)
+        if sp is None:
+            continue
+        if sp["status"] == "skip":
+            rows.append({"name": f"roofline/{arch}/{shape}",
+                         "status": f"skip ({sp['reason']})"})
+            continue
+        if sp["status"] != "ok":
+            rows.append({"name": f"roofline/{arch}/{shape}", "status": "ERROR"})
+            continue
+        ro = sp["roofline"]
+        rows.append({
+            "name": f"roofline/{arch}/{shape}",
+            "us_per_call": round(max(ro["compute_s"], ro["memory_s"],
+                                     ro["collective_s"]) * 1e6, 1),
+            "compute_s": f"{ro['compute_s']:.3e}",
+            "memory_s": f"{ro['memory_s']:.3e}",
+            "collective_s": f"{ro['collective_s']:.3e}",
+            "dominant": ro["dominant"],
+            "useful_flops_ratio": round(sp.get("useful_flops_ratio") or 0, 3),
+            "temp_gb_per_chip": round(sp["memory"]["temp_size_in_bytes"] / 1e9, 1),
+            "multipod_compiles": bool(mp and mp["status"] == "ok"),
+        })
+
+    ok = [r for r in rows if "dominant" in r]
+    n_mp = sum(1 for r in ok if r["multipod_compiles"])
+    rows.append({
+        "name": "roofline/summary",
+        "cells_ok": len(ok),
+        "cells_multipod_ok": n_mp,
+        "dominant_histogram": {
+            d: sum(1 for r in ok if r["dominant"] == d)
+            for d in ("compute", "memory", "collective")
+        },
+    })
+    return rows

@@ -1,0 +1,171 @@
+"""Paper Tables 2-4: CNN inference accuracy under each approximate multiplier
+x approximation level, with vs without the control variate V.
+
+CIFAR is unavailable offline (DESIGN.md); the paper's TREND is validated on
+the same model families over the procedural 32x32x3 dataset at matching
+class counts (10 and 100).  Networks are trained in-framework (SGD-trained
+float models, cached under artifacts/cnn/), calibrated on held-out batches,
+then packed for every (multiplier, m) x {CV, no CV} and evaluated.
+
+Columns mirror the paper: accuracy loss vs the float model, "Ours" (with V)
+vs "w/o V".
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import load_pytree, save_pytree
+from repro.configs.cnn_suite import CNN_SUITE, get_cnn
+from repro.core.approx_linear import pack_params
+from repro.core.multipliers import PAPER_M_RANGE
+from repro.core.policy import ApproxPolicy, uniform_policy
+from repro.data.vision import VisionConfig, make_vision_dataset
+from repro.nn.cnn import cnn_apply, init_cnn
+from repro.quant.observers import CalibrationRecorder
+
+ART_DIR = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                        "..", "artifacts", "cnn"))
+N_TRAIN, N_TEST, N_CALIB = 4000, 1000, 256
+TRAIN_STEPS, BATCH = 300, 64
+
+#: layers kept float (the paper likewise keeps the (tiny) final classifier
+#: exact in spirit — first/last-layer exactness is standard practice)
+SKIP = ()
+
+
+def _train_cnn(name: str, cfg, xtr, ytr) -> dict:
+    """SGD+momentum training of the float model (cached)."""
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}_c{cfg.num_classes}.ckpt")
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    if os.path.exists(path):
+        try:
+            return load_pytree(params, path)
+        except (KeyError, ValueError):
+            pass  # config changed: retrain
+
+    mom = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, mom, xb, yb, lr):
+        def loss_fn(p):
+            logits = cnn_apply(p, xb, cfg)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, yb[:, None], 1).mean()
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        return params, mom, loss
+
+    n = xtr.shape[0]
+    rng = np.random.default_rng(0)
+    for i in range(TRAIN_STEPS):
+        idx = rng.integers(0, n, BATCH)
+        lr = 0.05 * min(1.0, (i + 1) / 50) * (0.5 ** (i // 200))
+        params, mom, loss = step(params, mom, jnp.asarray(xtr[idx]),
+                                 jnp.asarray(ytr[idx]), lr)
+    save_pytree(params, path)
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _logits(params, x, cfg):
+    return cnn_apply(params, x, cfg)
+
+
+def _accuracy(params, cfg, x, y, batch=250) -> float:
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        lg = _logits(params, jnp.asarray(x[i : i + batch]), cfg)
+        correct += int((jnp.argmax(lg, -1) == jnp.asarray(y[i : i + batch])).sum())
+    return correct / x.shape[0]
+
+
+def _calibrate(params, cfg, x_calib) -> dict:
+    with CalibrationRecorder() as rec:
+        cnn_apply(params, jnp.asarray(x_calib), cfg)  # unjitted: records
+    return rec.ranges()
+
+
+def _cache_path():
+    return os.path.join(ART_DIR, "results_cache.json")
+
+
+def _load_cache() -> dict:
+    import json
+    try:
+        with open(_cache_path()) as f:
+            return json.load(f)
+    except (FileNotFoundError, ValueError):
+        return {}
+
+
+def _save_cache(cache: dict) -> None:
+    import json
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(_cache_path(), "w") as f:
+        json.dump(cache, f)
+
+
+def run(nets: list[str] | None = None, class_counts=(10, 100)) -> list[dict]:
+    rows = []
+    cache = _load_cache()
+    nets = nets or list(CNN_SUITE)
+    if os.environ.get("BENCH_CACHED_ONLY"):
+        rows = sorted(cache.values(), key=lambda r: r["name"])
+        done = {r["name"].split("/")[1] + "/" + r["name"].split("/")[2] for r in rows}
+        rows.append({"name": "tables2_4/coverage",
+                     "nets_completed": sorted(done),
+                     "note": "cached rows only (background training fills the rest)"})
+        return rows
+    for num_classes in class_counts:
+        vcfg = VisionConfig(num_classes=num_classes)
+        xtr, ytr = make_vision_dataset(vcfg, "train", N_TRAIN)
+        xte, yte = make_vision_dataset(vcfg, "test", N_TEST)
+        for net in nets:
+            cfg = get_cnn(net, num_classes)
+            todo = [(mode, m) for mode, ms in PAPER_M_RANGE.items() for m in ms
+                    if f"tables2_4/{net}/c{num_classes}/{mode}/m{m}" not in cache]
+            if not todo:
+                rows.extend(cache[f"tables2_4/{net}/c{num_classes}/{mode}/m{m}"]
+                            for mode, ms in PAPER_M_RANGE.items() for m in ms)
+                continue
+            t0 = time.perf_counter()
+            params = _train_cnn(net, cfg, xtr, ytr)
+            train_us = (time.perf_counter() - t0) * 1e6
+            acc_float = _accuracy(params, cfg, xte, yte)
+            ranges = _calibrate(params, cfg, xtr[:N_CALIB])
+
+            for mode, ms in PAPER_M_RANGE.items():
+                for m in ms:
+                    key = f"tables2_4/{net}/c{num_classes}/{mode}/m{m}"
+                    if key in cache:
+                        rows.append(cache[key])
+                        continue
+                    accs = {}
+                    for use_cv in (True, False):
+                        policy = ApproxPolicy(mode, m, use_cv=use_cv)
+                        packed = pack_params(params, uniform_policy(policy, skip=SKIP),
+                                             act_ranges=ranges)
+                        accs[use_cv] = _accuracy(packed, cfg, xte, yte)
+                    row = {
+                        "name": key,
+                        "us_per_call": round(train_us, 0),
+                        "acc_float": round(acc_float, 4),
+                        "acc_cv": round(accs[True], 4),
+                        "acc_no_cv": round(accs[False], 4),
+                        "loss_cv_pct": round(100 * (acc_float - accs[True]), 2),
+                        "loss_no_cv_pct": round(100 * (acc_float - accs[False]), 2),
+                    }
+                    cache[key] = row
+                    _save_cache(cache)
+                    rows.append(row)
+    return rows

@@ -1,0 +1,58 @@
+"""Paper Fig. 10 in miniature: sweep (multiplier, m) x {CV, no-CV} on one
+trained CNN and print the accuracy-loss vs modeled-power Pareto points.
+
+Trains (or loads the cached) resnet44 on the procedural dataset first —
+expect a few minutes cold, seconds warm.
+
+    PYTHONPATH=src python examples/pareto_sweep.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.tables2_4_accuracy import (
+    N_CALIB, _accuracy, _calibrate, _train_cnn)
+from repro.configs.cnn_suite import get_cnn
+from repro.core import cost_model as cm
+from repro.core.approx_linear import pack_params
+from repro.core.multipliers import PAPER_M_RANGE
+from repro.core.policy import ApproxPolicy, uniform_policy
+from repro.data.vision import VisionConfig, make_vision_dataset
+
+
+def main() -> None:
+    vcfg = VisionConfig(num_classes=10)
+    xtr, ytr = make_vision_dataset(vcfg, "train", 4000)
+    xte, yte = make_vision_dataset(vcfg, "test", 1000)
+    cfg = get_cnn("resnet44", 10)
+    params = _train_cnn("resnet44", cfg, xtr, ytr)
+    acc_f = _accuracy(params, cfg, xte, yte)
+    ranges = _calibrate(params, cfg, xtr[:N_CALIB])
+    print(f"float accuracy: {acc_f:.3f}\n")
+    print(f"{'config':22s} {'norm power':>10s} {'dAcc (CV)':>10s} {'dAcc (no CV)':>13s}")
+
+    points = []
+    for mode, ms in PAPER_M_RANGE.items():
+        for m in ms:
+            accs = {}
+            for cv in (True, False):
+                packed = pack_params(
+                    params, uniform_policy(ApproxPolicy(mode, m, use_cv=cv)),
+                    act_ranges=ranges)
+                accs[cv] = _accuracy(packed, cfg, xte, yte)
+            power = 1 - cm.power_saving(mode, m, 64) / 100
+            d_cv, d_no = 100 * (acc_f - accs[True]), 100 * (acc_f - accs[False])
+            points.append((power, d_cv, f"{mode}/m{m}"))
+            print(f"{mode+'/m'+str(m):22s} {power:10.3f} {d_cv:9.2f}% {d_no:12.2f}%")
+
+    front = []
+    for p in sorted(points):
+        if not front or p[1] < front[-1][1]:
+            front.append(p)
+    print("\nPareto front (power, accuracy-loss):")
+    for p, d, lbl in front:
+        print(f"  {lbl:20s} power={p:.3f}  dAcc={d:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+Trains nothing — takes a tiny randomly-initialized transformer, packs it for
+an approximate-multiplier MAC array (uint8 codes + control-variate
+constants), and shows the CV recovering the logits that aggressive
+approximation destroys.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.policy import ApproxPolicy
+from repro.launch.serve import ServeConfig, build_serving_params
+from repro.models import build_model
+
+
+def main() -> None:
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"), compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+
+    ref = api.forward(params, {"tokens": toks})  # float reference
+
+    print(f"{'numerics':34s} {'mean |logit err|':>18s}")
+    for mode, m, cv in [
+        ("exact", 0, True),          # plain int8 quantization
+        ("perforated", 3, False),    # aggressive approximation, no correction
+        ("perforated", 3, True),     # the paper: + control variate
+        ("recursive", 4, False),
+        ("recursive", 4, True),
+        ("truncated", 6, False),
+        ("truncated", 6, True),
+    ]:
+        policy = ApproxPolicy(mode, m, use_cv=cv)
+        packed = build_serving_params(params, cfg, ServeConfig(policy=policy))
+        logits = api.forward(packed, {"tokens": toks})
+        err = float(jnp.abs(logits - ref).mean())
+        print(f"{policy.label():34s} {err:18.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro — Control-Variate Approximation for Approximate-Multiplier DNN Inference.
+
+A production-grade JAX training/inference framework reproducing and extending
+
+    "Leveraging Highly Approximated Multipliers in DNN Inference"
+    G. Zervakis, F. Frustaci, O. Spantidi, I. Anagnostopoulos, H. Amrouch,
+    J. Henkel (2024).
+
+Public surface:
+    repro.core            the paper's contribution (multipliers, control variate,
+                          approximate quantized layers, policies, cost model)
+    repro.quant           gemmlowp-style uint8 quantization substrate
+    repro.nn / repro.models   model zoo (10 assigned architectures + CNN suite)
+    repro.kernels         Pallas TPU kernels (+ jnp oracles)
+    repro.launch          mesh / dry-run / train / serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture (exact published
+hyper-parameters) + the paper's CNN suite + shared shape definitions."""
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import ARCH_REGISTRY, get_config, list_archs
+
+__all__ = ["ArchConfig", "ARCH_REGISTRY", "get_config", "list_archs"]

@@ -1,0 +1,227 @@
+"""Unified architecture configuration.
+
+One frozen dataclass describes every assigned architecture; model builders
+(models/lm.py, models/rwkv_lm.py) interpret it.  Published configs live in
+one module per arch (configs/<id>.py) and are registered in
+configs/registry.py.  ``reduced()`` derives the CPU-smoke-test variant of
+the same family (small depth/width/vocab/experts — structure preserved).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Literal["dense", "moe", "hybrid", "vlm", "audio", "ssm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # norm / positional
+    norm: Literal["rmsnorm", "layernorm", "nonparametric_ln"] = "rmsnorm"
+    qk_norm: bool = False
+    rope: Literal["rope", "mrope", "none"] = "rope"
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+
+    # attention
+    attn: Literal["gqa", "mla", "none"] = "gqa"
+    causal: bool = True
+    window: int | None = None  # sliding-window attention
+    qkv_bias: bool = False
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # mlp
+    mlp: Literal["swiglu", "gelu", "moe"] = "swiglu"
+    mlp_bias: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    first_dense_layers: int = 0
+    moe_impl: str = "local"  # "local" | "ep_psum" (launch overrides for pods)
+    capacity_factor: float = 1.25
+
+    # hybrid SSM heads (hymba)
+    parallel_ssm: bool = False
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    # rwkv
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+
+    # io
+    input_mode: Literal["tokens", "embeds"] = "tokens"
+    tie_embeddings: bool = False
+
+    # execution
+    scan_layers: bool = True
+    remat: Literal["none", "full", "dots"] = "none"
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # sequence parallelism: shard the residual stream's sequence axis over
+    # "model" between blocks (Megatron-SP style; GSPMD inserts the
+    # all-gather/reduce-scatter pairs).  Cuts per-layer saved activations by
+    # the TP degree — the §Perf lever for the large dense train cells.
+    sequence_parallel: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # -- derived sub-configs ------------------------------------------------
+
+    def attn_config(self):
+        from repro.nn.attention import AttnConfig
+
+        return AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            kv_heads=self.kv_heads,
+            head_dim=self.head_dim,
+            causal=self.causal,
+            qk_norm=self.qk_norm,
+            window=self.window,
+            rope=self.rope,
+            rope_theta=self.rope_theta,
+            mrope_sections=self.mrope_sections,
+            qkv_bias=self.qkv_bias,
+        )
+
+    def mla_config(self):
+        from repro.nn.attention import MLAConfig
+
+        return MLAConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            kv_lora_rank=self.kv_lora_rank,
+            qk_nope_dim=self.qk_nope_dim,
+            qk_rope_dim=self.qk_rope_dim,
+            v_head_dim=self.v_head_dim,
+            rope_theta=self.rope_theta,
+        )
+
+    def moe_config(self):
+        from repro.nn.moe import MoEConfig
+
+        return MoEConfig(
+            d_model=self.d_model,
+            d_ff_expert=self.d_ff_expert,
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            n_shared=self.n_shared_experts,
+            capacity_factor=self.capacity_factor,
+            impl=self.moe_impl,
+        )
+
+    def ssm_config(self):
+        from repro.nn.ssm import SSMConfig
+
+        return SSMConfig(
+            d_model=self.d_model,
+            d_inner=self.ssm_expand * self.d_model,
+            d_state=self.ssm_state,
+        )
+
+    def rwkv_config(self):
+        from repro.nn.rwkv import RWKVConfig
+
+        return RWKVConfig(
+            d_model=self.d_model, d_ff=self.d_ff, head_dim=self.rwkv_head_dim
+        )
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / linear-attn / windowed hybrids)."""
+        return self.rwkv or (self.parallel_ssm and self.window is not None)
+
+    @property
+    def has_decode(self) -> bool:
+        return self.causal  # encoder-only archs have no decode step
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, ff, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.rwkv:
+            tm = d * d * 5 + d * (5 * 32 + 5 * 32) + d * 64 * 2 + 2 * d
+            cm = d * ff * 2 + d * d
+            return emb + L * (tm + cm + 4 * d)
+        if self.attn == "mla":
+            attn = (
+                d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                + d * (self.kv_lora_rank + self.qk_rope_dim)
+                + self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                + self.n_heads * self.v_head_dim * d
+            )
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.kv_heads * hd + self.n_heads * hd * d
+        if self.mlp == "moe":
+            moe_l = (
+                3 * d * self.d_ff_expert * self.n_experts
+                + 3 * d * self.d_ff_expert * self.n_shared_experts
+                + d * self.n_experts
+            )
+            dense_l = 3 * d * ff
+            n_moe = L - self.first_dense_layers
+            mlp_total = n_moe * moe_l + self.first_dense_layers * dense_l
+        else:
+            mlp_total = L * 3 * d * ff
+        ssm = 0
+        if self.parallel_ssm:
+            di = self.ssm_expand * d
+            ssm = L * (2 * d * di + di * d + di * (self.ssm_state * 2 + d // 16))
+        return emb + L * attn + mlp_total + ssm
+
+    def active_param_count(self) -> int:
+        """Activated parameters per token (MoE: only routed top-k)."""
+        if self.mlp != "moe":
+            return self.param_count()
+        full = self.param_count()
+        moe_all = 3 * self.d_model * self.d_ff_expert * self.n_experts
+        moe_act = 3 * self.d_model * self.d_ff_expert * self.top_k
+        n_moe = self.n_layers - self.first_dense_layers
+        return full - n_moe * (moe_all - moe_act)
+
+    def reduced(self) -> "ArchConfig":
+        """CPU smoke-test variant: same family/structure, tiny dims."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2 + self.first_dense_layers,
+            d_model=64,
+            n_heads=4,
+            kv_heads=max(1, min(self.kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab=256,
+            n_experts=8 if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            d_ff_expert=32 if self.d_ff_expert else 0,
+            kv_lora_rank=32,
+            qk_nope_dim=16,
+            qk_rope_dim=8,
+            v_head_dim=16,
+            rwkv_head_dim=16,
+            mrope_sections=(2, 3, 3) if self.rope == "mrope" else self.mrope_sections,
+            window=min(self.window, 8) if self.window else None,
+            remat="none",
+            compute_dtype="float32",
+            moe_impl="local",
+        )

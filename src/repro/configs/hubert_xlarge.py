@@ -1,0 +1,28 @@
+"""hubert-xlarge [audio]: 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 —
+encoder-only transformer (same arch as wav2vec2).  [arXiv:2106.07447]
+
+The conv waveform frontend is a STUB per the assignment: inputs are
+precomputed frame embeddings.  Training objective is HuBERT-style masked
+frame cluster prediction (CE on masked frames).  Encoder-only: no decode
+shapes (recorded skip).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    norm="layernorm",
+    mlp="gelu",
+    mlp_bias=True,
+    rope="none",
+    causal=False,
+    input_mode="embeds",
+    remat="full",
+)

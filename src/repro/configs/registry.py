@@ -1,0 +1,41 @@
+"""Registry: arch id -> ArchConfig (exact assigned configs) + CNN suite."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.configs.qwen3_4b import CONFIG as _qwen3
+from repro.configs.deepseek_67b import CONFIG as _ds67
+from repro.configs.olmo_1b import CONFIG as _olmo
+from repro.configs.granite_8b import CONFIG as _granite
+from repro.configs.hymba_1p5b import CONFIG as _hymba
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.rwkv6_1p6b import CONFIG as _rwkv6
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _dsv2
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moon
+
+ARCH_REGISTRY: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        _qwen3,
+        _ds67,
+        _olmo,
+        _granite,
+        _hymba,
+        _qwen2vl,
+        _hubert,
+        _rwkv6,
+        _dsv2,
+        _moon,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return ARCH_REGISTRY[name[: -len("-reduced")]].reduced()
+    return ARCH_REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCH_REGISTRY)

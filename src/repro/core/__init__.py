@@ -1,0 +1,15 @@
+"""The paper's primary contribution: approximate-multiplier numerics and the
+control-variate correction, as composable JAX building blocks.
+
+  multipliers.py      bit-exact AM_P / AM_R / AM_T emulation (elementwise +
+                      MXU bit-slice matmul forms) and analytic error moments
+  control_variate.py  the CV statistics/constants and the corrected matmul
+  approx_linear.py    the approximation-aware linear op used by every model
+  policy.py           per-layer approximation policies + auto-policy search
+  cost_model.py       MAC-array power/area model (paper Figs. 7-9, Table 5)
+"""
+
+from repro.core import multipliers
+from repro.core import control_variate
+
+__all__ = ["multipliers", "control_variate"]

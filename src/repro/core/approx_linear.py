@@ -1,0 +1,186 @@
+"""The approximation-aware dense op used by every model in the framework.
+
+Two parameter representations for a linear layer:
+
+  * float dict ``{"w": (k, n), "b": (n,)?}`` — training / exact inference;
+  * :class:`QuantizedDense` — the offline-packed serving representation:
+    uint8 weight codes, quant params, CV constants, and the static
+    :class:`~repro.core.policy.ApproxPolicy` as pytree metadata.
+
+``dense(p, x)`` dispatches on the representation, so model code is agnostic
+to whether it runs float, exact-int8, or approximate+CV — the paper's
+technique is a parameter transformation (:func:`pack_params`), not a model
+rewrite.  This mirrors the hardware story: the same network is simply mapped
+onto a different MAC array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import control_variate as cv
+from repro.core import multipliers as am
+from repro.core.policy import ApproxPolicy, PolicyFn
+from repro.quant.quantize import (
+    PackedLinear,
+    QuantParams,
+    calibrate_minmax,
+    pack_linear,
+    quantized_linear,
+)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedDense:
+    """Packed approximate linear layer.  ``policy`` is static metadata."""
+
+    pack: PackedLinear
+    a_qp: QuantParams
+    policy: ApproxPolicy = dataclasses.field(metadata=dict(static=True))
+
+
+def is_linear_params(p: Any) -> bool:
+    """Float linear leaf: 2D weights, or 3D = (layers, k, n) scanned stack."""
+    return isinstance(p, dict) and "w" in p and getattr(p["w"], "ndim", 0) in (2, 3)
+
+
+def dense(p: Any, x: jax.Array, name: str | None = None) -> jax.Array:
+    """y = x @ W (+ b), under whatever numerics ``p`` encodes.
+
+    x: (..., k).  ``name`` (optional) scopes calibration recording so the
+    recorded activation-range path matches the parameter-tree path used by
+    :func:`pack_params`.
+    """
+    from repro.quant import observers
+
+    if isinstance(p, QuantizedDense):
+        pol = p.policy
+        if pol.backend == "pallas" and pol.is_approx:
+            from repro.kernels import ops as kops
+
+            return kops.quantized_dense_pallas(x, p).astype(x.dtype)
+        return quantized_linear(
+            x,
+            p.pack,
+            p.a_qp,
+            pol.mode,
+            pol.m,
+            use_cv=pol.use_cv,
+            groups=pol.groups,
+        ).astype(x.dtype)
+    # float path (+ calibration recording when a recorder is active)
+    if name is not None:
+        with observers.scope(name):
+            observers.record(x)
+    else:
+        observers.record(x)
+    y = jnp.matmul(x, p["w"])
+    if "b" in p and p["b"] is not None:
+        y = y + p["b"]
+    return y
+
+
+def init_dense(key, k: int, n: int, *, bias: bool = True, scale: float | None = None,
+               dtype=jnp.float32) -> dict:
+    """Standard trunc-normal linear init (1/sqrt(k) fan-in scaling)."""
+    if scale is None:
+        scale = k**-0.5
+    p = {"w": (jax.random.truncated_normal(key, -2.0, 2.0, (k, n)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Offline packing: float params + calibration stats -> approximate params
+# ---------------------------------------------------------------------------
+
+
+def pack_dense(
+    p: dict,
+    policy: ApproxPolicy,
+    act_range: tuple[float, float] | tuple[jax.Array, jax.Array],
+) -> QuantizedDense:
+    """Pack one float linear layer for the approximate array.
+
+    Handles both 2D weights and 3D (layers, k, n) scanned stacks — for the
+    latter every per-layer slice gets its own quant/CV constants (vmapped),
+    and `lax.scan` over the resulting QuantizedDense xs slices them per step.
+    """
+    import functools
+
+    w = p["w"]
+    b = p.get("b")
+    fn = functools.partial(
+        pack_linear, mode=policy.mode, m=policy.m, groups=policy.groups
+    )
+    if w.ndim == 3:
+        pack = jax.vmap(lambda wi, bi: fn(wi, bi))(
+            w, b if b is not None else jnp.zeros((w.shape[0], w.shape[-1]), w.dtype)
+        )
+        if b is None:
+            pack = dataclasses.replace(pack, bias=None)
+        # per-layer activation quant params so lax.scan can slice the pack
+        a_qp = calibrate_minmax(
+            jnp.broadcast_to(jnp.asarray(act_range[0], jnp.float32), (w.shape[0],)),
+            jnp.broadcast_to(jnp.asarray(act_range[1], jnp.float32), (w.shape[0],)),
+        )
+    else:
+        pack = fn(w, b)
+        a_qp = calibrate_minmax(act_range[0], act_range[1])
+    return QuantizedDense(pack=pack, a_qp=a_qp, policy=policy)
+
+
+def pack_params(
+    params: Any,
+    policy_fn: PolicyFn,
+    act_ranges: dict[str, tuple[float, float]] | None = None,
+    default_range: tuple[float, float] = (-8.0, 8.0),
+) -> Any:
+    """Walk a parameter tree, replacing float linear leaves with packed ones.
+
+    ``policy_fn(path)`` picks the policy per layer (None keeps float);
+    ``act_ranges`` maps "/".join(path) -> (lo, hi) calibration stats recorded
+    by :mod:`repro.quant.observers`.  Layers without stats use
+    ``default_range`` (safe-wide; accuracy benchmarks always calibrate).
+    """
+
+    def walk(node: Any, path: tuple[str, ...]) -> Any:
+        if is_linear_params(node):
+            policy = policy_fn(path)
+            if policy is None:
+                return node
+            key = "/".join(path)
+            rng = (act_ranges or {}).get(key, default_range)
+            return pack_dense(node, policy, rng)
+        if isinstance(node, dict):
+            return {k: walk(v, path + (str(k),)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v, path + (str(i),)) for i, v in enumerate(node))
+        return node
+
+    return walk(params, ())
+
+
+def packed_layer_paths(params: Any) -> list[str]:
+    """All paths that hold a QuantizedDense (for reporting/tests)."""
+    out: list[str] = []
+
+    def walk(node: Any, path: tuple[str, ...]):
+        if isinstance(node, QuantizedDense):
+            out.append("/".join(path))
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + (str(k),))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, path + (str(i),))
+
+    walk(params, ())
+    return out

@@ -1,0 +1,240 @@
+"""Control-variate approximation (the paper's Sec. 3).
+
+The convolution/GEMM computed on the approximate array is
+
+    G* = B + sum_j AM(W_j, A_j) + V,      V = C * sum_j x_j + C0     (13)-(15)
+
+with the per-multiplier choices (all derived in the paper, reproduced here):
+
+  perforated (Sec. 3.1):  x_j = A_j mod 2^m,           C = E_j[W_j],      C0 = 0
+  truncated  (Sec. 3.2):  x_j = OR(A_j[m-1:0]),        C = E_j[W_hat_j],
+                          C0 = 2^-m sum_j W_hat_j   (folded into the bias)
+  recursive  (Sec. 3.3):  x_j = A_j mod 2^m,           C = E_j[W_j mod 2^m], C0 = 0
+
+where W_hat = 1/2 sum_{i<m} (W mod 2^{m-i}) 2^i (Eq. 24).  The expectation
+E_j[.] runs over the reduction (fan-in) axis of each output neuron, so C and
+C0 are per-output-channel vectors computed OFFLINE from the weight codes; the
+only runtime statistic is the scalar-per-row reduction sum_j x_j — the paper's
+MAC+ column, i.e. a rank-1 epilogue on TPU (DESIGN.md Sec. 2a).
+
+Everything here operates on uint8 codes held in int32, matching
+:mod:`repro.core.multipliers`.
+
+Beyond-paper extension: *grouped* control variates (``groups > 1``) split the
+reduction axis into contiguous groups with an independent C per group.  This
+interpolates between the paper's single-C CV (groups=1) and exact error
+reconstruction (groups=k), strictly reducing Eq. 20's variance at a cost of
+one extra rank-1 term per group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import multipliers as am
+
+Mode = am.Mode
+
+
+# ---------------------------------------------------------------------------
+# Runtime activation statistics  x_j  (cheap, per the paper's hardware)
+# ---------------------------------------------------------------------------
+
+
+def x_stat(a_codes, mode: Mode, m: int) -> jax.Array:
+    """The control-variate input statistic x_j per activation code (int32).
+
+    perforated/recursive: the m low bits of the code (Eqs. 18/29).
+    truncated: 1 iff any of the m low bits is set (Eq. 25's Kronecker term).
+    """
+    if mode == "exact" or m == 0:
+        return jnp.zeros_like(jnp.asarray(a_codes, jnp.int32))
+    if mode in ("perforated", "recursive"):
+        return am.low_bits(a_codes, m)
+    if mode == "truncated":
+        return (am.low_bits(a_codes, m) != 0).astype(jnp.int32)
+    raise ValueError(f"unknown mode: {mode}")
+
+
+def sum_x(a_codes, mode: Mode, m: int, axis: int = -1) -> jax.Array:
+    """sum_j x_j along the reduction axis — the MAC+ column's running sum."""
+    return jnp.sum(x_stat(a_codes, mode, m), axis=axis, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Offline weight constants  C, C0
+# ---------------------------------------------------------------------------
+
+
+def w_hat(w_codes, m: int) -> jax.Array:
+    """Eq. 24: W_hat = 1/2 sum_{i<m} (W mod 2^{m-i}) * 2^i, as float32."""
+    w = jnp.asarray(w_codes, jnp.int32)
+    acc = jnp.zeros(w.shape, jnp.float32)
+    for i in range(m):
+        acc = acc + (am.low_bits(w, m - i) << i).astype(jnp.float32)
+    return acc / 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CVConstants:
+    """Offline control-variate constants for one linear layer.
+
+    c:  (n_out,) float32 — the multiplicative constant C per output channel.
+    c0: (n_out,) float32 — the additive constant C0 (zero except truncated);
+        in hardware it is folded into the bias (Sec. 3.2), we do the same.
+    """
+
+    c: jax.Array
+    c0: jax.Array
+
+    def astuple(self):
+        return (self.c, self.c0)
+
+
+def cv_constants(w_codes, mode: Mode, m: int, reduce_axis: int = 0) -> CVConstants:
+    """Compute (C, C0) from the weight codes of a (k, n) linear layer.
+
+    ``reduce_axis`` is the fan-in axis (the axis summed by the MAC array).
+    """
+    w = jnp.asarray(w_codes, jnp.int32)
+    n_out_shape = tuple(
+        d for i, d in enumerate(w.shape) if i != (reduce_axis % w.ndim)
+    )
+    if mode == "exact" or m == 0:
+        z = jnp.zeros(n_out_shape, jnp.float32)
+        return CVConstants(c=z, c0=z)
+    if mode == "perforated":
+        c = jnp.mean(w.astype(jnp.float32), axis=reduce_axis)
+        return CVConstants(c=c, c0=jnp.zeros_like(c))
+    if mode == "recursive":
+        c = jnp.mean(am.low_bits(w, m).astype(jnp.float32), axis=reduce_axis)
+        return CVConstants(c=c, c0=jnp.zeros_like(c))
+    if mode == "truncated":
+        wh = w_hat(w, m)
+        c = jnp.mean(wh, axis=reduce_axis)
+        c0 = jnp.sum(wh, axis=reduce_axis) / float(1 << m)
+        return CVConstants(c=c, c0=c0)
+    raise ValueError(f"unknown mode: {mode}")
+
+
+def cv_constants_grouped(
+    w_codes, mode: Mode, m: int, groups: int, reduce_axis: int = 0
+) -> CVConstants:
+    """Beyond-paper grouped CV: per-group C over ``groups`` contiguous slices
+    of the fan-in axis.  Returns c of shape (groups, n_out); c0 as in the
+    paper (computed over the full axis — the mean-nullification argument is
+    unchanged because it is linear in the group partition).
+    """
+    w = jnp.asarray(w_codes, jnp.int32)
+    w = jnp.moveaxis(w, reduce_axis, 0)
+    k = w.shape[0]
+    if k % groups != 0:
+        raise ValueError(f"fan-in {k} not divisible by groups {groups}")
+    wg = w.reshape(groups, k // groups, *w.shape[1:])
+    per_group = cv_constants(wg, mode, m, reduce_axis=1)
+    full = cv_constants(w, mode, m, reduce_axis=0)
+    return CVConstants(c=per_group.c, c0=full.c0)
+
+
+# ---------------------------------------------------------------------------
+# The control variate V and the corrected matmul
+# ---------------------------------------------------------------------------
+
+
+def cv_term(a_codes, const: CVConstants, mode: Mode, m: int) -> jax.Array:
+    """V = C * sum_j x_j + C0 for a batch of activation rows.
+
+    a_codes: (..., k) uint8 codes; returns (..., n_out) float32.
+    The rank-1 structure is explicit: outer(sum_x(A), C).
+    """
+    sx = sum_x(a_codes, mode, m, axis=-1).astype(jnp.float32)  # (...,)
+    return sx[..., None] * const.c + const.c0
+
+
+def cv_term_grouped(
+    a_codes, const: CVConstants, mode: Mode, m: int, groups: int
+) -> jax.Array:
+    """Grouped-CV V: sum_g C_g * sum_{j in g} x_j + C0 (rank-``groups``)."""
+    a = jnp.asarray(a_codes, jnp.int32)
+    k = a.shape[-1]
+    ag = a.reshape(*a.shape[:-1], groups, k // groups)
+    sx = sum_x(ag, mode, m, axis=-1).astype(jnp.float32)  # (..., groups)
+    # const.c: (groups, n_out)
+    v = jax.lax.dot_general(
+        sx,
+        const.c,
+        dimension_numbers=(((sx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return v + const.c0
+
+
+def approx_matmul_cv(
+    a_codes,
+    w_codes,
+    mode: Mode,
+    m: int,
+    const: CVConstants | None = None,
+    groups: int = 1,
+) -> jax.Array:
+    """G*-style corrected code-space matmul: sum AM(w, a) + V  (float32).
+
+    This is the reference composition used by the quantized layer and as the
+    oracle for the fused Pallas kernel.
+    """
+    acc = am.approx_matmul(a_codes, w_codes, mode, m).astype(jnp.float32)
+    if mode == "exact" or m == 0:
+        return acc
+    if const is None:
+        const = (
+            cv_constants(w_codes, mode, m)
+            if groups == 1
+            else cv_constants_grouped(w_codes, mode, m, groups)
+        )
+    if groups == 1:
+        return acc + cv_term(a_codes, const, mode, m)
+    return acc + cv_term_grouped(a_codes, const, mode, m, groups)
+
+
+# ---------------------------------------------------------------------------
+# Analytic predictions (Eqs. 12, 20, 22, 28) for tests/benchmarks
+# ---------------------------------------------------------------------------
+
+
+def predicted_conv_error_no_cv_uniform(mode: Mode, m: int, k: int) -> tuple[float, float]:
+    """Eq. 12: mean/std of the convolution error WITHOUT the control variate,
+    for k-term dot products of i.i.d. uniform codes."""
+    mu, sigma = am.analytic_error_moments_uniform(mode, m)
+    return k * mu, float(np.sqrt(k) * sigma)
+
+
+def predicted_var_with_cv_perforated(w_codes: np.ndarray, m: int) -> float:
+    """Eq. 20 evaluated at the optimal C = E[W]:
+    Var(eps_G*) = Var(x) * sum_j (W_j - E[W])^2, Var(x) = (2^m-1)(2^m+1)/12.
+
+    (A ~ uniform; the same expression holds for the recursive multiplier with
+    W replaced by W mod 2^m, Sec. 3.3.)
+    """
+    w = np.asarray(w_codes, np.float64)
+    var_x = ((1 << m) - 1) * ((1 << m) + 1) / 12.0
+    return float(var_x * np.sum((w - w.mean()) ** 2))
+
+
+def predicted_var_with_cv_recursive(w_codes: np.ndarray, m: int) -> float:
+    wl = np.asarray(w_codes, np.int64) % (1 << m)
+    return predicted_var_with_cv_perforated(wl, m)
+
+
+def predicted_mean_with_cv(
+    w_codes: np.ndarray, mode: Mode, m: int
+) -> float:
+    """Eqs. 22/28: with the paper's (C, C0) the mean error is exactly zero
+    when A is uniform.  Returned analytically (always 0.0) — the tests verify
+    the *empirical* mean is within CLT bounds of it.
+    """
+    return 0.0

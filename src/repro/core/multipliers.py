@@ -1,0 +1,319 @@
+"""Bit-exact models of the paper's approximate multipliers (Sec. 2).
+
+All functions operate on *unsigned 8-bit codes* held in int32 arrays (the
+gemmlowp/TFApprox convention: quantized weights/activations are uint8 codes,
+products accumulate in int32).  Three multiplier families, each parameterized
+by its approximation knob ``m``:
+
+  perforated  AM_P (Eq. 2):  the m least-significant partial products of A are
+              omitted (s = 0 per the paper).  Error (Eq. 3):
+              eps = W * (A mod 2^m).
+  recursive   AM_R (Eq. 5):  the low x low sub-product is pruned.  Error
+              (Eq. 6): eps = (W mod 2^m) * (A mod 2^m).
+  truncated   AM_T (Eq. 7):  the m least-significant columns of the partial
+              product matrix are removed.  Error (Eq. 8):
+              eps = sum_{i<m} (W mod 2^{m-i}) * a_i * 2^i.
+
+Two computational forms are provided and tested for exact int32 equality:
+
+  * elementwise  — the scalar hardware definition (oracle form);
+  * matmul       — the bit-slice algebra used on TPU so the MXU still runs
+                   exact integer matmuls (DESIGN.md Sec. 2b).
+
+Analytic error moments (mean/variance) back the paper's Table 1 and the
+control-variate derivations; they are exact for independent uniform codes and
+numerically integrated for arbitrary code distributions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Mode = Literal["perforated", "truncated", "recursive", "exact"]
+
+#: All approximation modes implemented in this framework (order is the order
+#: the paper presents them in Sec. 2).
+APPROX_MODES: tuple[str, ...] = ("perforated", "recursive", "truncated")
+
+#: Paper-evaluated m ranges per multiplier (Sec. 5).
+PAPER_M_RANGE = {
+    "perforated": (1, 2, 3),
+    "recursive": (2, 3, 4),
+    "truncated": (5, 6, 7),
+}
+
+NBITS = 8  # the paper's accelerator multiplies 8-bit codes
+
+
+def _as_i32(x) -> jax.Array:
+    return jnp.asarray(x, dtype=jnp.int32)
+
+
+def low_bits(x, m: int) -> jax.Array:
+    """``x mod 2^m`` for non-negative codes (bitwise AND with the low mask)."""
+    if m <= 0:
+        return jnp.zeros_like(_as_i32(x))
+    return _as_i32(x) & ((1 << m) - 1)
+
+
+def high_part(x, m: int) -> jax.Array:
+    """``x - (x mod 2^m)``: the code with its m LSBs zeroed."""
+    return _as_i32(x) - low_bits(x, m)
+
+
+def bit(x, i: int) -> jax.Array:
+    """Bit i of the code, as int32 in {0, 1}."""
+    return (_as_i32(x) >> i) & 1
+
+
+# ---------------------------------------------------------------------------
+# Elementwise (scalar hardware definition) forms
+# ---------------------------------------------------------------------------
+
+
+def am_exact(w, a) -> jax.Array:
+    """The exact 8x8 product (reference MAC)."""
+    return _as_i32(w) * _as_i32(a)
+
+
+def am_perforated(w, a, m: int) -> jax.Array:
+    """AM_P (Eq. 2) with s=0: omit the m least partial products of A.
+
+    Equivalent closed form: W * (A - A mod 2^m).
+    """
+    return _as_i32(w) * high_part(a, m)
+
+
+def am_recursive(w, a, m: int) -> jax.Array:
+    """AM_R (Eq. 5): prune the W_L x A_L sub-product (m-bit low parts)."""
+    return am_exact(w, a) - low_bits(w, m) * low_bits(a, m)
+
+
+def am_truncated(w, a, m: int) -> jax.Array:
+    """AM_T (Eq. 7): remove the m least-significant partial-product columns.
+
+    Implemented as exact product minus the Eq. 8 error term; bit-level
+    equivalence with the explicit partial-product-matrix definition is
+    asserted in tests (tests/test_multipliers.py).
+    """
+    return am_exact(w, a) - err_truncated(w, a, m)
+
+
+def err_perforated(w, a, m: int) -> jax.Array:
+    """Eq. 3: eps = W * p,  p = A mod 2^m."""
+    return _as_i32(w) * low_bits(a, m)
+
+
+def err_recursive(w, a, m: int) -> jax.Array:
+    """Eq. 6: eps = W_L * A_L."""
+    return low_bits(w, m) * low_bits(a, m)
+
+
+def err_truncated(w, a, m: int) -> jax.Array:
+    """Eq. 8: eps = sum_{i=0}^{m-1} (W mod 2^{m-i}) * a_i * 2^i."""
+    w = _as_i32(w)
+    a = _as_i32(a)
+    err = jnp.zeros(jnp.broadcast_shapes(w.shape, a.shape), dtype=jnp.int32)
+    for i in range(m):
+        err = err + low_bits(w, m - i) * bit(a, i) * (1 << i)
+    return err
+
+
+def am_truncated_ppmatrix(w, a, m: int) -> jax.Array:
+    """AM_T from first principles: sum partial-product bits with i+j >= m.
+
+    This is the literal hardware definition (the AND gates w_j & a_i with
+    i + j < m are not implemented).  O(n^2) bit ops — used only as a test
+    oracle for :func:`am_truncated`.
+    """
+    w = _as_i32(w)
+    a = _as_i32(a)
+    acc = jnp.zeros(jnp.broadcast_shapes(w.shape, a.shape), dtype=jnp.int32)
+    for i in range(NBITS):
+        for j in range(NBITS):
+            if i + j >= m:
+                acc = acc + (bit(w, j) * bit(a, i)) * (1 << (i + j))
+    return acc
+
+
+_ELEMENTWISE = {
+    "exact": lambda w, a, m: am_exact(w, a),
+    "perforated": am_perforated,
+    "recursive": am_recursive,
+    "truncated": am_truncated,
+}
+
+_ERROR = {
+    "exact": lambda w, a, m: jnp.zeros(
+        jnp.broadcast_shapes(jnp.shape(w), jnp.shape(a)), jnp.int32
+    ),
+    "perforated": err_perforated,
+    "recursive": err_recursive,
+    "truncated": err_truncated,
+}
+
+
+def am(w, a, mode: Mode, m: int) -> jax.Array:
+    """Dispatch: approximate product of uint8 codes under ``mode``/``m``."""
+    return _ELEMENTWISE[mode](w, a, m)
+
+
+def am_error(w, a, mode: Mode, m: int) -> jax.Array:
+    """Dispatch: multiplication error ``w*a - AM(w, a)``."""
+    return _ERROR[mode](w, a, m)
+
+
+# ---------------------------------------------------------------------------
+# Matmul-algebra (MXU) forms — exact bit-slice decompositions
+# ---------------------------------------------------------------------------
+
+
+def _int_matmul(a, w) -> jax.Array:
+    """Exact integer matmul with int32 accumulation: (..., k) @ (k, n)."""
+    return jax.lax.dot_general(
+        _as_i32(a),
+        _as_i32(w),
+        dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def truncated_error_planes(w, m: int) -> jax.Array:
+    """Precomputed weight error planes for AM_T: plane[i] = W mod 2^{m-i}.
+
+    Shape (m, *w.shape).  These live in the quantized parameter pack so the
+    runtime only extracts activation bitplanes.
+    """
+    if m == 0:
+        return jnp.zeros((0,) + jnp.shape(w), jnp.int32)
+    return jnp.stack([low_bits(w, m - i) for i in range(m)])
+
+
+def approx_matmul_ref(a, w, mode: Mode, m: int) -> jax.Array:
+    """Oracle: sum of elementwise AM products.  a: (..., k), w: (k, n).
+
+    O(B*K*N) memory — test-scale shapes only.
+    """
+    a_e = _as_i32(a)[..., :, None]  # (..., k, 1)
+    w_e = _as_i32(w)[None, :, :] if w.ndim == 2 else _as_i32(w)
+    prod = am(w_e, a_e, mode, m)  # (..., k, n)
+    return jnp.sum(prod, axis=-2, dtype=jnp.int32)
+
+
+def approx_matmul(a, w, mode: Mode, m: int) -> jax.Array:
+    """Exact bit-slice matmul form of sum_k AM(w[k, n], a[..., k]).
+
+    perforated: A_hi @ W                          (1 matmul)
+    recursive : A @ W - A_lo @ W_lo               (2 matmuls)
+    truncated : A @ W - sum_i 2^i bit_i(A) @ (W mod 2^{m-i})   (1 + m matmuls)
+    exact     : A @ W
+
+    All matmuls are exact int32; results match :func:`approx_matmul_ref`
+    bit-for-bit.
+    """
+    if mode == "exact" or m == 0:
+        return _int_matmul(a, w)
+    if mode == "perforated":
+        return _int_matmul(high_part(a, m), w)
+    if mode == "recursive":
+        return _int_matmul(a, w) - _int_matmul(low_bits(a, m), low_bits(w, m))
+    if mode == "truncated":
+        acc = _int_matmul(a, w)
+        # Batch the m thin bitplane matmuls into one matmul on a widened
+        # contraction axis: concat bitplanes of A along k, concat scaled
+        # error planes of W along k.
+        planes_a = jnp.concatenate([bit(a, i) << i for i in range(m)], axis=-1)
+        planes_w = jnp.concatenate([low_bits(w, m - i) for i in range(m)], axis=0)
+        return acc - _int_matmul(planes_a, planes_w)
+    raise ValueError(f"unknown mode: {mode}")
+
+
+# ---------------------------------------------------------------------------
+# Analytic error moments (Table 1 math + CV derivations)
+# ---------------------------------------------------------------------------
+
+
+def _uniform_code_moments(nbits: int = NBITS) -> tuple[float, float]:
+    """Mean and second moment of U{0, ..., 2^nbits - 1}."""
+    n = float(2**nbits)
+    mean = (n - 1) / 2.0
+    second = (n - 1) * (2 * n - 1) / 6.0
+    return mean, second
+
+
+def _mod_moments_uniform(nbits: int, m: int) -> tuple[float, float]:
+    """Mean/second moment of (X mod 2^m) for X ~ U{0..2^nbits-1}, m<=nbits."""
+    return _uniform_code_moments(m)
+
+
+def analytic_error_moments_uniform(mode: Mode, m: int) -> tuple[float, float]:
+    """(mu, sigma) of the multiplier error for i.i.d. U{0..255} operands.
+
+    Closed forms from Eqs. 3/6/8 with independent uniform W, A — these are the
+    numbers the paper's Table 1 measures empirically with 1M samples.
+    """
+    if mode == "exact" or m == 0:
+        return 0.0, 0.0
+    ew, ew2 = _uniform_code_moments(NBITS)
+    if mode == "perforated":
+        ep, ep2 = _mod_moments_uniform(NBITS, m)
+        mu = ew * ep
+        var = ew2 * ep2 - mu * mu
+        return mu, float(np.sqrt(var))
+    if mode == "recursive":
+        el, el2 = _mod_moments_uniform(NBITS, m)
+        mu = el * el
+        var = el2 * el2 - mu * mu
+        return mu, float(np.sqrt(var))
+    if mode == "truncated":
+        # eps = sum_i (W mod 2^{m-i}) a_i 2^i.  The a_i are independent
+        # Bernoulli(1/2) for uniform A, and (W mod 2^{m-i}) terms share W, so
+        # compute moments by exhausting W (256 values) with a_i independent.
+        w = np.arange(256)
+        terms = [((w % (1 << (m - i))) * (1 << i)).astype(np.float64) for i in range(m)]
+        # E over a: each a_i ~ B(1/2) independent; E over w: uniform.
+        mu_w = sum(0.5 * t for t in terms)  # E[eps | W]
+        var_w = sum(0.25 * t * t for t in terms)  # Var[eps | W]
+        mu = float(mu_w.mean())
+        var = float(var_w.mean() + mu_w.var())
+        return mu, float(np.sqrt(var))
+    raise ValueError(f"unknown mode: {mode}")
+
+
+def empirical_error_moments(
+    mode: Mode,
+    m: int,
+    w_codes: np.ndarray,
+    a_codes: np.ndarray,
+) -> tuple[float, float]:
+    """Empirical (mu, sigma) of the error over given code samples."""
+    err = np.asarray(am_error(w_codes, a_codes, mode, m))
+    return float(err.mean()), float(err.std())
+
+
+@functools.lru_cache(maxsize=None)
+def error_mean_per_weight_uniform_a(mode: Mode, m: int) -> np.ndarray:
+    """E_A[eps | W = w] for all 256 codes w, A ~ U{0..255}.
+
+    Used by the control-variate module for analytic validation; Eq. 23 for
+    truncated, W * E[A mod 2^m] for perforated, (W mod 2^m) * E[A_L] for
+    recursive.
+    """
+    w = np.arange(256, dtype=np.float64)
+    if mode == "exact" or m == 0:
+        return np.zeros(256)
+    if mode == "perforated":
+        return w * ((1 << m) - 1) / 2.0
+    if mode == "recursive":
+        return (np.arange(256) % (1 << m)) * ((1 << m) - 1) / 2.0
+    if mode == "truncated":
+        acc = np.zeros(256)
+        for i in range(m):
+            acc += (np.arange(256) % (1 << (m - i))) * (1 << i)
+        return acc / 2.0  # E[a_i] = 1/2
+    raise ValueError(f"unknown mode: {mode}")

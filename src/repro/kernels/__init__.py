@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  approx_matmul.py    fused int8 approximate matmul + control-variate rank-1
+                      epilogue (the paper's MAC array, DESIGN.md Sec. 2)
+  rwkv6_scan.py       chunked RWKV6 WKV linear-attention recurrence
+  flash_attention.py  blocked online-softmax attention (causal/window/GQA)
+  ops.py              jitted wrappers (padding, batching, backend selection)
+  ref.py              pure-jnp oracles (the scalar hardware definitions)
+
+TPU is the compilation target; CPU correctness runs use interpret=True.
+"""

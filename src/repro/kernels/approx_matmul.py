@@ -1,0 +1,233 @@
+"""Fused approximate-multiplier matmul with control-variate epilogue (Pallas TPU).
+
+This is the TPU realization of the paper's approximate systolic array
+(DESIGN.md Sec. 2): one kernel computes, for uint8 activation codes A (M, K)
+and weight codes W (K, N),
+
+    acc[m, n]  = sum_k AM(W[k, n], A[m, k])          (bit-slice MXU algebra)
+    sumx[m]    = sum_k x(A[m, k])                    (the MAC* side-adder)
+    sumqa[m]   = sum_k A[m, k]                       (gemmlowp correction)
+    out[m, n]  = sa*sw * ( acc + CV + zero-point corrections ) + bias
+       CV      = sumx[m] * C[n] + C0[n]              (the MAC+ column == fused
+                                                      rank-1 epilogue)
+
+All integer arithmetic is exact int32; the AM semantics are bit-exact with
+the scalar hardware definitions in :mod:`repro.core.multipliers` (asserted
+against `ref.py` in tests).  The approximate products are *decompositions
+into exact integer matmuls* so the MXU runs at full rate:
+
+    perforated: dot(A & ~mask, W)
+    recursive : dot(A, W) - dot(A & mask, W & mask)
+    truncated : dot(A, W) - sum_{i<m} dot(bit_i(A) << i, W mod 2^{m-i})
+
+Grid: (M/bm, N/bn, K/bk) with the K axis innermost ("arbitrary" semantics);
+accumulators live in VMEM scratch across K steps; the epilogue fires on the
+final K step.  Block shapes default to MXU-aligned (128, 128, 512).
+
+TPU is the *target*; CPU validation uses interpret=True (set by ops.py when
+no TPU is present).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.multipliers import Mode
+
+# MXU-aligned defaults: int8-friendly tiles, K deep enough to amortize the
+# epilogue; A tile (128x512) + W tile (512x128) + int32 acc (128x128) stay
+# well under VMEM with double buffering.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _dot_i32(a, b):
+    """Exact int32 matmul of int32-valued tiles (int8-rate on the MXU)."""
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _am_tile_acc(a_i32, w_i32, mode: Mode, m: int):
+    """sum_k AM(w, a) for one (bm, bk) x (bk, bn) tile — bit-slice algebra."""
+    if mode == "exact" or m == 0:
+        return _dot_i32(a_i32, w_i32)
+    mask = (1 << m) - 1
+    if mode == "perforated":
+        return _dot_i32(a_i32 - (a_i32 & mask), w_i32)
+    if mode == "recursive":
+        return _dot_i32(a_i32, w_i32) - _dot_i32(a_i32 & mask, w_i32 & mask)
+    if mode == "truncated":
+        acc = _dot_i32(a_i32, w_i32)
+        for i in range(m):
+            plane_a = ((a_i32 >> i) & 1) << i
+            plane_w = w_i32 & ((1 << (m - i)) - 1)
+            acc = acc - _dot_i32(plane_a, plane_w)
+        return acc
+    raise ValueError(f"unknown mode {mode}")
+
+
+def _x_tile(a_i32, mode: Mode, m: int):
+    """x(A) per element for one tile (the MAC* statistic)."""
+    mask = (1 << m) - 1
+    if mode in ("perforated", "recursive"):
+        return a_i32 & mask
+    if mode == "truncated":
+        return ((a_i32 & mask) != 0).astype(jnp.int32)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def _kernel(
+    # inputs
+    a_ref,  # (bm, bk) uint8 codes
+    w_ref,  # (bk, bn) uint8 codes
+    c_ref,  # (1, bn) f32   CV constant C
+    c0_ref,  # (1, bn) f32  CV constant C0
+    sum_qw_ref,  # (1, bn) i32  column sums of W codes
+    bias_ref,  # (1, bn) f32
+    meta_ref,  # (1, 8) f32: [sa, sw, za, zw, true_k, 0, 0, 0]
+    # outputs
+    out_ref,  # (bm, bn) f32
+    # scratch
+    acc_ref,  # (bm, bn) i32
+    sumx_ref,  # (bm, 1) i32
+    sumqa_ref,  # (bm, 1) i32
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool,
+    nk: int,
+):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        sumx_ref[...] = jnp.zeros_like(sumx_ref)
+        sumqa_ref[...] = jnp.zeros_like(sumqa_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+
+    acc_ref[...] += _am_tile_acc(a, w, mode, m)
+    sumqa_ref[...] += jnp.sum(a, axis=1, dtype=jnp.int32, keepdims=True)
+    if use_cv and mode != "exact" and m > 0:
+        sumx_ref[...] += jnp.sum(
+            _x_tile(a, mode, m), axis=1, dtype=jnp.int32, keepdims=True
+        )
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        sa = meta_ref[0, 0]
+        sw = meta_ref[0, 1]
+        za = meta_ref[0, 2]
+        zw = meta_ref[0, 3]
+        true_k = meta_ref[0, 4]
+
+        out = acc_ref[...].astype(jnp.float32)
+        if use_cv and mode != "exact" and m > 0:
+            # the paper's MAC+ column: rank-1 update + bias-folded C0
+            out = out + sumx_ref[...].astype(jnp.float32) * c_ref[...]
+            out = out + c0_ref[...]
+        # exact gemmlowp zero-point corrections
+        out = out - zw * sumqa_ref[...].astype(jnp.float32)
+        out = out - za * sum_qw_ref[...].astype(jnp.float32)
+        out = out + true_k * za * zw
+        out = out * (sa * sw) + bias_ref[...]
+        out_ref[...] = out
+
+
+def _compiler_params(nk: int):
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "m", "use_cv", "bm", "bn", "bk", "interpret",
+    ),
+)
+def approx_matmul_cv(
+    a_q: jax.Array,  # (M, K) uint8 codes
+    w_q: jax.Array,  # (K, N) uint8 codes
+    c: jax.Array,  # (N,) f32
+    c0: jax.Array,  # (N,) f32
+    sum_qw: jax.Array,  # (N,) i32
+    bias: jax.Array,  # (N,) f32 (zeros if no bias)
+    sa: jax.Array,  # scalar f32 activation scale
+    sw: jax.Array,  # scalar f32 weight scale
+    za: jax.Array,  # scalar i32/f32 activation zero point
+    zw: jax.Array,  # scalar
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool = True,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused quantized approximate matmul; returns float32 (M, N).
+
+    Shapes must be pre-padded to block multiples (ops.py handles padding and
+    arbitrary leading batch dims).
+    """
+    mm, kk = a_q.shape
+    kk2, nn = w_q.shape
+    assert kk == kk2, (a_q.shape, w_q.shape)
+    assert mm % bm == 0 and nn % bn == 0 and kk % bk == 0, (
+        (mm, kk, nn), (bm, bk, bn),
+    )
+    nk = kk // bk
+    true_k = jnp.float32(kk)  # padding contributes zero codes; za==0 when padded
+
+    meta = jnp.zeros((1, 8), jnp.float32)
+    meta = meta.at[0, 0].set(jnp.float32(sa))
+    meta = meta.at[0, 1].set(jnp.float32(sw))
+    meta = meta.at[0, 2].set(jnp.float32(za))
+    meta = meta.at[0, 3].set(jnp.float32(zw))
+    meta = meta.at[0, 4].set(true_k)
+
+    kernel = functools.partial(_kernel, mode=mode, m=m, use_cv=use_cv, nk=nk)
+    grid = (mm // bm, nn // bn, nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 8), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+        ],
+        compiler_params=_compiler_params(nk),
+        interpret=interpret,
+    )(
+        a_q,
+        w_q,
+        c.reshape(1, nn).astype(jnp.float32),
+        c0.reshape(1, nn).astype(jnp.float32),
+        sum_qw.reshape(1, nn).astype(jnp.int32),
+        bias.reshape(1, nn).astype(jnp.float32),
+        meta,
+    )

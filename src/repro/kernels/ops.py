@@ -1,0 +1,152 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles: arbitrary leading batch dims, padding to block multiples, backend
+selection (real TPU vs interpret-mode CPU validation), and the bridge from
+the framework's packed-parameter representation (QuantizedDense) to raw
+kernel operands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multipliers import Mode
+from repro.kernels import approx_matmul as _amk
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_blocks(mm: int, kk: int, nn: int, bm: int, bn: int, bk: int):
+    """Shrink default blocks for small operands (keeps grid >= 1 per axis)."""
+
+    def shrink(size, block, floor):
+        while block > floor and size < block:
+            block //= 2
+        return max(block, floor)
+
+    return (
+        shrink(mm, bm, 8),
+        shrink(nn, bn, 128 if nn >= 128 else 8),
+        shrink(kk, bk, 128 if kk >= 128 else 8),
+    )
+
+
+def approx_matmul_cv_op(
+    a_q: jax.Array,  # (..., K) uint8 codes
+    w_q: jax.Array,  # (K, N) uint8 codes
+    c: jax.Array,
+    c0: jax.Array,
+    sum_qw: jax.Array,
+    bias: jax.Array | None,
+    sa,
+    sw,
+    za,
+    zw,
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool = True,
+    bm: int = _amk.DEFAULT_BM,
+    bn: int = _amk.DEFAULT_BN,
+    bk: int = _amk.DEFAULT_BK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused approx-matmul+CV over arbitrary leading dims; returns f32 (..., N)."""
+    if interpret is None:
+        interpret = not on_tpu()
+
+    lead = a_q.shape[:-1]
+    kk = a_q.shape[-1]
+    nn = w_q.shape[-1]
+    a2 = a_q.reshape(-1, kk)
+    mm = a2.shape[0]
+
+    bm_, bn_, bk_ = _pick_blocks(mm, kk, nn, bm, bn, bk)
+    a2 = _pad_to(_pad_to(a2, 0, bm_), 1, bk_)
+    w2 = _pad_to(_pad_to(w_q, 0, bk_), 1, bn_)
+
+    # NOTE on K padding: padded activation codes are 0, padded weight codes
+    # are 0 — every AM is 0 on zero codes and x(0) = 0, so acc/sumx are
+    # unaffected; sum_qa/sum_qw likewise.  The only k-sensitive term is
+    # k*za*zw, for which the kernel receives the PADDED k and we compensate
+    # here by folding (k_pad - k_true)*za*zw out of the result.
+    k_pad = a2.shape[1]
+    pad_terms = jnp.float32(k_pad - kk) * jnp.float32(za) * jnp.float32(zw)
+
+    cN = _pad_to(jnp.asarray(c, jnp.float32), 0, bn_)
+    c0N = _pad_to(jnp.asarray(c0, jnp.float32), 0, bn_)
+    sqwN = _pad_to(jnp.asarray(sum_qw, jnp.int32), 0, bn_)
+    biasN = (
+        _pad_to(jnp.asarray(bias, jnp.float32), 0, bn_)
+        if bias is not None
+        else jnp.zeros((w2.shape[1],), jnp.float32)
+    )
+
+    out = _amk.approx_matmul_cv(
+        a2,
+        w2,
+        cN,
+        c0N,
+        sqwN,
+        biasN,
+        jnp.float32(sa),
+        jnp.float32(sw),
+        jnp.float32(za),
+        jnp.float32(zw),
+        mode=mode,
+        m=m,
+        use_cv=use_cv,
+        bm=bm_,
+        bn=bn_,
+        bk=bk_,
+        interpret=interpret,
+    )
+    out = out - pad_terms * (jnp.float32(sa) * jnp.float32(sw))
+    return out[:mm, :nn].reshape(*lead, nn)
+
+
+def quantized_dense_pallas(x: jax.Array, qd) -> jax.Array:
+    """Bridge: QuantizedDense params + float activations -> fused kernel."""
+    from repro.quant.quantize import quantize
+
+    pol = qd.policy
+    if pol.groups != 1:
+        raise NotImplementedError(
+            "grouped CV uses the jnp path (set backend='jnp' for groups > 1)"
+        )
+    a_q = quantize(x, qd.a_qp)
+    pack = qd.pack
+    bias = pack.bias
+    return approx_matmul_cv_op(
+        a_q,
+        pack.w_q,
+        pack.c,
+        pack.c0,
+        pack.sum_qw,
+        bias,
+        qd.a_qp.scale,
+        pack.w_scale,
+        qd.a_qp.zero_point,
+        pack.w_zp,
+        mode=pol.mode,
+        m=pol.m,
+        use_cv=pol.use_cv,
+    )

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *scalar hardware definitions* — elementwise approximate
+products summed explicitly — deliberately the slowest, most obviously-correct
+form.  Kernel tests sweep shapes/modes and assert bit-exact (integer paths)
+or allclose (float epilogue) agreement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import multipliers as am
+from repro.core import control_variate as cvlib
+from repro.core.multipliers import Mode
+
+
+def approx_matmul_cv_ref(
+    a_q,
+    w_q,
+    c,
+    c0,
+    sum_qw,
+    bias,
+    sa,
+    sw,
+    za,
+    zw,
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool = True,
+) -> jax.Array:
+    """Oracle for kernels.approx_matmul.approx_matmul_cv.
+
+    a_q: (M, K) uint8 codes; w_q: (K, N) uint8 codes.  O(M*K*N) memory —
+    test shapes only.
+    """
+    a_i = jnp.asarray(a_q, jnp.int32)
+    w_i = jnp.asarray(w_q, jnp.int32)
+    kk = a_i.shape[-1]
+
+    acc = am.approx_matmul_ref(a_i, w_i, mode, m).astype(jnp.float32)
+    if use_cv and mode != "exact" and m > 0:
+        sumx = cvlib.sum_x(a_i, mode, m, axis=-1).astype(jnp.float32)
+        acc = acc + sumx[:, None] * jnp.asarray(c, jnp.float32)[None, :]
+        acc = acc + jnp.asarray(c0, jnp.float32)[None, :]
+
+    sum_qa = jnp.sum(a_i, axis=-1, dtype=jnp.int32).astype(jnp.float32)
+    acc = acc - jnp.float32(zw) * sum_qa[:, None]
+    acc = acc - jnp.float32(za) * jnp.asarray(sum_qw, jnp.float32)[None, :]
+    acc = acc + jnp.float32(kk) * jnp.float32(za) * jnp.float32(zw)
+    return acc * (jnp.float32(sa) * jnp.float32(sw)) + jnp.asarray(
+        bias, jnp.float32
+    )[None, :]
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state0):
+    """Oracle for kernels.rwkv6_scan: sequential RWKV6 WKV recurrence.
+
+    Shapes (B, T, H, Dk) for r/k/w, (B, T, H, Dv) for v, u: (H, Dk),
+    state0: (B, H, Dk, Dv).  Returns (out (B, T, H, Dv), stateT).
+
+        out_t   = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+        S_t     = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    b, t, h, dk = r.shape
+    dv = v.shape[-1]
+
+    def step(state, inputs):
+        r_t, k_t, v_t, w_t = inputs  # (B, H, Dk), ..., (B, H, Dv), (B, H, Dk)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, Dk, Dv)
+        att = state + u[None, :, :, None] * kv  # (B, H, Dk, Dv)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        new_state = w_t[..., :, None] * state + kv
+        return new_state, out
+
+    xs = (
+        jnp.moveaxis(r, 1, 0),
+        jnp.moveaxis(k, 1, 0),
+        jnp.moveaxis(v, 1, 0),
+        jnp.moveaxis(w, 1, 0),
+    )
+    stateT, out = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(out, 0, 1), stateT
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, window: int | None = None,
+                        scale: float | None = None):
+    """Oracle for kernels.flash_attention: plain softmax attention.
+
+    q: (B, Hq, Tq, D), k/v: (B, Hkv, Tk, D); GQA by head-group broadcast.
+    window (if set) = sliding-window size (causal only).
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if scale is None:
+        scale = d**-0.5
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    tk = k.shape[2]
+    qi = jnp.arange(tq)[:, None] + (tk - tq)  # align ends (decode-friendly)
+    ki = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

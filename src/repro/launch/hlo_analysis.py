@@ -1,0 +1,428 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: `compiled.cost_analysis()` counts each while-loop BODY
+exactly once, but our models deliberately emit layer stacks / q-chunks /
+loss-chunks as `lax.scan` (compile-time compactness at 95 layers) — so the
+built-in numbers under-count a 36-layer model by ~36x, and collectives
+inside FSDP scan bodies vanish from the totals.  This module parses the
+optimized HLO, resolves the computation call graph (while bodies x inferred
+trip count, fusion/call bodies x 1 per call site), and aggregates:
+
+  flops            dots: 2 * prod(result dims) * prod(contracting dims)
+                   (batch dims included via the result shape); elementwise
+                   ops: 1 flop/element; data-movement ops: 0.
+  bytes            operands + results of ops at computation level, where
+                   fusion internals count ZERO (the fusion op's own
+                   operands/results are the post-fusion traffic) — a closer
+                   HBM model than the built-in sum-over-all-ops.
+  collective bytes all-reduce / all-gather / reduce-scatter / all-to-all /
+                   collective-permute result bytes, x multiplicity.
+
+Trip counts come from the while condition (compare(iv, constant(N)) with
+LT/GT direction, jax's canonical scan lowering); a condition we cannot
+parse contributes multiplicity 1 and is flagged in the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+
+_DATA_MOVEMENT = {
+    "parameter", "constant", "iota", "tuple", "get-tuple-element", "bitcast",
+    "copy", "reshape", "transpose", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "reverse", "pad", "gather",
+    "scatter", "convert", "after-all", "custom-call", "copy-start",
+    "copy-done", "rng-bit-generator", "partition-id", "replica-id",
+    "optimization-barrier", "infeed", "outfeed",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_CALL_ATTRS = ("calls", "body", "condition", "to_apply", "branch_computations",
+               "true_computation", "false_computation")
+
+
+def _shape_elems_bytes(txt: str):
+    elems, byts = 0, 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opname: str
+    line: str
+    result_txt: str
+    operand_txt: str
+    callees: list  # (attr, computation_name)
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+
+
+_OP_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+# computation headers start at column 0: "%name (params) -> type {" / "ENTRY ..."
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALLEE_RE = re.compile(
+    r"\b(calls|body|condition|to_apply|true_computation|false_computation)=%?([\w.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_CFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_computations(text: str):
+    comps: dict[str, _Computation] = {}
+    entry = None
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if line and not line[0].isspace():
+            hdr = _COMP_HDR.match(line)
+            if hdr and "=" not in line.split("->")[0].split("(")[0]:
+                cur = _Computation(hdr.group(2), [])
+                comps[cur.name] = cur
+                if hdr.group(1):
+                    entry = cur.name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, name, result_txt, opname = m.groups()
+        paren = line.find(opname + "(") + len(opname)
+        # operands run to the matching close paren; attributes follow after
+        depth, i = 0, paren
+        while i < len(line):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        operand_txt = line[paren : i + 1]
+        attr_txt = line[i + 1 :]
+        callees = [(a, c) for a, c in _CALLEE_RE.findall(attr_txt)]
+        bm = _BRANCHES_RE.search(attr_txt)
+        if bm:
+            for c in bm.group(1).split(","):
+                callees.append(("branch", c.strip().lstrip("%")))
+        cur.ops.append(_Op(name, opname, line, result_txt, operand_txt, callees))
+    return comps, entry
+
+
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+_CMP_DIR_RE = re.compile(r"direction=(LT|GT|LE|GE|NE)")
+
+
+def _trip_count(comps, cond_name: str) -> int | None:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return None
+    consts = []
+    direction = None
+    for op in cond.ops:
+        if op.opname == "constant":
+            m = _TRIP_RE.search(op.line)
+            if m:
+                consts.append(int(m.group(1)))
+        if op.opname == "compare":
+            d = _CMP_DIR_RE.search(op.line)
+            if d:
+                direction = d.group(1)
+            m2 = _TRIP_RE.findall(op.line)
+            if m2:
+                consts.extend(int(x) for x in m2)
+    if direction in ("LT", "GT", "NE") and consts:
+        return max(consts)
+    if consts:
+        return max(consts)
+    return None
+
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_shapes(op: _Op, symtab: dict[str, str]) -> list[str]:
+    """Shape texts of an op's operands via the module symbol table (operand
+    references in optimized HLO carry no inline shapes)."""
+    out = []
+    for name in _OPERAND_NAME_RE.findall(op.operand_txt):
+        txt = symtab.get(name)
+        if txt is not None:
+            out.append(txt)
+    return out
+
+
+def _dot_flops(op: _Op, symtab: dict[str, str]) -> float:
+    res_elems, _ = _shape_elems_bytes(op.result_txt)
+    opshapes = _operand_shapes(op, symtab)
+    if not opshapes:
+        return 2.0 * res_elems  # unknown K: count as elementwise-ish
+    lhs_matches = _SHAPE_RE.findall(opshapes[0])
+    if not lhs_matches:
+        return 2.0 * res_elems
+    lhs = [int(d) for d in lhs_matches[0][1].split(",")] if lhs_matches[0][1] else []
+    m = _DOT_CONTRACT_RE.search(op.line)
+    k = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(lhs):
+                k *= lhs[di]
+    return 2.0 * res_elems * k
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collectives: dict
+    collective_counts: dict
+    unknown_trip_counts: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_hlo(text: str, debug_top: int = 0) -> HLOCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        # fall back: treat the largest computation as entry
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else None
+
+    # symbol tables: HLO names are unique PER COMPUTATION (param_0.X etc.
+    # repeat across fusions), so operand resolution must be local-first.
+    local_symtab: dict[str, dict[str, str]] = {
+        name: {op.name: op.result_txt for op in comp.ops}
+        for name, comp in comps.items()
+    }
+
+    # resolve multiplicities from ENTRY
+    mult: dict[str, float] = defaultdict(float)
+    unknown = [0]
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for op in comp.ops:
+            body = dict(op.callees)
+            if op.opname == "while":
+                # prefer XLA's own annotation on the while line
+                cfg = _TRIP_CFG_RE.search(op.line)
+                trip = int(cfg.group(1)) if cfg else None
+                if trip is None and "condition" in body:
+                    trip = _trip_count(comps, body["condition"])
+                if trip is None:
+                    trip = 1
+                    unknown[0] += 1
+                if "body" in body:
+                    visit(body["body"], m * trip)
+                if "condition" in body:
+                    visit(body["condition"], m * (trip + 1))
+            else:
+                for attr, callee in op.callees:
+                    visit(callee, m)
+
+    if entry:
+        visit(entry, 1.0)
+
+    flops = 0.0
+    byts = 0.0
+    coll_b: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_n: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opname == "fusion":
+                for attr, callee in op.callees:
+                    if attr == "calls":
+                        fusion_bodies.add(callee)
+
+    # per fusion body: largest internal dynamic-slice result (when a fusion
+    # receives a full scan-stacked buffer + index, it only READS the slice)
+    ds_max: dict[str, int] = {}
+    for cname in fusion_bodies:
+        body = comps.get(cname)
+        if body is None:
+            continue
+        best = 0
+        for op in body.ops:
+            if op.opname == "dynamic-slice":
+                _, b = _shape_elems_bytes(op.result_txt)
+                best = max(best, b)
+        ds_max[cname] = best
+
+    debug_rows: list = []
+
+    def _note(b, m, op, cname):
+        if debug_top:
+            debug_rows.append((b, m, op.opname, op.name, cname))
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = name in fusion_bodies
+        symtab = local_symtab[name]
+        for op in comp.ops:
+            kind = None
+            for k in _COLLECTIVES:
+                if op.opname == k or op.opname.startswith(k + "-") or op.opname.startswith(k + "."):
+                    kind = k
+                    break
+            if kind:
+                _, rb = _shape_elems_bytes(op.result_txt)
+                coll_b[kind] += m * rb
+                coll_n[kind] += m
+                _b_ = m * rb * 2
+                byts += _b_
+                _note(_b_, m, op, name)
+                continue
+            if op.opname == "dot":
+                flops += m * _dot_flops(op, symtab)
+                if not in_fusion:
+                    _, rb = _shape_elems_bytes(op.result_txt)
+                    ob = sum(_shape_elems_bytes(s)[1] for s in _operand_shapes(op, symtab))
+                    _b_ = m * (rb + ob)
+                    byts += _b_
+                    _note(_b_, m, op, name)
+                continue
+            if op.opname == "convolution":
+                # rough: 2 * result_elems * (kernel elems) — kernel is operand 2
+                res_e, _ = _shape_elems_bytes(op.result_txt)
+                opshapes = _operand_shapes(op, symtab)
+                k_e = 1
+                if len(opshapes) > 1:
+                    km = _SHAPE_RE.findall(opshapes[1])
+                    if km and km[0][1]:
+                        for d in km[0][1].split(","):
+                            k_e *= int(d)
+                flops += m * 2.0 * res_e * k_e
+                if not in_fusion:
+                    _, rb = _shape_elems_bytes(op.result_txt)
+                    ob = sum(_shape_elems_bytes(s)[1] for s in _operand_shapes(op, symtab))
+                    _b_ = m * (rb + ob)
+                    byts += _b_
+                    _note(_b_, m, op, name)
+                continue
+            if op.opname in ("while", "call", "conditional"):
+                continue  # callee costs attributed via multiplicity
+            if op.opname == "fusion":
+                # fusion boundary = the real traffic, with in-place / output-
+                # driven semantics:
+                #   * dynamic-update-slice fusions write only the slice (the
+                #     aliased full-size buffer is not re-read);
+                #   * reduce-like fusions read operands in full;
+                #   * loop (elementwise/slice/copy) fusions read at most
+                #     result-size bytes per operand — a full stacked scan
+                #     buffer passed in is only sliced, not streamed.
+                _, rb = _shape_elems_bytes(op.result_txt)
+                opb = [_shape_elems_bytes(s)[1] for s in _operand_shapes(op, symtab)]
+                ob = sum(opb)
+                tokens = set(re.split(r"[._\-]", op.name))
+                body_name = dict(op.callees).get("calls", "")
+                internal_ds = ds_max.get(body_name, 0)
+                if "dynamic-update-slice" in op.name:
+                    small = ob - (max(opb) if opb else 0)
+                    _b_ = m * 2 * small
+                    byts += _b_
+                    _note(_b_, m, op, name)
+                elif "dynamic-slice" in op.name:
+                    _b_ = m * 2 * rb
+                    byts += _b_
+                    _note(_b_, m, op, name)
+                elif tokens & {"reduce", "dot", "convolution", "window"}:
+                    if internal_ds:
+                        cap = max(rb, internal_ds)
+                        _b_ = m * (rb + sum(min(b, cap) for b in opb))
+                        byts += _b_
+                        _note(_b_, m, op, name)
+                    else:
+                        _b_ = m * (rb + ob)  # true full-operand reads
+                        byts += _b_
+                        _note(_b_, m, op, name)
+                else:
+                    cap = max(rb, internal_ds)
+                    _b_ = m * (rb + sum(min(b, cap) for b in opb))
+                    byts += _b_
+                    _note(_b_, m, op, name)
+                # flops of internal dots are counted inside the body (dots
+                # keep flop accounting even inside fusions); elementwise
+                # internals approximated by result elements:
+                res_e, _ = _shape_elems_bytes(op.result_txt)
+                flops += m * res_e
+                continue
+            if op.opname in _DATA_MOVEMENT:
+                if not in_fusion:
+                    _, rb = _shape_elems_bytes(op.result_txt)
+                    if op.opname == "dynamic-update-slice":
+                        opb = [_shape_elems_bytes(s)[1]
+                               for s in _operand_shapes(op, symtab)]
+                        _b_ = m * 2 * (sum(opb) - (max(opb) if opb else 0))
+                        byts += _b_
+                        _note(_b_, m, op, name)
+                    elif op.opname in ("dynamic-slice", "slice", "gather"):
+                        _b_ = m * rb * 2
+                        byts += _b_
+                        _note(_b_, m, op, name)
+                    elif op.opname in ("scatter", "concatenate", "copy",
+                                       "transpose", "reshape", "pad"):
+                        _b_ = m * rb * 2
+                        byts += _b_
+                        _note(_b_, m, op, name)
+                continue
+            # generic elementwise / reduce
+            res_e, rb = _shape_elems_bytes(op.result_txt)
+            flops += m * res_e
+            if not in_fusion:
+                ob = sum(_shape_elems_bytes(s)[1] for s in _operand_shapes(op, symtab))
+                _b_ = m * (rb + ob)
+                byts += _b_
+                _note(_b_, m, op, name)
+
+    if debug_top:
+        debug_rows.sort(reverse=True)
+        for b, m, opname, oname, cname in debug_rows[:debug_top]:
+            print(f"  {b:.2e}  m={m:5.0f}  {opname:10s} {oname[:48]:48s} in {cname[:40]}")
+
+    return HLOCost(
+        flops=flops,
+        bytes_accessed=byts,
+        collective_bytes=sum(coll_b.values()),
+        collectives=coll_b,
+        collective_counts=coll_n,
+        unknown_trip_counts=unknown[0],
+    )

@@ -1,0 +1,196 @@
+"""Training driver: step builder (loss + grad + AdamW, sharded) and a CLI
+that trains a reduced model on the synthetic stream with the full
+fault-tolerance stack (checkpoint/restart, straggler monitor, heartbeat).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b-reduced \
+        --steps 50 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+from repro.optim.grad_compress import compress_decompress, compressor_init
+from repro.parallel import batch_shardings, param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    base_lr: float = 3e-4
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    grad_compress: bool = False  # int8 error-feedback DP gradients
+    fsdp: bool = False
+    microbatches: int = 1  # gradient accumulation (activation-memory lever)
+
+
+def cast_params(params: Any, dtype_name: str, shardings: Any = None) -> Any:
+    """Mixed precision: f32 master weights -> compute-dtype copies at use.
+    Differentiating through the cast routes grads back to the f32 masters.
+
+    When ``shardings`` (the FSDP sharding tree) is given, the bf16 copy is
+    constrained to the SAME sharding as the master — forcing XLA to convert
+    BEFORE the FSDP all-gather, so weight gathers move bf16, not f32 (halves
+    the per-microbatch re-gather bytes; EXPERIMENTS.md §Perf)."""
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[dtype_name]
+
+    def leaf(p, sh=None):
+        if hasattr(p, "dtype") and p.dtype == jnp.float32:
+            c = p.astype(dt)
+            if sh is not None:
+                c = jax.lax.with_sharding_constraint(c, sh)
+            return c
+        return p
+
+    if shardings is None:
+        return jax.tree.map(leaf, params)
+    return jax.tree.map(leaf, params, shardings)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig, mesh=None,
+                    param_sh: Any = None):
+    """Returns step(state, batch) -> (state, metrics).  state = dict(params,
+    opt, [ef]).  Pure; jit/shard outside.  ``param_sh``: optional parameter
+    sharding tree enabling convert-before-gather mixed precision."""
+    api = build_model(cfg)
+    lr_fn = warmup_cosine(tcfg.base_lr, tcfg.warmup_steps, tcfg.total_steps)
+
+    def loss_fn(params, batch):
+        return api.train_loss(
+            cast_params(params, cfg.compute_dtype, param_sh),
+            batch, mesh=mesh)
+
+    def step(state, batch):
+        params = state["params"]
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            batches = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_fn(carry, mbatch):
+                loss_sum, gacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_sum + l, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), zero), batches)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if tcfg.grad_compress:
+            grads, ef = compress_decompress(grads, state["ef"])
+        lr = lr_fn(state["opt"]["step"])
+        new_params, new_opt = adamw_update(params, grads, state["opt"],
+                                           tcfg.optimizer, lr)
+        new_state = {"params": new_params, "opt": new_opt}
+        if tcfg.grad_compress:
+            new_state["ef"] = ef
+        return new_state, {"loss": loss, "lr": lr}
+
+    return step
+
+
+def init_train_state(cfg: ArchConfig, tcfg: TrainConfig, key) -> dict:
+    api = build_model(cfg)
+    params = api.init(key)
+    state = {"params": params, "opt": adamw_init(params, tcfg.optimizer)}
+    if tcfg.grad_compress:
+        state["ef"] = compressor_init(params)
+    return state
+
+
+def train_state_shardings(cfg: ArchConfig, tcfg: TrainConfig, mesh,
+                          dp_only: bool = False):
+    """Sharding tree matching init_train_state's structure (via eval_shape)."""
+    abstract = jax.eval_shape(
+        lambda: init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    )
+    p_sh = param_shardings(abstract["params"], mesh, cfg, fsdp=tcfg.fsdp,
+                           dp_only=dp_only)
+    out = {"params": p_sh,
+           "opt": {"m": p_sh, "v": p_sh,
+                   "step": jax.sharding.NamedSharding(
+                       mesh, jax.sharding.PartitionSpec())}}
+    if tcfg.grad_compress:
+        out["ef"] = p_sh
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI driver (CPU-scale; the full-scale path is exercised by the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b-reduced")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.checkpoint import CheckpointManager
+    from repro.data import SyntheticLMConfig, ShardedLoader
+    from repro.data.synthetic import lm_batch
+    from repro.runtime import StragglerMonitor, run_resilient, RetryPolicy
+
+    cfg = get_config(args.arch)
+    tcfg = TrainConfig(base_lr=args.lr, total_steps=args.steps,
+                       grad_compress=args.grad_compress)
+    dcfg = SyntheticLMConfig(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    monitor = StragglerMonitor()
+    manager = CheckpointManager(args.ckpt_dir)
+    loader = ShardedLoader(lambda s, sh, ns: lm_batch(dcfg, s, sh, ns))
+    losses: list[float] = []
+
+    def wrapped(state, batch, step):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % 10 == 0:
+            print(f"step {step:5d}  loss {losses[-1]:.4f}")
+        return state
+
+    t0 = time.time()
+    run_resilient(
+        init_state=lambda: init_train_state(cfg, tcfg, jax.random.PRNGKey(0)),
+        step_fn=wrapped,
+        loader=loader,
+        manager=manager,
+        total_steps=args.steps,
+        policy=RetryPolicy(checkpoint_every=args.ckpt_every),
+        monitor=monitor,
+    )
+    loader.close()
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"stragglers={len(monitor.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: generic transformer LM (dense/MoE/MLA/hybrid/VLM/audio) and
+RWKV6, built from ArchConfig; registry maps arch ids to a uniform ModelApi."""
+
+from repro.models.registry import ModelApi, build_model
+
+__all__ = ["ModelApi", "build_model"]

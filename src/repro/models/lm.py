@@ -1,0 +1,566 @@
+"""Generic transformer LM covering 9 of the 10 assigned architectures.
+
+ArchConfig switches select: GQA vs MLA attention, swiglu/gelu/MoE MLP,
+parallel SSM heads (hymba), qk-norm, sliding windows, RoPE/M-RoPE/none,
+causal vs bidirectional (hubert), token vs embedding inputs (vlm/audio).
+
+Scale-critical implementation choices (these are what make the 512-chip
+dry-run lower/compile):
+
+  * layer stacks are SCANNED: block params are stacked (L, ...) pytrees and
+    the forward is one `lax.scan` — HLO size is O(1) in depth (95-layer
+    deepseek-67b compiles like a 1-layer model);
+  * attention is Q-CHUNKED for long sequences: a scan over query chunks
+    bounds the live (chunk, S) score tile instead of materializing the
+    (T, S) matrix (32k prefill would otherwise allocate TBs);
+  * the LM head + cross-entropy are FUSED AND CHUNKED: logits for a 152k
+    vocab are never materialized for the full sequence;
+  * prefill is SINGLE-PASS: each block projects K/V once and shares them
+    between attention and the decode-cache capture;
+  * sliding-window decode uses RING-BUFFER caches of length W (slot of
+    absolute position a is a mod W), making long_500k hymba decode state
+    O(W), not O(S);
+  * remat policy per config ("none" | "full" | "dots") wraps the scanned
+    block body.
+
+Caches are plain pytrees stacked over layers, so `lax.scan` slices them per
+layer during decode and pjit shards them like any other state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.approx_linear import dense
+from repro.nn import attention as attn_lib
+from repro.nn import moe as moe_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn.layers import (
+    apply_norm,
+    embed,
+    init_embedding,
+    init_gelu_mlp,
+    init_norm,
+    init_rmsnorm,
+    init_swiglu,
+    gelu_mlp,
+    rmsnorm,
+    swiglu,
+)
+from repro.quant import observers
+
+Params = Any
+
+Q_CHUNK = 1024  # live attention score tile: (B, H, Q_CHUNK, S)
+LOSS_CHUNK = 512  # live logits tile: (B, LOSS_CHUNK, V)
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {
+        "attn_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.attn == "mla":
+        p["attn"] = attn_lib.init_mla(ks[0], cfg.mla_config(), dtype)
+    elif cfg.attn == "gqa":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg.attn_config(), dtype)
+    if cfg.parallel_ssm:
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg.ssm_config(), dtype)
+        p["attn_out_norm"] = init_rmsnorm(cfg.d_model, dtype)
+        p["ssm_out_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if cfg.mlp == "moe":
+        p["mlp"] = moe_lib.init_moe(ks[2], cfg.moe_config(), dtype)
+    elif cfg.mlp == "swiglu":
+        p["mlp"] = init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = _dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head, k_dense = jax.random.split(key, 4)
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    block_keys = jax.random.split(k_blocks, n_scan)
+    p: dict = {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(block_keys),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.first_dense_layers:
+        dense_cfg = dataclasses.replace(cfg, mlp="swiglu")
+        p["dense_blocks"] = [
+            _init_block(k, dense_cfg, dtype)
+            for k in jax.random.split(k_dense, cfg.first_dense_layers)
+        ]
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {
+            "w": (
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) * cfg.d_model**-0.5
+            ).astype(dtype)
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention (full-sequence, q-chunked), with optional cache capture
+# ---------------------------------------------------------------------------
+
+
+def _gqa_full(bp, h, cfg: ArchConfig, positions, want_cache: bool):
+    acfg = cfg.attn_config()
+    b, t, _ = h.shape
+    angles = attn_lib._angles(acfg, positions)
+    q, k, v = attn_lib._project_qkv(bp, h, acfg, angles)
+    if t <= Q_CHUNK:
+        ctx = attn_lib._sdpa(q, k, v, causal=acfg.causal, window=acfg.window)
+    else:
+        assert t % Q_CHUNK == 0, (t, Q_CHUNK)
+        nch = t // Q_CHUNK
+
+        def chunk_fn(_, inp):
+            qc, i = inp
+            return None, attn_lib._sdpa(
+                qc, k, v,
+                causal=acfg.causal,
+                window=acfg.window,
+                kv_valid_len=(i + 1) * Q_CHUNK if acfg.causal else None,
+            )
+
+        qch = jnp.moveaxis(q.reshape(b, nch, Q_CHUNK, acfg.n_heads, acfg.head_dim), 1, 0)
+        _, ctx = jax.lax.scan(chunk_fn, None, (qch, jnp.arange(nch)))
+        ctx = jnp.moveaxis(ctx, 0, 1).reshape(b, t, acfg.n_heads, acfg.head_dim)
+    out = dense(bp["o"], ctx.reshape(b, t, acfg.q_dim), name="o")
+    entry = None
+    if want_cache:
+        entry = {"k": jnp.moveaxis(k, 1, 2), "v": jnp.moveaxis(v, 1, 2)}  # (B,H,T,d)
+    return out, entry
+
+
+def _mla_full(bp, h, cfg: ArchConfig, positions, want_cache: bool):
+    mcfg = cfg.mla_config()
+    b, t, _ = h.shape
+    q_nope, q_rope = attn_lib._mla_q(bp, h, mcfg, positions)
+    latent, k_rope = attn_lib._mla_latent(bp, h, mcfg, positions)
+    kv = dense(bp["kv_b"], latent, name="kv_b").reshape(
+        b, t, mcfg.n_heads, mcfg.qk_nope_dim + mcfg.v_head_dim
+    )
+    k_nope, v = kv[..., : mcfg.qk_nope_dim], kv[..., mcfg.qk_nope_dim :]
+    scale = mcfg.qk_head_dim**-0.5
+
+    def score_chunk(qn, qr, q_off):
+        logits = (
+            jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope)
+            + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope)
+        ) * scale
+        qpos = q_off + jnp.arange(qn.shape[1])[:, None]
+        mask = jnp.arange(t)[None, :] <= qpos
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(h.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if t <= Q_CHUNK:
+        ctx = score_chunk(q_nope, q_rope, 0)
+    else:
+        assert t % Q_CHUNK == 0
+        nch = t // Q_CHUNK
+
+        def chunks(a):
+            return jnp.moveaxis(a.reshape(b, nch, Q_CHUNK, *a.shape[2:]), 1, 0)
+
+        _, ctx = jax.lax.scan(
+            lambda _, inp: (None, score_chunk(inp[0], inp[1], inp[2] * Q_CHUNK)),
+            None,
+            (chunks(q_nope), chunks(q_rope), jnp.arange(nch)),
+        )
+        ctx = jnp.moveaxis(ctx, 0, 1)
+    out = dense(bp["o"], ctx.reshape(b, t, -1), name="o")
+    entry = {"latent": latent, "rope": k_rope} if want_cache else None
+    return out, entry
+
+
+# ---------------------------------------------------------------------------
+# block forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_forward(bp: dict, x, cfg: ArchConfig, positions, mesh,
+                   want_cache: bool = False):
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    h = apply_norm(cfg.norm, bp["attn_norm"], x)
+    entry: dict = {}
+    if cfg.attn == "mla":
+        a, e = _mla_full(bp["attn"], h, cfg, positions, want_cache)
+    elif cfg.attn == "gqa":
+        a, e = _gqa_full(bp["attn"], h, cfg, positions, want_cache)
+    else:
+        a, e = 0.0, None
+    if e:
+        entry.update(e)
+    if cfg.parallel_ssm:
+        if want_cache:
+            s, st = _ssm_with_state(bp["ssm"], h, cfg.ssm_config())
+            entry["ssm_conv"], entry["ssm_h"] = st["conv"], st["h"]
+        else:
+            s = ssm_lib.ssm_prefill(bp["ssm"], h, cfg.ssm_config())
+        a = 0.5 * (rmsnorm(bp["attn_out_norm"], a.astype(x.dtype)) +
+                   rmsnorm(bp["ssm_out_norm"], s.astype(x.dtype)))
+    x = (x + a).astype(x.dtype)
+
+    h = apply_norm(cfg.norm, bp["mlp_norm"], x)
+    if cfg.mlp == "moe" and "router" in bp["mlp"]:
+        m = moe_lib.moe_apply(bp["mlp"], h, cfg.moe_config(), mesh=mesh)
+    elif cfg.mlp == "gelu":
+        m = gelu_mlp(bp["mlp"], h)
+    else:
+        m = swiglu(bp["mlp"], h)
+    return (x + m).astype(x.dtype), entry
+
+
+def _sp_constrain(x: jax.Array, cfg: ArchConfig, mesh):
+    """Sequence-parallel residual stream: (B, T, D) sharded
+    (batch over DP axes, T over "model") at block boundaries."""
+    if not cfg.sequence_parallel or mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+    t = x.shape[1]
+    if t % mesh.shape["model"] != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, "model", None)))
+
+
+def _sp_gather(x: jax.Array, cfg: ArchConfig, mesh):
+    """The Megatron-SP all-gather point: sequence re-assembled, ready for
+    the TP-sharded projections.  Pinning this explicitly stops GSPMD from
+    emitting redundant reshard ping-pong inside the block (measured 3.6k
+    all-reduces/step -> see EXPERIMENTS.md §Perf iteration 5)."""
+    if not cfg.sequence_parallel or mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, None)))
+
+
+def _remat_wrap(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+
+
+def backbone(params: Params, x: jax.Array, cfg: ArchConfig, positions=None,
+             mesh=None) -> jax.Array:
+    """Embedded input -> final-norm output (training / forward path)."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    for i, bp in enumerate(params.get("dense_blocks", [])):
+        with observers.scope("dense_blocks", i):
+            x, _ = _block_forward(bp, x, cfg, positions, mesh)
+
+    body = _remat_wrap(
+        lambda carry, bp: (
+            _sp_constrain(
+                _block_forward(bp, _sp_constrain(carry, cfg, mesh), cfg,
+                               positions, mesh)[0],
+                cfg, mesh),
+            None,
+        ),
+        cfg,
+    )
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        n = jax.tree.leaves(params["blocks"])[0].shape[0]
+        for i in range(n):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            with observers.scope("blocks", i):
+                x, _ = body(x, bp)
+    return apply_norm(cfg.norm, params["final_norm"], x)
+
+
+def _embed_input(params, batch: dict, cfg: ArchConfig):
+    if "embeds" in batch:
+        return batch["embeds"]
+    return embed(params["embed"], batch["tokens"])
+
+
+def _head_w(params):
+    head = params.get("lm_head", params["embed"])
+    return head["table"].T if "table" in head else head["w"]
+
+
+def _logits_head(params, x: jax.Array) -> jax.Array:
+    """Unembedding that also accepts a PACKED (approximate) lm_head."""
+    from repro.core.approx_linear import QuantizedDense
+
+    head = params.get("lm_head", params["embed"])
+    if isinstance(head, QuantizedDense):
+        return dense(head, x, name="lm_head").astype(jnp.float32)
+    w = head["table"].T if "table" in head else head["w"]
+    return jnp.matmul(x, w.astype(x.dtype)).astype(jnp.float32)
+
+
+def forward(params: Params, batch: dict, cfg: ArchConfig, mesh=None) -> jax.Array:
+    """Full-sequence logits (test/benchmark use; training uses train_loss)."""
+    x = backbone(params, _embed_input(params, batch, cfg), cfg,
+                 batch.get("positions"), mesh)
+    return _logits_head(params, x)
+
+
+# ---------------------------------------------------------------------------
+# fused chunked LM-head + cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def _ce_from_logits(logits, labels, mask):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum(), mask.sum()
+
+
+def chunked_ce_loss(x, head_w, labels, mask):
+    """Mean CE over (B, T, D) features without a (B, T, V) logits tensor."""
+    b, t, _ = x.shape
+    if t <= LOSS_CHUNK:
+        nll, cnt = _ce_from_logits(jnp.matmul(x, head_w.astype(x.dtype)), labels, mask)
+        return nll / jnp.maximum(cnt, 1.0)
+    pad = (-t) % LOSS_CHUNK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nch = x.shape[1] // LOSS_CHUNK
+
+    def chunks(a):
+        return jnp.moveaxis(a.reshape(b, nch, LOSS_CHUNK, *a.shape[2:]), 1, 0)
+
+    def body(acc, inp):
+        xc, lc, mc = inp
+        nll, cnt = _ce_from_logits(jnp.matmul(xc, head_w.astype(xc.dtype)), lc, mc)
+        return (acc[0] + nll, acc[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)),
+        (chunks(x), chunks(labels), chunks(mask)),
+    )
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(params: Params, batch: dict, cfg: ArchConfig, mesh=None) -> jax.Array:
+    """Next-token (causal) or masked-frame (encoder) cross-entropy."""
+    x = backbone(params, _embed_input(params, batch, cfg), cfg,
+                 batch.get("positions"), mesh)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if cfg.causal:
+        x, labels = x[:, :-1], labels[:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32) if mask is None else mask[:, 1:]
+    else:
+        mask = jnp.ones(labels.shape, jnp.float32) if mask is None else mask
+    return chunked_ce_loss(x, _head_w(params), labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """Stacked-over-layers decode cache.  Sliding-window archs get ring
+    buffers of length W; MLA gets latent caches; hybrids add SSM state."""
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    s = min(max_len, cfg.window) if cfg.window else max_len
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.attn == "mla":
+        cache["latent"] = jnp.zeros((n_scan, batch, s, cfg.kv_lora_rank), dtype)
+        cache["rope"] = jnp.zeros((n_scan, batch, s, cfg.qk_rope_dim), dtype)
+    elif cfg.attn == "gqa":
+        cache["k"] = jnp.zeros((n_scan, batch, cfg.kv_heads, s, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((n_scan, batch, cfg.kv_heads, s, cfg.head_dim), dtype)
+    if cfg.first_dense_layers:
+        fd = cfg.first_dense_layers
+        if cfg.attn == "mla":
+            cache["dense_latent"] = jnp.zeros((fd, batch, s, cfg.kv_lora_rank), dtype)
+            cache["dense_rope"] = jnp.zeros((fd, batch, s, cfg.qk_rope_dim), dtype)
+        else:
+            cache["dense_k"] = jnp.zeros((fd, batch, cfg.kv_heads, s, cfg.head_dim), dtype)
+            cache["dense_v"] = jnp.zeros((fd, batch, cfg.kv_heads, s, cfg.head_dim), dtype)
+    if cfg.parallel_ssm:
+        scfg = cfg.ssm_config()
+        cache["ssm_conv"] = jnp.zeros(
+            (n_scan, batch, scfg.conv_kernel - 1, scfg.d_inner), jnp.float32)
+        cache["ssm_h"] = jnp.zeros(
+            (n_scan, batch, scfg.d_inner, scfg.d_state), jnp.float32)
+    return cache
+
+
+def _ring_align(data: jax.Array, s: int, t: int) -> jax.Array:
+    """Place the last ``s`` of ``t`` positions so that absolute position a
+    sits at slot a mod s (ring invariant).  data seq axis = -2."""
+    if t > s:
+        data = data[..., t - s :, :]
+        data = jnp.roll(data, t % s, axis=-2)
+    elif t < s:
+        pad = [(0, 0)] * data.ndim
+        pad[-2] = (0, s - t)
+        data = jnp.pad(data, pad)
+    return data
+
+
+def _block_decode(bp: dict, x, lc: dict, pos, cfg: ArchConfig, mesh):
+    """One block's decode step.  lc: this layer's cache slices (no 'pos')."""
+    acfg = cfg.attn_config()
+    h = apply_norm(cfg.norm, bp["attn_norm"], x)
+    new: dict = {}
+    if cfg.attn == "mla":
+        a, c2 = attn_lib.mla_decode_step(
+            bp["attn"], h, {"latent": lc["latent"], "rope": lc["rope"], "pos": pos},
+            cfg.mla_config(),
+        )
+        new["latent"], new["rope"] = c2["latent"], c2["rope"]
+    elif cfg.attn == "gqa":
+        step = attn_lib.attention_decode_ring if cfg.window else attn_lib.attention_decode_step
+        a, c2 = step(bp["attn"], h, {"k": lc["k"], "v": lc["v"], "pos": pos}, acfg)
+        new["k"], new["v"] = c2["k"], c2["v"]
+    else:
+        a = 0.0
+    if cfg.parallel_ssm:
+        s, st = ssm_lib.ssm_decode_step(
+            bp["ssm"], h, {"conv": lc["ssm_conv"], "h": lc["ssm_h"]}, cfg.ssm_config()
+        )
+        new["ssm_conv"], new["ssm_h"] = st["conv"], st["h"]
+        a = 0.5 * (rmsnorm(bp["attn_out_norm"], a.astype(x.dtype)) +
+                   rmsnorm(bp["ssm_out_norm"], s.astype(x.dtype)))
+    x = (x + a).astype(x.dtype)
+    h = apply_norm(cfg.norm, bp["mlp_norm"], x)
+    if cfg.mlp == "moe" and "router" in bp["mlp"]:
+        m = moe_lib.moe_apply(bp["mlp"], h, cfg.moe_config(), mesh=mesh)
+    elif cfg.mlp == "gelu":
+        m = gelu_mlp(bp["mlp"], h)
+    else:
+        m = swiglu(bp["mlp"], h)
+    return (x + m).astype(x.dtype), new
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: dict, cfg: ArchConfig,
+                mesh=None) -> tuple[jax.Array, dict]:
+    """tokens: (B, 1) -> (logits (B, V) f32, updated cache)."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = embed(params["embed"], tokens).astype(cdt)
+    pos = cache["pos"]
+    new_cache = dict(cache)
+
+    dense_keys = ("latent", "rope") if cfg.attn == "mla" else ("k", "v")
+    for i, bp in enumerate(params.get("dense_blocks", [])):
+        lc = {k: cache[f"dense_{k}"][i] for k in dense_keys}
+        x, new = _block_decode(bp, x, lc, pos, cfg, mesh)
+        for k in dense_keys:
+            new_cache[f"dense_{k}"] = new_cache[f"dense_{k}"].at[i].set(new[k])
+
+    layer_keys = [k for k in ("latent", "rope", "k", "v", "ssm_conv", "ssm_h")
+                  if k in cache]
+
+    lcs = {k: cache[k] for k in layer_keys}
+
+    def body(x, inp):
+        bp, lc = inp
+        return _block_decode(bp, x, lc, pos, cfg, mesh)
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], lcs))
+    new_cache.update(new_layers)
+    new_cache["pos"] = pos + 1
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits_head(params, x[:, 0])
+    return logits, new_cache
+
+
+def prefill(params: Params, batch: dict, cfg: ArchConfig, max_len: int,
+            mesh=None, cache_dtype=jnp.bfloat16) -> tuple[jax.Array, dict]:
+    """Single-pass prompt processing: last-token logits + filled cache."""
+    x = _embed_input(params, batch, cfg)
+    b, t = x.shape[:2]
+    cdt = _dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    positions = batch.get("positions")
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+    s = min(max_len, cfg.window) if cfg.window else max_len
+
+    dense_keys = ("latent", "rope") if cfg.attn == "mla" else ("k", "v")
+    for i, bp in enumerate(params.get("dense_blocks", [])):
+        with observers.scope("dense_blocks", i):
+            x, e = _block_forward(bp, x, cfg, positions, mesh, want_cache=True)
+        from repro.nn.attention import _to_cache as _tc
+        for k in dense_keys:
+            cache[f"dense_{k}"] = cache[f"dense_{k}"].at[i].set(
+                _tc(_ring_align(e[k], s, t), cache_dtype))
+
+    def body(carry, bp):
+        out, entry = _block_forward(bp, carry, cfg, positions, mesh, want_cache=True)
+        return out, entry
+
+    x, entries = jax.lax.scan(body, x, params["blocks"])
+
+    from repro.nn.attention import _to_cache
+
+    for key in ("latent", "rope", "k", "v"):
+        if key in entries:
+            cache[key] = _to_cache(_ring_align(entries[key], s, t), cache_dtype)
+    if cfg.parallel_ssm:
+        cache["ssm_conv"] = entries["ssm_conv"].astype(jnp.float32)
+        cache["ssm_h"] = entries["ssm_h"].astype(jnp.float32)
+    cache["pos"] = jnp.asarray(t, jnp.int32)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits_head(params, x[:, -1])
+    return logits, cache
+
+
+def _ssm_with_state(p, x, scfg):
+    """SSM prefill that also returns the final (conv, h) state."""
+    y = ssm_lib.ssm_prefill(p, x, scfg)
+    # re-derive final state (cheap relative to the scan; shares projections
+    # would need scan surgery — conv tail + one more scan over h only)
+    xz = dense(p["in_proj"], x, name="in_proj")
+    xin, _ = jnp.split(xz, 2, axis=-1)
+    conv_state = xin[:, -(scfg.conv_kernel - 1):, :]
+    xc = jax.nn.silu(ssm_lib._causal_conv(p, xin))
+    dt, bmat, _ = ssm_lib._ssm_inputs(p, scfg, xc)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    def step(h, inp):
+        xc_t, dt_t, b_t = inp
+        da = jnp.exp(dt_t[..., None] * a)
+        return da * h + (dt_t * xc_t)[..., None] * b_t[:, None, :], None
+
+    h0 = jnp.zeros((x.shape[0], scfg.d_inner, scfg.d_state), jnp.float32)
+    h, _ = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bmat, 1, 0)),
+    )
+    return y, {"conv": conv_state, "h": h}

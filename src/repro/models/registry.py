@@ -1,0 +1,137 @@
+"""Uniform model API over the zoo + per-shape input specs.
+
+``build_model(cfg)`` returns a :class:`ModelApi` whose methods are pure
+functions of (params, batch[, cache]); ``input_specs(cfg, shape)`` returns
+ShapeDtypeStruct stand-ins for every model input of the assigned input
+shapes (weak-type-correct, shardable, no device allocation) — the dry-run
+contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    s = SHAPES[shape]
+    if s.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch; 500k decode assigned to SSM/hybrid only"
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable  # (key) -> params
+    forward: Callable  # (params, batch, mesh=None) -> logits
+    train_loss: Callable  # (params, batch, mesh=None) -> scalar
+    prefill: Callable  # (params, batch, max_len, mesh=None) -> (logits, cache)
+    decode_step: Callable  # (params, tokens, cache, mesh=None) -> (logits, cache)
+    init_cache: Callable  # (batch, max_len, dtype) -> cache
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.rwkv:
+        from repro.models import rwkv_lm as m
+
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: m.init_params(key, cfg),
+            forward=lambda p, b, mesh=None: m.forward(p, b, cfg, mesh),
+            train_loss=lambda p, b, mesh=None: m.train_loss(p, b, cfg, mesh),
+            prefill=lambda p, b, max_len=0, mesh=None, cache_dtype=jnp.bfloat16:
+                m.prefill(p, b, cfg, max_len, mesh, cache_dtype),
+            decode_step=lambda p, t, c, mesh=None: m.decode_step(p, t, c, cfg, mesh),
+            init_cache=lambda batch, max_len=0, dtype=jnp.bfloat16: m.init_cache(
+                cfg, batch, max_len, dtype),
+        )
+    from repro.models import lm as m
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: m.init_params(key, cfg),
+        forward=lambda p, b, mesh=None: m.forward(p, b, cfg, mesh),
+        train_loss=lambda p, b, mesh=None: m.train_loss(p, b, cfg, mesh),
+        prefill=lambda p, b, max_len, mesh=None, cache_dtype=jnp.bfloat16:
+            m.prefill(p, b, cfg, max_len, mesh, cache_dtype),
+        decode_step=lambda p, t, c, mesh=None: m.decode_step(p, t, c, cfg, mesh),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: m.init_cache(
+            cfg, batch, max_len, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    """Model-input stand-ins for one (arch, shape) cell.
+
+    [vlm]/[audio] archs take STUB precomputed embeddings for the sequence
+    body (the modality frontend is out of scope per the assignment); decode
+    still consumes token ids through the embedding table.
+    """
+    s = SHAPES[shape]
+    b, t = s.global_batch, s.seq_len
+    embeds_input = cfg.input_mode == "embeds"
+
+    if s.kind == "train":
+        if embeds_input:
+            batch = {
+                "embeds": _sds((b, t, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((b, t), jnp.int32),
+            }
+            if cfg.family == "audio":
+                batch["mask"] = _sds((b, t), jnp.float32)
+        else:
+            batch = {
+                "tokens": _sds((b, t), jnp.int32),
+                "labels": _sds((b, t), jnp.int32),
+            }
+        return {"batch": batch}
+
+    if s.kind == "prefill":
+        if embeds_input:
+            batch = {"embeds": _sds((b, t, cfg.d_model), jnp.bfloat16)}
+            if cfg.rope == "mrope":
+                batch["positions"] = _sds((3, b, t), jnp.int32)
+        else:
+            batch = {"tokens": _sds((b, t), jnp.int32)}
+        return {"batch": batch, "max_len": t}
+
+    # decode: one new token against a cache of seq_len
+    api = build_model(cfg)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(b, t, jnp.bfloat16)
+    )
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}

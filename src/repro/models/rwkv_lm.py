@@ -1,0 +1,189 @@
+"""RWKV6 (Finch) language model — the attention-free assigned architecture.
+
+Same public surface as models/lm.py (init/forward/train_loss/prefill/
+decode_step/init_cache).  Layers are scanned; the decode "cache" is the
+constant-size recurrent state (per-layer shift vectors + WKV matrices),
+which is what makes long_500k decode O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.layers import apply_norm, embed, init_embedding, init_norm
+from repro.nn import rwkv as rwkv_lib
+
+Params = Any
+
+
+def _dtype(name):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def _init_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    rcfg = cfg.rwkv_config()
+    return {
+        "ln1": init_norm("layernorm", cfg.d_model, dtype),
+        "tm": rwkv_lib.init_time_mix(k1, rcfg, dtype),
+        "ln2": init_norm("layernorm", cfg.d_model, dtype),
+        "cm": rwkv_lib.init_channel_mix(k2, rcfg, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    dtype = _dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    return {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "ln0": init_norm("layernorm", cfg.d_model, dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(block_keys),
+        "final_norm": init_norm("layernorm", cfg.d_model, dtype),
+        "lm_head": {
+            "w": (jax.random.normal(k_head, (cfg.d_model, cfg.vocab))
+                  * cfg.d_model**-0.5).astype(dtype)
+        },
+    }
+
+
+def _block(bp, x, cfg: ArchConfig, states=None, mesh=None):
+    """states: None (zero init) or dict(shift_tm, shift_cm, wkv)."""
+    rcfg = cfg.rwkv_config()
+    x = _constrain(x, mesh, shard_d=False)  # one bf16 gather per block
+    h = apply_norm("layernorm", bp["ln1"], x)
+    tm_out, shift_tm, wkv = rwkv_lib.time_mix(
+        bp["tm"], h, rcfg,
+        shift_state=None if states is None else states["shift_tm"],
+        wkv_state=None if states is None else states["wkv"],
+    )
+    x = x + tm_out
+    h = apply_norm("layernorm", bp["ln2"], x)
+    cm_out, shift_cm = rwkv_lib.channel_mix(
+        bp["cm"], h, shift_state=None if states is None else states["shift_cm"]
+    )
+    x = x + cm_out
+    return x, {"shift_tm": shift_tm, "shift_cm": shift_cm, "wkv": wkv}
+
+
+def _constrain(x, mesh, shard_d: bool):
+    """Residual-stream sharding control (EXPERIMENTS.md §Perf, rwkv6).
+
+    The carry between blocks stays D-SHARDED (channel-parallel residual:
+    16x smaller saved activations, and the out-proj all-reduce can lower to
+    a reduce-scatter).  Each block then performs ONE explicit bf16
+    all-gather at entry.  Without this pinning, GSPMD gathered the f32
+    layernorm upcast instead — 16 (B, T, D) f32 gathers per layer."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+    spec = P(dp, None, "model") if shard_d else P(dp, None, None)
+    if shard_d and x.shape[-1] % mesh.shape["model"] != 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def backbone(params, x, cfg: ArchConfig, want_states: bool = False, mesh=None):
+    cdt = _dtype(cfg.compute_dtype)
+    x = apply_norm("layernorm", params["ln0"], x.astype(cdt))
+
+    def body(carry, bp):
+        out, st = _block(bp, carry, cfg, mesh=mesh)
+        out = _constrain(out, mesh, shard_d=True)  # D-sharded carry
+        return out, st if want_states else None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.checkpoint_dots)
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm("layernorm", params["final_norm"], x)
+    return x, states
+
+
+def _logits_head(params, x):
+    from repro.core.approx_linear import QuantizedDense, dense
+
+    head = params["lm_head"]
+    if isinstance(head, QuantizedDense):
+        return dense(head, x, name="lm_head").astype(jnp.float32)
+    return jnp.matmul(x, head["w"].astype(x.dtype)).astype(jnp.float32)
+
+
+def forward(params, batch, cfg: ArchConfig, mesh=None):
+    x, _ = backbone(params, embed(params["embed"], batch["tokens"]), cfg, mesh=mesh)
+    return _logits_head(params, x)
+
+
+def train_loss(params, batch, cfg: ArchConfig, mesh=None):
+    from repro.models.lm import chunked_ce_loss
+
+    x, _ = backbone(params, embed(params["embed"], batch["tokens"]), cfg, mesh=mesh)
+    labels = batch["labels"][:, 1:]
+    mask = batch.get("mask")
+    mask = jnp.ones(labels.shape, jnp.float32) if mask is None else mask[:, 1:]
+    return chunked_ce_loss(x[:, :-1], params["lm_head"]["w"], labels, mask)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+    """Recurrent state — constant size, independent of max_len."""
+    rcfg = cfg.rwkv_config()
+    L, d = cfg.n_layers, cfg.d_model
+    h, hd = rcfg.n_heads, rcfg.head_dim
+    cdt = _dtype(cfg.compute_dtype)
+    return {
+        "shift_tm": jnp.zeros((L, batch, d), cdt),
+        "shift_cm": jnp.zeros((L, batch, d), cdt),
+        "wkv": jnp.zeros((L, batch, h, hd, hd), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len: int = 0, mesh=None,
+            cache_dtype=jnp.bfloat16):
+    t = batch["tokens"].shape[1]
+    x, states = backbone(params, embed(params["embed"], batch["tokens"]), cfg,
+                         want_states=True, mesh=mesh)
+    logits = _logits_head(params, x[:, -1])
+    cache = {
+        "shift_tm": states["shift_tm"].astype(_dtype(cfg.compute_dtype)),
+        "shift_cm": states["shift_cm"].astype(_dtype(cfg.compute_dtype)),
+        "wkv": states["wkv"],
+        "pos": jnp.asarray(t, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cfg: ArchConfig, mesh=None):
+    cdt = _dtype(cfg.compute_dtype)
+    x = embed(params["embed"], tokens).astype(cdt)
+    x = apply_norm("layernorm", params["ln0"], x)
+    rcfg = cfg.rwkv_config()
+
+    def body(x, inp):
+        bp, st = inp
+        h = apply_norm("layernorm", bp["ln1"], x)
+        tm_out, shift_tm, wkv = rwkv_lib.time_mix_step(
+            bp["tm"], h, rcfg, st["shift_tm"], st["wkv"]
+        )
+        x = x + tm_out
+        h = apply_norm("layernorm", bp["ln2"], x)
+        cm_out, shift_cm = rwkv_lib.channel_mix(bp["cm"], h, st["shift_cm"])
+        x = x + cm_out
+        return x, {"shift_tm": shift_tm.astype(st["shift_tm"].dtype),
+                   "shift_cm": shift_cm.astype(st["shift_cm"].dtype),
+                   "wkv": wkv}
+
+    states = {k: cache[k] for k in ("shift_tm", "shift_cm", "wkv")}
+    x, new_states = jax.lax.scan(body, x, (params["blocks"], states))
+    x = apply_norm("layernorm", params["final_norm"], x)
+    logits = _logits_head(params, x[:, 0])
+    new_cache = dict(new_states)
+    new_cache["pos"] = cache["pos"] + 1
+    return logits, new_cache

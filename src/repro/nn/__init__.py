@@ -1,0 +1,9 @@
+"""Model substrate: pure-functional layers over plain-dict parameter pytrees.
+
+Every matmul in every layer routes through
+:func:`repro.core.approx_linear.dense`, so the paper's approximate-multiplier
++ control-variate technique is a *parameter transformation*
+(``pack_params``), never a model rewrite.
+"""
+
+from repro.nn import layers, attention, moe, rwkv, ssm, cnn  # noqa: F401

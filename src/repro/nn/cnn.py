@@ -1,0 +1,325 @@
+"""CNN substrate for the paper's accuracy evaluation (Tables 2-4, Fig. 10).
+
+Convolutions are implemented as im2col + `dense`, because that is literally
+what the paper's systolic MAC array computes: each output pixel is a k-term
+dot product of weights and activation patches.  Routing convs through
+`dense` means `pack_params` turns a trained float CNN into an
+approximate-multiplier + control-variate CNN with zero model rewrite, with
+per-conv CV constants — faithful to the TFApprox evaluation flow.
+
+Conv parameter leaves are plain linear dicts {"w": (k*k*cin, cout), "b"};
+kernel sizes are static and supplied at the call site, so packed
+(QuantizedDense) leaves drop in transparently.
+
+Model families mirror the paper's six CNNs at CPU-trainable scale:
+VGG-style (VGG13/16 stand-ins), ResNet-style (ResNet44/56 stand-ins),
+Inception-style (GoogLeNet stand-in) and ShuffleNet-style.  CIFAR is not
+available offline (DESIGN.md); the accuracy benchmark validates the paper's
+accuracy-recovery TREND on these families over a procedural dataset.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_linear import dense, init_dense
+from repro.quant import observers
+
+
+# ---------------------------------------------------------------------------
+# conv2d as im2col + dense
+# ---------------------------------------------------------------------------
+
+
+def init_conv(key, cin: int, cout: int, ksize: int, dtype=jnp.float32) -> dict:
+    """Conv kernel stored directly in matmul layout: (k*k*cin, cout)."""
+    fan_in = ksize * ksize * cin
+    return {
+        "w": (jax.random.truncated_normal(key, -2, 2, (fan_in, cout))
+              * (2.0 / fan_in) ** 0.5).astype(dtype),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def _im2col(x: jax.Array, ksize: int, stride: int, padding: int) -> jax.Array:
+    """x: (B, H, W, C) -> patches (B, Ho, Wo, k*k*C)."""
+    b, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    ho = (h + 2 * padding - ksize) // stride + 1
+    wo = (w + 2 * padding - ksize) // stride + 1
+    cols = []
+    for di in range(ksize):
+        for dj in range(ksize):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (0, di, dj, 0),
+                    (b, di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(p, x: jax.Array, ksize: int, stride: int = 1,
+           padding: int | None = None, name: str = "conv") -> jax.Array:
+    """p: linear leaf (float dict or QuantizedDense) in im2col layout."""
+    if padding is None:
+        padding = ksize // 2
+    if ksize == 1 and stride == 1 and padding == 0:
+        return dense(p, x, name=name)  # pointwise: no patch extraction
+    patches = _im2col(x, ksize, stride, padding)
+    return dense(p, patches, name=name)
+
+
+def maxpool(x: jax.Array, k: int = 2, stride: int | None = None) -> jax.Array:
+    stride = stride or k
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def avgpool_global(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def init_bn(c: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def batchnorm_infer(p: dict, x: jax.Array) -> jax.Array:
+    """Per-channel affine (BN with folded statistics — what TFLite deploys;
+    trained directly by SGD at our scale)."""
+    return x * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    family: str  # vgg | resnet | inception | shufflenet
+    num_classes: int = 10
+    width: int = 32  # base channel count
+    depth: int = 2  # blocks per stage
+    img_size: int = 32
+    in_channels: int = 3
+
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> dict:
+    return {
+        "vgg": _init_vgg,
+        "resnet": _init_resnet,
+        "inception": _init_inception,
+        "shufflenet": _init_shuffle,
+    }[cfg.family](key, cfg, dtype)
+
+
+def cnn_apply(p: dict, x: jax.Array, cfg: CNNConfig) -> jax.Array:
+    return {
+        "vgg": _vgg_apply,
+        "resnet": _resnet_apply,
+        "inception": _inception_apply,
+        "shufflenet": _shuffle_apply,
+    }[cfg.family](p, x, cfg)
+
+
+# --- VGG ---
+
+
+def _init_vgg(key, cfg: CNNConfig, dtype) -> dict:
+    w = cfg.width
+    chans = [cfg.in_channels, w, w * 2, w * 4]
+    keys = iter(jax.random.split(key, 3 * cfg.depth + 2))
+    p: dict = {"stages": []}
+    for s in range(3):
+        stage, cin = [], chans[s]
+        for _ in range(cfg.depth):
+            stage.append({
+                "conv": init_conv(next(keys), cin, chans[s + 1], 3, dtype),
+                "bn": init_bn(chans[s + 1], dtype),
+            })
+            cin = chans[s + 1]
+        p["stages"].append(stage)
+    p["head"] = {
+        "fc1": init_dense(next(keys), chans[-1], 4 * w, dtype=dtype),
+        "fc2": init_dense(next(keys), 4 * w, cfg.num_classes, dtype=dtype),
+    }
+    return p
+
+
+def _vgg_apply(p, x, cfg):
+    for si, stage in enumerate(p["stages"]):
+        with observers.scope("stages", si):
+            for bi, blk in enumerate(stage):
+                with observers.scope(str(bi)):
+                    x = conv2d(blk["conv"], x, 3, name="conv")
+                    x = jax.nn.relu(batchnorm_infer(blk["bn"], x))
+        x = maxpool(x)
+    x = avgpool_global(x)
+    with observers.scope("head"):
+        x = jax.nn.relu(dense(p["head"]["fc1"], x, name="fc1"))
+        return dense(p["head"]["fc2"], x, name="fc2")
+
+
+# --- ResNet (CIFAR-style basic blocks) ---
+
+
+def _init_resnet(key, cfg: CNNConfig, dtype) -> dict:
+    w = cfg.width
+    keys = iter(jax.random.split(key, 6 * cfg.depth * 3 + 4))
+    p: dict = {
+        "stem": init_conv(next(keys), cfg.in_channels, w, 3, dtype),
+        "stem_bn": init_bn(w, dtype),
+        "stages": [],
+    }
+    cin = w
+    for s, cout in enumerate([w, 2 * w, 4 * w]):
+        stage = []
+        for b in range(cfg.depth):
+            blk = {
+                "conv1": init_conv(next(keys), cin, cout, 3, dtype),
+                "bn1": init_bn(cout, dtype),
+                "conv2": init_conv(next(keys), cout, cout, 3, dtype),
+                "bn2": init_bn(cout, dtype),
+            }
+            if cin != cout:
+                blk["proj"] = init_conv(next(keys), cin, cout, 1, dtype)
+            stage.append(blk)
+            cin = cout
+        p["stages"].append(stage)
+    p["head"] = {"fc": init_dense(next(keys), cin, cfg.num_classes, dtype=dtype)}
+    return p
+
+
+def _resnet_apply(p, x, cfg):
+    x = jax.nn.relu(batchnorm_infer(p["stem_bn"], conv2d(p["stem"], x, 3, name="stem")))
+    for si, stage in enumerate(p["stages"]):
+        for bi, blk in enumerate(stage):
+            with observers.scope("stages", si, bi):
+                stride = 2 if (bi == 0 and si > 0) else 1
+                h = conv2d(blk["conv1"], x, 3, stride=stride, name="conv1")
+                h = jax.nn.relu(batchnorm_infer(blk["bn1"], h))
+                h = conv2d(blk["conv2"], h, 3, name="conv2")
+                h = batchnorm_infer(blk["bn2"], h)
+                if "proj" in blk:
+                    sc = conv2d(blk["proj"], x, 1, stride=stride, padding=0, name="proj")
+                elif stride != 1:
+                    sc = x[:, ::stride, ::stride, :]
+                else:
+                    sc = x
+                x = jax.nn.relu(h + sc)
+    x = avgpool_global(x)
+    with observers.scope("head"):
+        return dense(p["head"]["fc"], x, name="fc")
+
+
+# --- Inception (GoogLeNet stand-in) ---
+
+
+def _init_inception(key, cfg: CNNConfig, dtype) -> dict:
+    w = cfg.width
+    keys = iter(jax.random.split(key, 6 * (cfg.depth + 1) + 3))
+    p: dict = {"stem": init_conv(next(keys), cfg.in_channels, w, 3, dtype), "blocks": []}
+    cin = w
+    for _ in range(cfg.depth + 1):
+        b1, b3, b5, bp = w // 2, w // 2, w // 4, w // 4
+        p["blocks"].append({
+            "b1": init_conv(next(keys), cin, b1, 1, dtype),
+            "b3_red": init_conv(next(keys), cin, b3 // 2, 1, dtype),
+            "b3": init_conv(next(keys), b3 // 2, b3, 3, dtype),
+            "b5_red": init_conv(next(keys), cin, b5 // 2, 1, dtype),
+            "b5": init_conv(next(keys), b5 // 2, b5, 5, dtype),
+            "bp": init_conv(next(keys), cin, bp, 1, dtype),
+        })
+        cin = b1 + b3 + b5 + bp
+    p["head"] = {"fc": init_dense(next(keys), cin, cfg.num_classes, dtype=dtype)}
+    return p
+
+
+def _inception_apply(p, x, cfg):
+    x = jax.nn.relu(conv2d(p["stem"], x, 3, name="stem"))
+    for bi, blk in enumerate(p["blocks"]):
+        with observers.scope("blocks", bi):
+            y1 = jax.nn.relu(conv2d(blk["b1"], x, 1, padding=0, name="b1"))
+            y3 = jax.nn.relu(conv2d(blk["b3_red"], x, 1, padding=0, name="b3_red"))
+            y3 = jax.nn.relu(conv2d(blk["b3"], y3, 3, name="b3"))
+            y5 = jax.nn.relu(conv2d(blk["b5_red"], x, 1, padding=0, name="b5_red"))
+            y5 = jax.nn.relu(conv2d(blk["b5"], y5, 5, name="b5"))
+            yp = maxpool(jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)),
+                                 constant_values=-jnp.inf), 3, 1)
+            yp = jax.nn.relu(conv2d(blk["bp"], yp, 1, padding=0, name="bp"))
+            x = jnp.concatenate([y1, y3, y5, yp], axis=-1)
+        if bi % 2 == 1:
+            x = maxpool(x)
+    x = avgpool_global(x)
+    with observers.scope("head"):
+        return dense(p["head"]["fc"], x, name="fc")
+
+
+# --- ShuffleNet-style (pointwise + channel shuffle + depthwise) ---
+
+
+def _init_shuffle(key, cfg: CNNConfig, dtype) -> dict:
+    w = cfg.width
+    keys = iter(jax.random.split(key, 8 * cfg.depth + 3))
+    p: dict = {"stem": init_conv(next(keys), cfg.in_channels, w, 3, dtype), "blocks": []}
+    cin = w
+    for s in range(2):
+        cout = cin * 2
+        for b in range(cfg.depth):
+            blk = {
+                "pw1": init_conv(next(keys), cin, cout, 1, dtype),
+                "dw": {"kernel": (jax.random.normal(next(keys), (3, 3, cout)) * 0.1).astype(dtype)},
+                "pw2": init_conv(next(keys), cout, cout, 1, dtype),
+            }
+            if b == 0:
+                blk["proj"] = init_conv(next(keys), cin, cout, 1, dtype)
+            p["blocks"].append(blk)
+            cin = cout
+    p["head"] = {"fc": init_dense(next(keys), cin, cfg.num_classes, dtype=dtype)}
+    return p
+
+
+def _channel_shuffle(x: jax.Array, groups: int) -> jax.Array:
+    b, h, w, c = x.shape
+    return (
+        x.reshape(b, h, w, groups, c // groups).swapaxes(-1, -2).reshape(b, h, w, c)
+    )
+
+
+def _depthwise(dw: dict, x: jax.Array, stride: int) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        dw["kernel"][..., None].transpose(0, 1, 3, 2),  # (3, 3, 1, C)
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=x.shape[-1],
+    )
+
+
+def _shuffle_apply(p, x, cfg):
+    x = jax.nn.relu(conv2d(p["stem"], x, 3, name="stem"))
+    for bi, blk in enumerate(p["blocks"]):
+        with observers.scope("blocks", bi):
+            first_in_stage = "proj" in blk
+            stride = 2 if first_in_stage else 1
+            h = jax.nn.relu(conv2d(blk["pw1"], x, 1, padding=0, name="pw1"))
+            h = _channel_shuffle(h, 4)
+            h = _depthwise(blk["dw"], h, stride)
+            h = conv2d(blk["pw2"], h, 1, padding=0, name="pw2")
+            if first_in_stage:
+                sc = conv2d(blk["proj"], x, 1, stride=stride, padding=0, name="proj")
+            else:
+                sc = x
+            x = jax.nn.relu(h + sc)
+    x = avgpool_global(x)
+    with observers.scope("head"):
+        return dense(p["head"]["fc"], x, name="fc")

@@ -1,0 +1,208 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892): attention-free LM with
+data-dependent decay.
+
+Time-mix: token-shift DDLerp (low-rank data-dependent interpolation between
+x_t and x_{t-1} per r/k/v/w/g stream), data-dependent per-channel decay
+w_t = exp(-exp(.)), the WKV linear-attention recurrence, per-head GroupNorm,
+silu-gated output.  Channel-mix: token-shift + squared-ReLU FFN with
+receptance gate.
+
+Prefill uses the chunked WKV form (same algebra as kernels/rwkv6_scan.py —
+pure-jnp here so it lowers/shards under pjit; the Pallas kernel is the
+TPU-target fast path).  Decode keeps (shift, state) per layer and is O(1)
+per token.
+
+Projections are `dense` leaves (approximable); the recurrence/normalization
+are exact, matching the paper's array/non-array split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_linear import dense, init_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    mix_rank: int = 32  # DDLerp LoRA dim (TIME_MIX_EXTRA_DIM)
+    decay_rank: int = 64  # decay LoRA dim (TIME_DECAY_EXTRA_DIM)
+    wkv_chunk: int = 32
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_time_mix(key, cfg: RWKVConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu_rkvwg": (jax.random.normal(ks[0], (5, d)) * 0.02 + 0.5).astype(dtype),
+        "mix_w1": (jax.random.normal(ks[1], (d, 5 * cfg.mix_rank)) * 0.02).astype(dtype),
+        "mix_w2": (jax.random.normal(ks[2], (5, cfg.mix_rank, d)) * 0.02).astype(dtype),
+        "decay_base": (jax.random.normal(ks[3], (d,)) * 0.5 - 6.0).astype(dtype),
+        "decay_w1": (jax.random.normal(ks[4], (d, cfg.decay_rank)) * 0.02).astype(dtype),
+        "decay_w2": (jax.random.normal(ks[5], (cfg.decay_rank, d)) * 0.02).astype(dtype),
+        "bonus": (jax.random.normal(ks[6], (h, cfg.head_dim)) * 0.02).astype(dtype),
+        "r": init_dense(ks[7], d, d, bias=False, dtype=dtype),
+        "k": init_dense(ks[8], d, d, bias=False, dtype=dtype),
+        "v": init_dense(ks[9], d, d, bias=False, dtype=dtype),
+        "g": init_dense(ks[0], d, d, bias=False, dtype=dtype),
+        "out": init_dense(ks[1], d, d, bias=False, dtype=dtype),
+        "ln_x_scale": jnp.ones((d,), dtype),
+        "ln_x_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def _group_norm_heads(x: jax.Array, scale, bias, n_heads: int, eps=1e-5):
+    """GroupNorm with one group per head.  x: (B, T, d_model)."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, t, d) * scale + bias).astype(x.dtype)
+
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift interpolation -> (xw, xk, xv, xr, xg)."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_x"]
+    low = jnp.tanh(jnp.matmul(xx, p["mix_w1"]))  # (B, T, 5*rank)
+    low = low.reshape(*low.shape[:-1], 5, -1)  # (B, T, 5, rank)
+    deltas = jnp.einsum("btfr,frd->fbtd", low, p["mix_w2"])
+    outs = []
+    for i in range(5):
+        mu = p["mu_rkvwg"][i] + deltas[i]
+        outs.append(x + dx * mu)
+    return outs  # order: w, k, v, r, g
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay in (0, 1): exp(-exp(base + lora))."""
+    lora = jnp.matmul(jnp.tanh(jnp.matmul(xw, p["decay_w1"])), p["decay_w2"])
+    return jnp.exp(-jnp.exp((p["decay_base"] + lora).astype(jnp.float32)))
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunked WKV (same algebra as the Pallas kernel), carrying ``state``.
+
+    r/k/w: (B, T, H, D), v: (B, T, H, D), u: (H, D),
+    state: (B, H, D, D) -> returns (out, new_state).
+    """
+    b, t, h, d = r.shape
+    if t % chunk != 0:
+        pad = chunk - t % chunk
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    tt = r.shape[1]
+    nch = tt // chunk
+
+    def chunk_step(s, inp):
+        rc, kc, vc, wc = inp  # (B, L, H, D)
+        logw = jnp.log(wc.astype(jnp.float32))
+        logD = jnp.cumsum(logw, axis=1)
+        d_full = jnp.exp(logD[:, -1])  # (B, H, D)
+        rt = rc.astype(jnp.float32) * jnp.exp(
+            jnp.concatenate([jnp.zeros_like(logD[:, :1]), logD[:, :-1]], 1)
+        )
+        kt = kc.astype(jnp.float32) * jnp.exp(-logD)
+        a = jnp.einsum("bthd,bshd->bhts", rt, kt)
+        ti = jnp.arange(chunk)
+        a = jnp.where(ti[:, None] > ti[None, :], a[..., :, :], 0.0)
+        diag = jnp.einsum("bthd,hd,bthd->bth", rc.astype(jnp.float32), u, kc.astype(jnp.float32))
+        out = jnp.einsum("bhts,bshd->bthd", a, vc.astype(jnp.float32))
+        out = out + diag[..., None] * vc.astype(jnp.float32)
+        out = out + jnp.einsum("bthk,bhkv->bthv", rt, s)
+        new_s = d_full[..., None] * (
+            s + jnp.einsum("bshk,bshv->bhkv", kt, vc.astype(jnp.float32))
+        )
+        return new_s, out
+
+    xs = tuple(
+        jnp.moveaxis(a.reshape(b, nch, chunk, h, d), 1, 0) for a in (r, k, v, w)
+    )
+    state, outs = jax.lax.scan(chunk_step, state, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tt, h, d)[:, :t]
+    return out, state
+
+
+def time_mix(p: dict, x: jax.Array, cfg: RWKVConfig, shift_state=None, wkv_state=None):
+    """x: (B, T, D).  shift_state: (B, D) last token of previous segment."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+
+    r = dense(p["r"], xr, name="r").reshape(b, t, h, hd)
+    k = dense(p["k"], xk, name="k").reshape(b, t, h, hd)
+    v = dense(p["v"], xv, name="v").reshape(b, t, h, hd)
+    g = dense(p["g"], xg, name="g")
+    w = _decay(p, xw).reshape(b, t, h, hd)
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    out, new_state = wkv_chunked(r, k, v, w, p["bonus"], wkv_state, cfg.wkv_chunk)
+    out = out.reshape(b, t, d).astype(x.dtype)
+    out = _group_norm_heads(out, p["ln_x_scale"], p["ln_x_bias"], h)
+    out = out * jax.nn.silu(g)
+    return dense(p["out"], out, name="out"), x[:, -1, :], new_state
+
+
+def time_mix_step(p: dict, x: jax.Array, cfg: RWKVConfig, shift_state, wkv_state):
+    """Single-token time-mix: x (B, 1, D); O(1) state update (no chunk pad)."""
+    b, _, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    x_prev = shift_state[:, None, :]
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    r = dense(p["r"], xr, name="r").reshape(b, h, hd)
+    k = dense(p["k"], xk, name="k").reshape(b, h, hd)
+    v = dense(p["v"], xv, name="v").reshape(b, h, hd)
+    g = dense(p["g"], xg, name="g")
+    w = _decay(p, xw).reshape(b, h, hd)
+
+    kv = k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    att = wkv_state + p["bonus"][None, :, :, None].astype(jnp.float32) * kv
+    out = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32), att)
+    new_state = w[..., :, None].astype(jnp.float32) * wkv_state + kv
+    out = out.reshape(b, 1, d).astype(x.dtype)
+    out = _group_norm_heads(out, p["ln_x_scale"], p["ln_x_bias"], h)
+    out = out * jax.nn.silu(g)
+    return dense(p["out"], out, name="out"), x[:, -1, :], new_state
+
+
+def init_channel_mix(key, cfg: RWKVConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "key": init_dense(k1, d, cfg.d_ff, bias=False, dtype=dtype),
+        "value": init_dense(k2, cfg.d_ff, d, bias=False, dtype=dtype),
+        "receptance": init_dense(k3, d, d, bias=False, dtype=dtype),
+    }
+
+
+def channel_mix(p: dict, x: jax.Array, shift_state=None):
+    b, t, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(dense(p["key"], xk, name="key")))
+    kv = dense(p["value"], k, name="value")
+    return jax.nn.sigmoid(dense(p["receptance"], xr, name="receptance")) * kv, x[:, -1, :]

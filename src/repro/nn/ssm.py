@@ -1,0 +1,130 @@
+"""Selective SSM (Mamba-style) block — the SSM half of hymba's hybrid heads.
+
+Hymba (arXiv:2411.13676) runs attention heads and mamba heads *in parallel*
+within each layer and averages their (re-normalized) outputs.  This module
+implements the mamba head: in-projection with gate, causal depthwise conv,
+data-dependent (dt, B, C) selective scan with d_state=16, gated
+out-projection.
+
+The scan is `jax.lax.scan` over time for prefill/training (HLO-compact,
+sequential) and a single fused step for decode.  A chunked parallel scan is
+a known optimization (same chunking algebra as kernels/rwkv6_scan.py) and is
+left as a recorded perf lever for the hillclimb phase.
+
+All projections are `dense` leaves (approximable); the recurrence itself is
+exact vector-unit work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.approx_linear import dense, init_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int  # expansion (hymba: 2 * d_model over the ssm heads)
+    d_state: int = 16
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+    conv_kernel: int = 4
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_ssm(key, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_in = cfg.d_inner
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": init_dense(k1, cfg.d_model, 2 * d_in, bias=False, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, d_in)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": init_dense(k3, d_in, cfg.dtr + 2 * cfg.d_state, bias=False, dtype=dtype),
+        "dt_proj": init_dense(k4, cfg.dtr, d_in, bias=True, dtype=dtype),
+        "a_log": jnp.log(a).astype(dtype),
+        "d_skip": jnp.ones((d_in,), dtype),
+        "out_proj": init_dense(k5, d_in, cfg.d_model, bias=False, dtype=dtype),
+    }
+
+
+def _causal_conv(p: dict, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B, T, C)."""
+    k = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k is tiny (4): unrolled taps fuse well
+        out = out + xp[:, i : i + x.shape[1], :] * p["conv_w"][i]
+    return out + p["conv_b"]
+
+
+def _ssm_inputs(p: dict, cfg: SSMConfig, xc: jax.Array):
+    """Data-dependent dt/B/C from the conv output.  xc: (B, T, d_inner)."""
+    proj = dense(p["x_proj"], xc, name="x_proj")
+    dt_low = proj[..., : cfg.dtr]
+    b = proj[..., cfg.dtr : cfg.dtr + cfg.d_state]
+    c = proj[..., cfg.dtr + cfg.d_state :]
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_low, name="dt_proj"))
+    return dt, b, c
+
+
+def ssm_prefill(p: dict, x: jax.Array, cfg: SSMConfig) -> jax.Array:
+    """x: (B, T, d_model) -> (B, T, d_model); zero initial state."""
+    b_, t, _ = x.shape
+    xz = dense(p["in_proj"], x, name="in_proj")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(p, xin))
+    dt, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (d_inner, d_state)
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp  # (B,d_in), (B,d_in), (B,ds), (B,ds)
+        da = jnp.exp(dt_t[..., None] * a)  # (B, d_in, ds)
+        h = da * h + (dt_t * xc_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((b_, cfg.d_inner, cfg.d_state), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(bmat, 1, 0),
+        jnp.moveaxis(cmat, 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = (y + xc * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return dense(p["out_proj"], y, name="out_proj").astype(x.dtype)
+
+
+def init_ssm_state(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(p: dict, x: jax.Array, state: dict, cfg: SSMConfig):
+    """x: (B, 1, d_model); O(1) per-token state update."""
+    xz = dense(p["in_proj"], x, name="in_proj")
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, 1, d_in)
+    conv_buf = jnp.concatenate([state["conv"], xin], axis=1)  # (B, k, d_in)
+    xc = jnp.einsum("bkd,kd->bd", conv_buf, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]
+    dt, bmat, cmat = _ssm_inputs(p, cfg, xc)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :, None] * a)
+    h = da * state["h"] + (dt[:, 0] * xc[:, 0])[..., None] * bmat[:, 0][:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None, :].astype(x.dtype)
+    y = (y + xc * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = dense(p["out_proj"], y, name="out_proj")
+    return out.astype(x.dtype), {"conv": conv_buf[:, 1:].astype(state["conv"].dtype), "h": h}

@@ -1,0 +1,22 @@
+"""Optimizer substrate: AdamW with decoupled weight decay, global-norm
+clipping, LR schedules, and int8 error-feedback gradient compression."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import warmup_cosine, constant_lr
+from repro.optim.grad_compress import (
+    CompressorState,
+    compressor_init,
+    compress_decompress,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "warmup_cosine",
+    "constant_lr",
+    "CompressorState",
+    "compressor_init",
+    "compress_decompress",
+]

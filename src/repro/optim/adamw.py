@@ -1,0 +1,86 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Pure-pytree implementation (no optax in this container).  The second-moment
+accumulator dtype is configurable (f32 default; bf16 halves optimizer HBM —
+a recorded distributed-memory lever for the 67B FSDP cell).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" halves m/v memory
+
+
+def _mdt(cfg: AdamWConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, _mdt(cfg))
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(path: tuple, leaf) -> bool:
+    """No weight decay on norms/biases/scalars (standard)."""
+    names = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    if leaf.ndim <= 1:
+        return False
+    return not any(s in names for s in ("norm", "scale", "bias", "ln_"))
+
+
+def adamw_update(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig, lr: jax.Array | float
+) -> tuple[Any, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state["step"] + 1
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = _mdt(cfg)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        update = (m32 / c1) / (jnp.sqrt(v32 / c2) + cfg.eps)
+        if _decay_mask(path, p):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat[0]]
+    p_leaves = [l for _, l in flat[0]]
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state["m"])
+    v_leaves = jax.tree.leaves(state["v"])
+    out = [upd(pa, p, g, m, v) for pa, p, g, m, v in
+           zip(paths, p_leaves, g_leaves, m_leaves, v_leaves)]
+    treedef = flat[1]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

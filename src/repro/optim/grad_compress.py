@@ -1,0 +1,51 @@
+"""int8 error-feedback gradient compression (distributed-optimization trick).
+
+For data-parallel training, gradients cross the pod interconnect every step.
+Quantizing them to int8 (per-leaf absmax scale) cuts the all-reduce bytes 4x
+vs f32 / 2x vs bf16; the quantization residual is carried in an error-
+feedback accumulator so the bias vanishes over steps (Karimireddy et al.'s
+EF-SGD argument).  This is also a natural companion to the paper: the same
+"cheap arithmetic + explicit error compensation" structure, applied to the
+communication domain instead of the multiplier array.
+
+`compress_decompress` is the numerics (usable under pjit — XLA then reduces
+the already-quantized values); `runtime/overlap.py` provides the shard_map
+all-reduce that actually moves int8 on the wire.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+CompressorState = Any  # pytree of residuals, like grads
+
+
+def compressor_init(grads_like: Any) -> CompressorState:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def _quantize_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(
+    grads: Any, state: CompressorState
+) -> tuple[Any, CompressorState]:
+    """Error-feedback int8 round-trip: returns (decompressed grads, state')."""
+
+    def leaf(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _quantize_leaf(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(leaf, grads, state)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, res

@@ -1,0 +1,11 @@
+"""Parallelism: PartitionSpec rule engine mapping parameter/cache/batch trees
+to mesh shardings (TP + DP/FSDP + EP + sequence sharding for decode)."""
+
+from repro.parallel.sharding import (
+    param_shardings,
+    batch_shardings,
+    cache_shardings,
+    fit_spec,
+)
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings", "fit_spec"]

@@ -1,0 +1,31 @@
+"""gemmlowp/TFLite-style uint8 asymmetric quantization substrate.
+
+The paper's accuracy evaluation runs on TFApprox, which emulates approximate
+multipliers inside TFLite-style uint8 quantized inference: real values are
+``r = S * (q - Z)`` with uint8 codes q, float scale S, integer zero-point Z.
+Only the *code product* ``q_w * q_a`` runs on the (approximate) multiplier;
+the zero-point corrections are exact adder-side arithmetic.  This package
+provides exactly that substrate.
+"""
+
+from repro.quant.quantize import (
+    QuantParams,
+    quantize,
+    dequantize,
+    calibrate_minmax,
+    calibrate_tensor,
+    quantized_linear,
+    pack_linear,
+    PackedLinear,
+)
+
+__all__ = [
+    "QuantParams",
+    "quantize",
+    "dequantize",
+    "calibrate_minmax",
+    "calibrate_tensor",
+    "quantized_linear",
+    "pack_linear",
+    "PackedLinear",
+]

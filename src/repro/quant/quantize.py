@@ -1,0 +1,172 @@
+"""uint8 asymmetric quantization + approximate quantized linear algebra.
+
+Quantization scheme (gemmlowp):  r = S * (q - Z),  q in [0, 255].
+
+For a linear layer  y = A @ W + b  with activation codes qa (za, sa) and
+weight codes qw (zw, sw):
+
+    y = sa*sw * [ sum_k qa*qw  - zw*sum_k qa - za*sum_k qw + k*za*zw ] + b
+
+Only the first term runs on the multiplier array; with an approximate
+multiplier it becomes ``sum_k AM(qw, qa)`` and the paper's control variate V
+is added to it (still inside the sa*sw rescale).  The zero-point corrections
+stay exact (adder-side in hardware).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import control_variate as cv
+from repro.core import multipliers as am
+
+QMIN, QMAX = 0, 255
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Affine quantization parameters.  scale/zero_point broadcast against the
+    quantized tensor (scalars for per-tensor, vectors for per-channel)."""
+
+    scale: jax.Array  # float32
+    zero_point: jax.Array  # int32
+
+    @staticmethod
+    def identity() -> "QuantParams":
+        return QuantParams(jnp.float32(1.0), jnp.int32(0))
+
+
+def calibrate_minmax(lo, hi) -> QuantParams:
+    """Affine parameters covering [lo, hi] (forced to include 0, per TFLite,
+    so that zero pads/ReLU zeros are exactly representable)."""
+    lo = jnp.minimum(jnp.asarray(lo, jnp.float32), 0.0)
+    hi = jnp.maximum(jnp.asarray(hi, jnp.float32), 0.0)
+    scale = jnp.maximum((hi - lo) / (QMAX - QMIN), 1e-12)
+    zp = jnp.clip(jnp.round(QMIN - lo / scale), QMIN, QMAX).astype(jnp.int32)
+    return QuantParams(scale=scale, zero_point=zp)
+
+
+def calibrate_tensor(x, axis: int | None = None) -> QuantParams:
+    """Min/max calibration over a tensor (per-tensor, or per-channel along
+    ``axis`` — the non-reduced axis keeps its extent)."""
+    if axis is None:
+        return calibrate_minmax(jnp.min(x), jnp.max(x))
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    return calibrate_minmax(
+        jnp.min(x, axis=reduce_axes), jnp.max(x, axis=reduce_axes)
+    )
+
+
+def quantize(x, qp: QuantParams) -> jax.Array:
+    """Real -> uint8 codes (stored uint8)."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) / qp.scale) + qp.zero_point
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.uint8)
+
+
+def dequantize(q, qp: QuantParams) -> jax.Array:
+    return (jnp.asarray(q, jnp.int32) - qp.zero_point).astype(jnp.float32) * qp.scale
+
+
+# ---------------------------------------------------------------------------
+# Packed (offline-prepared) approximate linear layers
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedLinear:
+    """Serving-time parameter pack for one approximate quantized linear.
+
+    Produced offline by :func:`pack_linear` from float weights; consumed by
+    :func:`quantized_linear` (and by the fused Pallas kernel path).
+
+    w_q        (k, n) uint8 weight codes
+    w_scale/w_zp   weight quant params (per-tensor)
+    sum_qw     (n,)  int32   column sums of codes (zero-point correction)
+    c, c0      (n,) / (groups, n) float32 control-variate constants
+    bias       (n,) float32 (or None)
+    """
+
+    w_q: jax.Array
+    w_scale: jax.Array
+    w_zp: jax.Array
+    sum_qw: jax.Array
+    c: jax.Array
+    c0: jax.Array
+    bias: jax.Array | None
+
+
+def pack_linear(
+    w: jax.Array,
+    bias: jax.Array | None,
+    mode: am.Mode,
+    m: int,
+    groups: int = 1,
+) -> PackedLinear:
+    """Quantize float weights (k, n) and precompute CV constants offline."""
+    qp = calibrate_tensor(w)
+    w_q = quantize(w, qp)
+    w_i = jnp.asarray(w_q, jnp.int32)
+    if groups == 1:
+        const = cv.cv_constants(w_i, mode, m, reduce_axis=0)
+    else:
+        const = cv.cv_constants_grouped(w_i, mode, m, groups, reduce_axis=0)
+    return PackedLinear(
+        w_q=w_q,
+        w_scale=qp.scale,
+        w_zp=qp.zero_point,
+        sum_qw=jnp.sum(w_i, axis=0, dtype=jnp.int32),
+        c=const.c,
+        c0=const.c0,
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+    )
+
+
+def quantized_linear(
+    a: jax.Array,
+    pack: PackedLinear,
+    a_qp: QuantParams,
+    mode: am.Mode,
+    m: int,
+    use_cv: bool = True,
+    groups: int = 1,
+) -> jax.Array:
+    """Approximate quantized linear: float in -> float out.
+
+    a: (..., k) float activations, quantized on the fly with ``a_qp``
+    (calibrated offline, as in TFLite).  The code-product sum uses the
+    bit-slice matmul forms of :mod:`repro.core.multipliers`; the control
+    variate V is the paper's rank-1 correction.
+    """
+    a_q = quantize(a, a_qp)
+    a_i = jnp.asarray(a_q, jnp.int32)
+    k = a_i.shape[-1]
+
+    acc = am.approx_matmul(a_i, pack.w_q, mode, m).astype(jnp.float32)
+    if use_cv and mode != "exact" and m > 0:
+        const = cv.CVConstants(c=pack.c, c0=pack.c0)
+        if groups == 1:
+            acc = acc + cv.cv_term(a_i, const, mode, m)
+        else:
+            acc = acc + cv.cv_term_grouped(a_i, const, mode, m, groups)
+
+    # Exact zero-point corrections (gemmlowp adder-side arithmetic).
+    sum_qa = jnp.sum(a_i, axis=-1, dtype=jnp.int32).astype(jnp.float32)
+    zw = pack.w_zp.astype(jnp.float32)
+    za = a_qp.zero_point.astype(jnp.float32)
+    acc = (
+        acc
+        - zw * sum_qa[..., None]
+        - za * pack.sum_qw.astype(jnp.float32)
+        + k * za * zw
+    )
+
+    y = acc * (a_qp.scale * pack.w_scale)
+    if pack.bias is not None:
+        y = y + pack.bias
+    return y

@@ -1,0 +1,19 @@
+"""Distributed runtime: fault tolerance (heartbeat, straggler detection,
+resilient step loop), and compute/communication overlap helpers."""
+
+from repro.runtime.fault_tolerance import (
+    Heartbeat,
+    StragglerMonitor,
+    run_resilient,
+    RetryPolicy,
+)
+from repro.runtime.overlap import ag_matmul_overlapped, compressed_psum
+
+__all__ = [
+    "Heartbeat",
+    "StragglerMonitor",
+    "run_resilient",
+    "RetryPolicy",
+    "ag_matmul_overlapped",
+    "compressed_psum",
+]

@@ -1,0 +1,118 @@
+"""Checkpointing: exact restore, async commit, crash consistency, retention,
+and elastic re-mesh restore (multi-device, run in a subprocess)."""
+
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.normal(size=(16, 8)).astype(np.float32),
+                   "b": jnp.asarray(rng.normal(size=(8,)), jnp.bfloat16)},
+        "opt": {"step": np.int32(7), "m": rng.normal(size=(16, 8)).astype(np.float32)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_save_restore_exact():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        t = _tree()
+        mgr.save(t, 5)
+        restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, t))
+        assert step == 5
+        _assert_tree_equal(t, restored)
+
+
+def test_async_save_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(_tree(s), s, blocking=False)
+        mgr.wait()
+        mgr.save(_tree(5), 5)  # triggers gc
+        assert mgr.steps() == [4, 5]
+        restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, _tree()))
+        assert step == 5
+        _assert_tree_equal(_tree(5), restored)
+
+
+def test_crash_consistency_ignores_incomplete():
+    """A step dir without the DONE marker (crash mid-commit) is invisible."""
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(_tree(1), 1)
+        # simulate a crash: shard file written but no DONE marker
+        broken = os.path.join(d, "step_0000000002")
+        os.makedirs(broken)
+        save_pytree(_tree(2), os.path.join(broken, "shard_00000.ckpt"))
+        assert mgr.latest_step() == 1
+        restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, _tree()))
+        assert step == 1
+        _assert_tree_equal(_tree(1), restored)
+
+
+def test_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.ckpt")
+        save_pytree({"w": np.zeros((4, 4))}, path)
+        with pytest.raises(ValueError):
+            load_pytree({"w": jnp.zeros((5, 4))}, path)
+
+
+ELASTIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import CheckpointManager, restore_with_sharding
+    from repro.launch.mesh import make_test_mesh
+
+    d = sys.argv[1]
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "b": jnp.ones((8,), jnp.float32)}
+
+    # save under mesh A (2x4)
+    mesh_a = make_test_mesh((2, 4), ("data", "model"))
+    sh_a = {"w": NamedSharding(mesh_a, P("data", "model")),
+            "b": NamedSharding(mesh_a, P("model"))}
+    placed = jax.tree.map(jax.device_put, tree, sh_a)
+    mgr = CheckpointManager(d)
+    mgr.save(placed, 3)
+
+    # elastic restore under mesh B (8x1) — simulated re-provisioned cluster
+    mesh_b = make_test_mesh((8, 1), ("data", "model"))
+    sh_b = {"w": NamedSharding(mesh_b, P("data", "model")),
+            "b": NamedSharding(mesh_b, P())}
+    restored, step = restore_with_sharding(mgr, jax.tree.map(jnp.zeros_like, tree), sh_b)
+    assert step == 3
+    assert np.array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.mesh.shape["data"] == 8
+    print("ELASTIC_OK")
+""")
+
+
+def test_elastic_remesh_restore():
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run(
+            [sys.executable, "-c", ELASTIC_SCRIPT, d],
+            capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        )
+        assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,156 @@
+"""End-to-end integration: training reduces loss, serving matches training
+numerics, and the paper's technique survives the full model pipeline."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import ApproxPolicy
+from repro.data import SyntheticLMConfig
+from repro.data.synthetic import lm_batch
+from repro.launch.serve import ServeConfig, build_serving_params, make_decode_step, make_prefill_step
+from repro.launch.train import TrainConfig, init_train_state, make_train_step
+from repro.models import build_model
+
+
+def test_lm_training_reduces_loss():
+    cfg = get_config("olmo-1b-reduced")
+    tcfg = TrainConfig(base_lr=1e-2, warmup_steps=5, total_steps=200)
+    dcfg = SyntheticLMConfig(vocab=cfg.vocab, seq_len=64, batch=8,
+                             markov_states=32)
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    losses = []
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+
+def test_grad_compress_training_matches_uncompressed_roughly():
+    cfg = get_config("olmo-1b-reduced")
+    dcfg = SyntheticLMConfig(vocab=cfg.vocab, seq_len=64, batch=8, markov_states=32)
+
+    def run(grad_compress):
+        tcfg = TrainConfig(base_lr=1e-2, warmup_steps=5, total_steps=200,
+                           grad_compress=grad_compress)
+        state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        for i in range(30):
+            batch = {k: jnp.asarray(v) for k, v in lm_batch(dcfg, i).items()}
+            state, metrics = step(state, batch)
+        return float(metrics["loss"])
+
+    plain, compressed = run(False), run(True)
+    assert compressed < plain + 0.3, (plain, compressed)
+
+
+@pytest.mark.parametrize("mode,m", [("perforated", 1), ("recursive", 2)])
+def test_approx_cv_tracks_exact_int8(mode, m):
+    """Teacher-forced argmax agreement: mild approximation + CV must track
+    the EXACT-int8 pack closely (isolates the multiplier error from shared
+    quantization noise; greedy-generation agreement on an untrained model is
+    chaotic by construction, so it is not the right metric)."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"), compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (8, 24), 0, cfg.vocab)
+
+    def argmaxes(policy):
+        scfg = ServeConfig(policy=policy)
+        p = build_serving_params(params, cfg, scfg)
+        return np.asarray(jnp.argmax(api.forward(p, {"tokens": toks}), -1))
+
+    exact = argmaxes(ApproxPolicy("exact", 0))
+    approx = argmaxes(ApproxPolicy(mode, m, use_cv=True))
+    agree = (exact == approx).mean()
+    assert agree > 0.7, agree  # untrained-model logit margins are razor-thin
+    if mode == "perforated":  # high-error multiplier: the CV is what saves it
+        no_cv = argmaxes(ApproxPolicy(mode, m, use_cv=False))
+        agree_no = (exact == no_cv).mean()
+        assert agree > 2 * agree_no, (agree, agree_no)
+
+
+def test_serving_pipeline_generates():
+    """Prefill+decode through packed params runs jitted end to end."""
+    cfg = get_config("olmo-1b-reduced")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(policy=ApproxPolicy("perforated", 2, use_cv=True))
+    packed = build_serving_params(params, cfg, scfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (4, 12), 0, cfg.vocab)
+    prefill = jax.jit(make_prefill_step(cfg, max_len=24, scfg=scfg))
+    decode = jax.jit(make_decode_step(cfg, scfg=scfg))
+    logits, cache = prefill(packed, {"tokens": prompt})
+    tok = jnp.argmax(logits, -1)[:, None]
+    for _ in range(8):
+        logits, cache = decode(packed, tok, cache)
+        tok = jnp.argmax(logits, -1)[:, None]
+        assert bool(jnp.isfinite(logits).all())
+
+
+def test_cv_improves_model_level_fidelity():
+    """The paper's headline at model level: under AGGRESSIVE approximation,
+    logits with CV are much closer to float logits than without CV."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"), compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(6), (4, 16), 0, cfg.vocab)
+    ref = api.forward(params, {"tokens": toks})
+
+    def packed_logits(use_cv):
+        scfg = ServeConfig(policy=ApproxPolicy("perforated", 3, use_cv=use_cv))
+        p = build_serving_params(params, cfg, scfg)
+        return api.forward(p, {"tokens": toks})
+
+    err_cv = float(jnp.abs(packed_logits(True) - ref).mean())
+    err_no = float(jnp.abs(packed_logits(False) - ref).mean())
+    assert err_cv < 0.5 * err_no, (err_cv, err_no)
+
+
+def test_pallas_backend_matches_jnp_backend_in_model():
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"), compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 8), 0, cfg.vocab)
+
+    def logits(backend):
+        scfg = ServeConfig(policy=ApproxPolicy("truncated", 5, backend=backend))
+        p = build_serving_params(params, cfg, scfg)
+        return api.forward(p, {"tokens": toks})
+
+    lj = logits("jnp")
+    lp = logits("pallas")
+    assert float(jnp.abs(lj - lp).max()) < 1e-3
+
+
+def test_auto_policy_respects_budget():
+    """Greedy per-layer policy search: the mixed-policy model stays within
+    the error budget while using aggressive multipliers where it can."""
+    from repro.core.approx_linear import pack_params
+    from repro.core.policy import auto_policy, paper_policies
+
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"), compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, cfg.vocab)
+
+    apply_fn = lambda p, b: api.forward(p, b)
+    policy_fn, rows = auto_policy(
+        apply_fn, params, {"tokens": toks},
+        candidates=paper_policies(use_cv=True),
+        budget_rel_err=0.08, skip=("embed",))
+    assert rows, "no layers considered"
+    labels = {r["policy"] for r in rows}
+    assert any(l != "int8-exact" for l in labels), labels  # used approximation
+
+    mixed = pack_params(params, policy_fn)
+    ref = api.forward(params, {"tokens": toks})
+    out = api.forward(mixed, {"tokens": toks})
+    rel = float(jnp.abs(out - ref).mean() / (jnp.abs(ref).mean() + 1e-12))
+    assert rel < 0.4, rel  # layers compose; stays in a sane band

