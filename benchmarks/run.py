@@ -31,6 +31,7 @@ SUITES = [
     ("table5", "benchmarks.table5_overhead"),
     ("fig10", "benchmarks.fig10_pareto"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("serve", "benchmarks.serve_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]
 

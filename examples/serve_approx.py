@@ -1,22 +1,24 @@
-"""Serve a small model with batched requests on the approximate+CV array
-emulation — prefill + decode with int8 weight codes, CV correction, and an
-int8 KV cache (the EXPERIMENTS.md §Perf serving configuration).
+"""Serve a mixed-length request trace through the continuous-batching
+engine on the approximate+CV array emulation — chunked prefill + slot
+decode with int8 weight codes, CV correction, and an int8 KV pool.
 
-    PYTHONPATH=src python examples/serve_approx.py --batch 8 --gen 48
+Short chat turns and long-document prompts share the same fixed-shape
+decode batch; tokens stream per request via the ``on_token`` callback.
+
+    PYTHONPATH=src python examples/serve_approx.py --requests 10
 """
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import EngineConfig
 from repro.core.policy import ApproxPolicy
 from repro.launch.serve import (ServeConfig, build_serving_params,
-                                make_decode_step, make_prefill_step)
+                                mixed_trace)
 from repro.models import build_model
+from repro.serving import ServingEngine
 
 
 def main() -> None:
@@ -24,9 +26,10 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-4b-reduced")
     ap.add_argument("--mode", default="perforated")
     ap.add_argument("--m", type=int, default=2)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=32)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,31 +40,37 @@ def main() -> None:
     packed = build_serving_params(params, cfg, scfg)
     print(f"arch={cfg.name}  numerics={scfg.policy.label()}  kv=int8")
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
-    max_len = args.prompt_len + args.gen
-    prefill = jax.jit(make_prefill_step(cfg, max_len, scfg=scfg))
-    decode = jax.jit(make_decode_step(cfg, scfg=scfg))
+    ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
+                        prefill_chunk=args.chunk, cache_dtype="int8")
+    eng = ServingEngine(cfg, packed, ecfg)
 
-    t0 = time.time()
-    logits, cache = prefill(packed, {"tokens": prompts})
-    jax.block_until_ready(logits)
-    t_pref = time.time() - t0
-    tok = jnp.argmax(logits, -1)[:, None]
-    outs = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(packed, tok, cache)
-        tok = jnp.argmax(logits, -1)[:, None]
-        outs.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    gen = np.asarray(jnp.concatenate(outs, 1))
-    print(f"prefill: {args.batch} x {args.prompt_len} tok in {t_pref:.2f}s")
-    print(f"decode : {args.batch} x {args.gen} tok in {t_dec:.2f}s "
-          f"({args.batch*args.gen/max(t_dec,1e-9):.1f} tok/s, CPU emulation)")
-    print("sample :", gen[0][:16].tolist())
+    # mixed trace: 2/3 short chat turns, 1/3 long documents, varied budgets
+    stream_of = {}
+
+    def on_token(req, tok):  # streaming consumer (first request only, demo)
+        if req.rid == 0:
+            stream_of.setdefault(req.rid, []).append(tok)
+
+    trace = mixed_trace(cfg, args.requests, args.max_len, args.chunk)
+    for i, (prompt, gen) in enumerate(trace):
+        r = eng.submit(prompt, gen, on_token=on_token)
+        if r.state.value == "rejected":
+            print(f"request {i} rejected: {r.reject_reason}")
+
+    finished = eng.run()
+    snap = eng.metrics.snapshot()
+    print(f"finished {len(finished)} requests "
+          f"({eng.compile_count()} compiled shapes)")
+    print(f"throughput: {snap['gen_tok_per_s']} gen tok/s "
+          f"({snap['total_tok_per_s']} incl. prefill, CPU emulation)")
+    print(f"TTFT mean/p50/max: {snap['ttft_mean_s']}/{snap['ttft_p50_s']}/"
+          f"{snap['ttft_max_s']}s  occupancy={snap['mean_slot_occupancy']}")
+    for r in sorted(finished, key=lambda r: r.rid)[:5]:
+        print(f"  req {r.rid}: prompt {r.prompt_len:3d} -> "
+              f"gen {len(r.generated):2d} [{r.finish_reason}] "
+              f"{r.generated[:10]}")
+    if 0 in stream_of:
+        print("streamed req 0:", stream_of[0])
 
 
 if __name__ == "__main__":

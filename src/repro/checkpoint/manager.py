@@ -1,4 +1,5 @@
-"""Tensor-store checkpointing: msgpack + zstd, atomic renames, async saves.
+"""Tensor-store checkpointing: msgpack + optional zstd, atomic renames,
+async saves.
 
 Layout:  <dir>/step_<N>/shard_<process>.ckpt  +  <dir>/step_<N>/DONE
 Each shard file holds the process-local (addressable) values of every leaf;
@@ -7,6 +8,11 @@ commit protocol (write tmp -> fsync -> rename -> DONE marker) are the
 multi-host ones.  Restores pick the newest step with a DONE marker, so a
 failure mid-save can never corrupt the restore point (crash-consistency is
 tested by killing a save halfway).
+
+Compression is negotiable: shard files carry a 4-byte magic plus a codec
+tag ("zstd" | "zlib" | "none"), so a container without the ``zstandard``
+wheel falls back to stdlib zlib (or raw) and checkpoints stay portable
+between environments.  Legacy headerless zstd frames are still readable.
 """
 
 from __future__ import annotations
@@ -15,13 +21,26 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: best ratio/speed, but not baked into every container
+    import zstandard
+except ImportError:  # pragma: no cover - exercised where the wheel is absent
+    zstandard = None
+
+#: shard-file header: magic + 4-char codec tag, then the compressed payload
+_MAGIC = b"RPK1"
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"  # legacy headerless files
+
+
+def _default_codec() -> str:
+    return "zstd" if zstandard is not None else "zlib"
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
@@ -33,7 +52,8 @@ def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
     return items, treedef
 
 
-def _pack(items: list[tuple[str, np.ndarray]]) -> bytes:
+def _pack(items: list[tuple[str, np.ndarray]], codec: str | None = None) -> bytes:
+    codec = codec or _default_codec()
     payload = {
         key: {
             "dtype": str(arr.dtype),
@@ -42,13 +62,49 @@ def _pack(items: list[tuple[str, np.ndarray]]) -> bytes:
         }
         for key, arr in items
     }
-    raw = msgpack.packb(payload, use_bin_type=True)
-    return zstandard.ZstdCompressor(level=3).compress(raw)
+    # codec tag rides in the msgpack metadata too, so tooling that only sees
+    # the decoded payload still knows how the shard was written
+    raw = msgpack.packb({"__meta__": {"codec": codec}, "leaves": payload},
+                        use_bin_type=True)
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("codec 'zstd' requested but zstandard is not installed")
+        body = zstandard.ZstdCompressor(level=3).compress(raw)
+    elif codec == "zlib":
+        body = zlib.compress(raw, 3)
+    elif codec == "none":
+        body = raw
+    else:
+        raise ValueError(f"unknown checkpoint codec {codec!r}")
+    return _MAGIC + codec.encode("ascii").ljust(4) + body
 
 
 def _unpack(blob: bytes) -> dict[str, np.ndarray]:
-    raw = zstandard.ZstdDecompressor().decompress(blob)
+    if blob[:4] == _MAGIC:
+        codec = blob[4:8].rstrip().decode("ascii")
+        body = blob[8:]
+        if codec == "zstd":
+            if zstandard is None:
+                raise RuntimeError(
+                    "checkpoint was written with zstd but zstandard is not "
+                    "installed; re-save with codec='zlib' or install the wheel")
+            raw = zstandard.ZstdDecompressor().decompress(body)
+        elif codec == "zlib":
+            raw = zlib.decompress(body)
+        elif codec == "none":
+            raw = body
+        else:
+            raise ValueError(f"unknown checkpoint codec {codec!r}")
+    elif blob[:4] == _ZSTD_FRAME_MAGIC:  # pre-header files (always zstd)
+        if zstandard is None:
+            raise RuntimeError(
+                "legacy zstd checkpoint but zstandard is not installed")
+        raw = zstandard.ZstdDecompressor().decompress(blob)
+    else:  # pre-header uncompressed msgpack
+        raw = blob
     payload = msgpack.unpackb(raw, raw=False)
+    if "__meta__" in payload:
+        payload = payload["leaves"]
     out = {}
     for key, rec in payload.items():
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
@@ -56,12 +112,16 @@ def _unpack(blob: bytes) -> dict[str, np.ndarray]:
     return out
 
 
-def save_pytree(tree: Any, path: str) -> None:
-    """Atomic single-file save (library-level; the manager adds steps/async)."""
+def save_pytree(tree: Any, path: str, codec: str | None = None) -> None:
+    """Atomic single-file save (library-level; the manager adds steps/async).
+
+    ``codec`` is "zstd" | "zlib" | "none"; default prefers zstd when the
+    wheel is available and falls back to stdlib zlib otherwise.
+    """
     items, _ = _flatten(tree)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(_pack(items))
+        f.write(_pack(items, codec))
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)

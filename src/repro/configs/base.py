@@ -14,6 +14,23 @@ from typing import Literal
 
 
 @dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Continuous-batching serving knobs (consumed by ``repro.serving``).
+
+    ``slots`` fixes the decode batch shape (the jitted step never
+    recompiles); ``max_len`` is the per-slot KV capacity; prompts are
+    processed in ``prefill_chunk``-token pieces interleaved with decode.
+    """
+
+    slots: int = 8
+    max_len: int = 256
+    prefill_chunk: int = 32
+    max_queue: int = 256
+    cache_dtype: str = "bfloat16"  # "bfloat16" | "float32" | "int8"
+    interleave: bool = True  # alternate prefill/decode when both are pending
+
+
+@dataclasses.dataclass(frozen=True)
 class ArchConfig:
     name: str
     family: Literal["dense", "moe", "hybrid", "vlm", "audio", "ssm"]

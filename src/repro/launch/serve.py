@@ -8,16 +8,20 @@ exactly the paper's deployment story (same network, different MAC array).
 `make_prefill_step` / `make_decode_step` build the sharded serving steps the
 dry-run lowers for the prefill_32k / decode_32k / long_500k cells.
 
-The CLI serves a reduced model with batched requests:
+The CLI drives the continuous-batching engine (repro.serving) on a reduced
+model with a mixed-length request trace:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b-reduced \
-        --mode perforated --m 2
+    PYTHONPATH=src python -m repro.launch.serve --engine --requests 8 \
+        --arch olmo-1b-reduced --mode perforated --m 2
+
+``--legacy`` keeps the old lock-step rectangular-batch loop for comparison.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 from typing import Any
 
@@ -26,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, EngineConfig
 from repro.core.approx_linear import pack_params
 from repro.core.policy import ApproxPolicy, uniform_policy
 from repro.models import build_model
@@ -98,37 +102,71 @@ def make_decode_step(cfg: ArchConfig, mesh=None, scfg: ServeConfig = ServeConfig
 
 
 # ---------------------------------------------------------------------------
-# CLI: batched greedy generation on a reduced model (CPU demo path)
+# CLI: continuous-batching engine (default) / legacy lock-step demo
 # ---------------------------------------------------------------------------
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b-reduced")
-    ap.add_argument("--mode", default="perforated",
-                    choices=["exact", "perforated", "truncated", "recursive", "float"])
-    ap.add_argument("--m", type=int, default=2)
-    ap.add_argument("--no-cv", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
+def _prepare_params(cfg: ArchConfig, args):
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
+    if args.mode == "float":
+        return params, "float"
+    scfg = ServeConfig(
+        policy=ApproxPolicy(args.mode, 0 if args.mode == "exact" else args.m,
+                            use_cv=not args.no_cv)
+    )
+    return build_serving_params(params, cfg, scfg), scfg.policy.label()
 
-    if args.mode != "float":
-        scfg = ServeConfig(
-            policy=ApproxPolicy(args.mode if args.mode != "exact" else "exact",
-                                0 if args.mode == "exact" else args.m,
-                                use_cv=not args.no_cv)
-        )
-        params = build_serving_params(params, cfg, scfg)
-        label = scfg.policy.label()
-    else:
-        label = "float"
 
+def mixed_trace(cfg: ArchConfig, n_requests: int, max_len: int,
+                prefill_chunk: int, seed: int = 0):
+    """A heterogeneous request trace: short chat turns + long documents."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for i in range(n_requests):
+        if i % 3 == 2:  # long-document request
+            plen = int(rng.integers(max_len // 2, max(max_len - 16, max_len // 2 + 1)))
+        else:  # short chat turn
+            plen = int(rng.integers(2, max(prefill_chunk, 3)))
+        gen = int(rng.integers(4, 17))
+        gen = min(gen, max_len - plen)
+        plen = min(plen, max_len - gen)
+        trace.append((rng.integers(0, cfg.vocab, plen).tolist(), gen))
+    return trace
+
+
+def run_engine(args) -> dict:
+    from repro.serving import ServingEngine
+
+    cfg = get_config(args.arch)
+    params, label = _prepare_params(cfg, args)
+    ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
+                        prefill_chunk=args.chunk, cache_dtype=args.cache_dtype)
+    eng = ServingEngine(cfg, params, ecfg)
+    print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
+          f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
+          f"kv={ecfg.cache_dtype}")
+
+    trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
+    for prompt, gen in trace:
+        r = eng.submit(prompt, gen)
+        if r.state.value == "rejected":
+            print(f"  request {r.rid} rejected: {r.reject_reason}")
+    finished = eng.run()
+    snap = eng.metrics.snapshot()
+    print(f"finished {len(finished)}/{len(trace)} requests, "
+          f"{eng.compile_count()} compiled shapes")
+    print(json.dumps(snap, indent=2))
+    for r in finished[:4]:
+        print(f"  req {r.rid}: prompt {r.prompt_len:4d} -> gen "
+              f"{len(r.generated):3d} [{r.finish_reason}] "
+              f"sample {r.generated[:8]}")
+    return snap
+
+
+def run_legacy(args) -> None:
+    cfg = get_config(args.arch)
+    params, label = _prepare_params(cfg, args)
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
     max_len = args.prompt_len + args.gen
@@ -150,6 +188,36 @@ def main(argv=None) -> None:
     print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
           f"({args.batch*args.gen/dt:.1f} tok/s)")
     print("sample:", np.asarray(gen[0])[:16].tolist())
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b-reduced")
+    ap.add_argument("--mode", default="perforated",
+                    choices=["exact", "perforated", "truncated", "recursive", "float"])
+    ap.add_argument("--m", type=int, default=2)
+    ap.add_argument("--no-cv", action="store_true")
+    # engine path (default)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine (default path)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="old lock-step rectangular batch loop")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--cache-dtype", default="bfloat16",
+                    choices=["bfloat16", "float32", "int8"])
+    # legacy path knobs
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    if args.legacy:
+        run_legacy(args)
+    else:
+        run_engine(args)
 
 
 if __name__ == "__main__":

@@ -541,6 +541,195 @@ def prefill(params: Params, batch: dict, cfg: ArchConfig, max_len: int,
     return logits, cache
 
 
+# ---------------------------------------------------------------------------
+# serving: slot-indexed decode (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# The serving engine keeps ONE pooled cache of shape (slots, ...) with a
+# per-slot write cursor ("lengths") instead of the single shared "pos"
+# scalar.  ``decode_slots`` processes a fixed-shape (slots, C) token block
+# where each row advances by its own ``n_valid[b] <= C`` tokens:
+#
+#   * C == 1           -> continuous decode over heterogeneous sequences;
+#   * C == chunk size  -> one bounded-shape chunk of a prompt (chunked
+#                         prefill), interleaved with decode iterations.
+#
+# Rows with n_valid == 0 are padding: their K/V writes land beyond their
+# cursor (never attended, overwritten by the slot's next real tokens) and
+# their cursor does not move — so the jitted step only ever sees the two
+# shapes (slots, 1) and (slots, chunk) and never recompiles mid-serve.
+
+
+def _slot_unsupported(cfg: ArchConfig) -> str | None:
+    if cfg.window is not None:
+        return "sliding-window ring caches have no per-slot phase yet"
+    if cfg.parallel_ssm:
+        return "parallel-SSM state is not slot-managed yet"
+    if cfg.attn == "none":
+        return "arch has no attention cache"
+    return None
+
+
+def init_slot_cache(cfg: ArchConfig, slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    """Pooled (slots, ...) decode cache with per-slot write cursors."""
+    reason = _slot_unsupported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"slot decode for {cfg.name}: {reason}")
+    cache = init_cache(cfg, slots, max_len, dtype)
+    del cache["pos"]
+    cache["lengths"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def _slot_update(cache_arr: jax.Array, update: jax.Array, starts: jax.Array,
+                 n_valid: jax.Array):
+    """Per-row write: row b's first ``n_valid[b]`` update columns land at
+    [starts[b], starts[b]+n_valid[b]) on the -2 axis of row b.
+
+    Padding columns (>= n_valid[b]) are blended back to the OLD cache
+    values, so they never write.  This matters beyond hygiene:
+    ``dynamic_update_slice`` CLAMPS out-of-range starts, so a padding row
+    (n_valid == 0) whose cursor exceeds S - C would otherwise have its
+    block write clamped back over valid, attended entries.  Active rows
+    never clamp (the engine guarantees starts + n_valid <= S on whole-chunk
+    boundaries), so the blend is exact for them."""
+    c_len = update.shape[-2]
+
+    def write(c, u, st, nv):
+        start = (0,) * (c.ndim - 2) + (st, 0)
+        old = jax.lax.dynamic_slice(c, start, u.shape)
+        mask = (jnp.arange(c_len) < nv).reshape(
+            (1,) * (u.ndim - 2) + (c_len, 1))
+        return jax.lax.dynamic_update_slice(c, jnp.where(mask, u, old), start)
+
+    return jax.vmap(write)(cache_arr, update, starts, n_valid)
+
+
+def _gqa_slots(bp, h, lc: dict, lengths, n_valid, cfg: ArchConfig, positions):
+    """Multi-token slot attention.  h: (B, C, D); lc k/v: (B, Hkv, S, hd);
+    positions: (B, C) absolute positions lengths[b] + i."""
+    from repro.nn.attention import _from_cache, _to_cache
+
+    acfg = cfg.attn_config()
+    b, c, _ = h.shape
+    q, k, v = attn_lib._project_qkv(bp, h, acfg, attn_lib._angles(acfg, positions))
+    k_c = _slot_update(lc["k"], _to_cache(jnp.moveaxis(k, 1, 2), lc["k"].dtype),
+                       lengths, n_valid)
+    v_c = _slot_update(lc["v"], _to_cache(jnp.moveaxis(v, 1, 2), lc["v"].dtype),
+                       lengths, n_valid)
+    hq, hkv, d = acfg.n_heads, acfg.kv_heads, acfg.head_dim
+    g = hq // hkv
+    qg = q.reshape(b, c, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bhkd->bhgqk", qg, _from_cache(k_c, q.dtype)) * (
+        d**-0.5)
+    s = k_c.shape[2]
+    # causal + filled-cache combined: key j visible to query i iff j <= pos_i
+    mask = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B, C, S)
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(q.dtype)
+    ctx = jnp.einsum("bhgqk,bhkd->bqhgd", probs, _from_cache(v_c, q.dtype))
+    y = dense(bp["o"], ctx.reshape(b, c, acfg.q_dim), name="o")
+    return y, {"k": k_c, "v": v_c}
+
+
+def _mla_slots(bp, h, lc: dict, lengths, n_valid, cfg: ArchConfig, positions):
+    """Weight-absorbed MLA slot attention over the pooled latent cache."""
+    mcfg = cfg.mla_config()
+    b, c, _ = h.shape
+    q_nope, q_rope = attn_lib._mla_q(bp, h, mcfg, positions)
+    latent_t, k_rope_t = attn_lib._mla_latent(bp, h, mcfg, positions)
+    lat_c = _slot_update(lc["latent"], latent_t.astype(lc["latent"].dtype),
+                         lengths, n_valid)
+    rope_c = _slot_update(lc["rope"], k_rope_t.astype(lc["rope"].dtype),
+                          lengths, n_valid)
+
+    w_b = bp["kv_b"]["w"].reshape(
+        mcfg.kv_lora_rank, mcfg.n_heads, mcfg.qk_nope_dim + mcfg.v_head_dim
+    )
+    w_uk, w_uv = w_b[..., : mcfg.qk_nope_dim], w_b[..., mcfg.qk_nope_dim :]
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = mcfg.qk_head_dim**-0.5
+    lat = lat_c.astype(h.dtype)
+    logits = (
+        jnp.einsum("bqhr,bkr->bhqk", q_lat, lat)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, rope_c.astype(h.dtype))
+    ) * scale
+    s = lat_c.shape[1]
+    mask = jnp.arange(s)[None, None, :] <= positions[:, :, None]  # (B, C, S)
+    logits = jnp.where(mask[:, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(h.dtype)
+    ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, lat)
+    ctx = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, w_uv)
+    y = dense(bp["o"], ctx.reshape(b, c, -1), name="o")
+    return y, {"latent": lat_c, "rope": rope_c}
+
+
+def _block_decode_slots(bp: dict, x, lc: dict, lengths, n_valid,
+                        cfg: ArchConfig, positions, mesh):
+    h = apply_norm(cfg.norm, bp["attn_norm"], x)
+    if cfg.attn == "mla":
+        a, new = _mla_slots(bp["attn"], h, lc, lengths, n_valid, cfg, positions)
+    else:
+        a, new = _gqa_slots(bp["attn"], h, lc, lengths, n_valid, cfg, positions)
+    x = (x + a).astype(x.dtype)
+    h = apply_norm(cfg.norm, bp["mlp_norm"], x)
+    if cfg.mlp == "moe" and "router" in bp["mlp"]:
+        m = moe_lib.moe_apply(bp["mlp"], h, cfg.moe_config(), mesh=mesh)
+    elif cfg.mlp == "gelu":
+        m = gelu_mlp(bp["mlp"], h)
+    else:
+        m = swiglu(bp["mlp"], h)
+    return (x + m).astype(x.dtype), new
+
+
+def decode_slots(params: Params, tokens: jax.Array, cache: dict,
+                 cfg: ArchConfig, n_valid: jax.Array,
+                 mesh=None) -> tuple[jax.Array, dict]:
+    """Fixed-shape continuous-batching step.
+
+    tokens: (slots, C) int32 — row b's first ``n_valid[b]`` entries are real
+    (its next prompt chunk, or its one decode token), the rest padding.
+    Returns (logits (slots, C, V) f32, cache with per-row cursors advanced
+    by ``n_valid``).  The caller reads row b's logits at column
+    ``n_valid[b] - 1``.
+    """
+    reason = _slot_unsupported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"slot decode for {cfg.name}: {reason}")
+    b, c = tokens.shape
+    cdt = _dtype(cfg.compute_dtype)
+    lengths = cache["lengths"]
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    positions = lengths[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    x = embed(params["embed"], tokens).astype(cdt)
+    new_cache = dict(cache)
+
+    dense_keys = ("latent", "rope") if cfg.attn == "mla" else ("k", "v")
+    for i, bp in enumerate(params.get("dense_blocks", [])):
+        lc = {k: cache[f"dense_{k}"][i] for k in dense_keys}
+        x, new = _block_decode_slots(bp, x, lc, lengths, n_valid, cfg,
+                                     positions, mesh)
+        for k in dense_keys:
+            new_cache[f"dense_{k}"] = new_cache[f"dense_{k}"].at[i].set(new[k])
+
+    layer_keys = [k for k in ("latent", "rope", "k", "v") if k in cache]
+    lcs = {k: cache[k] for k in layer_keys}
+
+    def body(x, inp):
+        bp, lc = inp
+        return _block_decode_slots(bp, x, lc, lengths, n_valid, cfg, positions,
+                                   mesh)
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], lcs))
+    new_cache.update(new_layers)
+    new_cache["lengths"] = lengths + n_valid
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits_head(params, x)
+    return logits, new_cache
+
+
 def _ssm_with_state(p, x, scfg):
     """SSM prefill that also returns the final (conv, h) state."""
     y = ssm_lib.ssm_prefill(p, x, scfg)

@@ -53,6 +53,21 @@ class ModelApi:
     prefill: Callable  # (params, batch, max_len, mesh=None) -> (logits, cache)
     decode_step: Callable  # (params, tokens, cache, mesh=None) -> (logits, cache)
     init_cache: Callable  # (batch, max_len, dtype) -> cache
+    # continuous-batching surface (serving engine): pooled per-slot cache +
+    # fixed-shape multi-token step with per-slot cursors
+    init_slot_cache: Callable = None  # (slots, max_len, dtype) -> cache
+    decode_slots: Callable = None  # (params, tokens, cache, n_valid, mesh=None)
+
+    @property
+    def supports_slots(self) -> bool:
+        """True when the arch can serve through the slot engine."""
+        if not self.cfg.has_decode:
+            return False
+        if self.cfg.rwkv:
+            return True
+        from repro.models.lm import _slot_unsupported
+
+        return _slot_unsupported(self.cfg) is None
 
 
 def build_model(cfg: ArchConfig) -> ModelApi:
@@ -69,6 +84,10 @@ def build_model(cfg: ArchConfig) -> ModelApi:
             decode_step=lambda p, t, c, mesh=None: m.decode_step(p, t, c, cfg, mesh),
             init_cache=lambda batch, max_len=0, dtype=jnp.bfloat16: m.init_cache(
                 cfg, batch, max_len, dtype),
+            init_slot_cache=lambda slots, max_len=0, dtype=jnp.bfloat16:
+                m.init_slot_cache(cfg, slots, max_len, dtype),
+            decode_slots=lambda p, t, c, n_valid, mesh=None:
+                m.decode_slots(p, t, c, cfg, n_valid, mesh),
         )
     from repro.models import lm as m
 
@@ -82,6 +101,10 @@ def build_model(cfg: ArchConfig) -> ModelApi:
         decode_step=lambda p, t, c, mesh=None: m.decode_step(p, t, c, cfg, mesh),
         init_cache=lambda batch, max_len, dtype=jnp.bfloat16: m.init_cache(
             cfg, batch, max_len, dtype),
+        init_slot_cache=lambda slots, max_len, dtype=jnp.bfloat16:
+            m.init_slot_cache(cfg, slots, max_len, dtype),
+        decode_slots=lambda p, t, c, n_valid, mesh=None:
+            m.decode_slots(p, t, c, cfg, n_valid, mesh),
     )
 
 

@@ -160,6 +160,66 @@ def prefill(params, batch, cfg: ArchConfig, max_len: int = 0, mesh=None,
     return logits, cache
 
 
+def init_slot_cache(cfg: ArchConfig, slots: int, max_len: int = 0,
+                    dtype=jnp.bfloat16) -> dict:
+    """Per-slot recurrent state (the RWKV 'KV pool' is O(1) per slot)."""
+    cache = init_cache(cfg, slots, max_len, dtype)
+    del cache["pos"]
+    cache["lengths"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def decode_slots(params, tokens, cache, cfg: ArchConfig, n_valid,
+                 mesh=None):
+    """Fixed-shape continuous-batching step for the recurrent arch.
+
+    tokens: (slots, C); row b consumes its first ``n_valid[b]`` tokens.  The
+    chunk is a scan of C single-token steps whose state writes are masked
+    per row by ``i < n_valid[b]`` — rows past their valid length (and idle
+    slots, n_valid == 0) keep their state bit-exact.  Returns
+    (logits (slots, C, V) f32, advanced cache).
+    """
+    b, c = tokens.shape
+    cdt = _dtype(cfg.compute_dtype)
+    rcfg = cfg.rwkv_config()
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    states0 = {k: cache[k] for k in ("shift_tm", "shift_cm", "wkv")}
+
+    def block_body(x, inp):
+        bp, st = inp
+        h = apply_norm("layernorm", bp["ln1"], x)
+        tm_out, shift_tm, wkv = rwkv_lib.time_mix_step(
+            bp["tm"], h, rcfg, st["shift_tm"], st["wkv"]
+        )
+        x = x + tm_out
+        h = apply_norm("layernorm", bp["ln2"], x)
+        cm_out, shift_cm = rwkv_lib.channel_mix(bp["cm"], h, st["shift_cm"])
+        x = x + cm_out
+        return x, {"shift_tm": shift_tm.astype(st["shift_tm"].dtype),
+                   "shift_cm": shift_cm.astype(st["shift_cm"].dtype),
+                   "wkv": wkv}
+
+    def time_step(states, i):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+        x = embed(params["embed"], tok).astype(cdt)
+        x = apply_norm("layernorm", params["ln0"], x)
+        x, new_states = jax.lax.scan(block_body, x, (params["blocks"], states))
+        x = apply_norm("layernorm", params["final_norm"], x)
+        logits = _logits_head(params, x[:, 0])
+        keep = i < n_valid  # (B,) — leaves are (L, B, ...)
+        merged = jax.tree.map(
+            lambda new, old: jnp.where(
+                keep.reshape((1, -1) + (1,) * (new.ndim - 2)), new, old),
+            new_states, states)
+        return merged, logits
+
+    states, logits = jax.lax.scan(time_step, states0,
+                                  jnp.arange(c, dtype=jnp.int32))
+    new_cache = dict(states)
+    new_cache["lengths"] = cache["lengths"] + n_valid
+    return jnp.moveaxis(logits, 0, 1), new_cache
+
+
 def decode_step(params, tokens, cache, cfg: ArchConfig, mesh=None):
     cdt = _dtype(cfg.compute_dtype)
     x = embed(params["embed"], tokens).astype(cdt)

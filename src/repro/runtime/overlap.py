@@ -25,6 +25,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.parallel.sharding import shard_map_compat
 from jax.sharding import PartitionSpec as P
 
 
@@ -78,12 +80,11 @@ def rs_matmul_overlapped(x: jax.Array, w: jax.Array, mesh, axis: str) -> jax.Arr
             )
         return out.astype(xs.dtype)
 
-    return jax.shard_map(
+    return shard_map_compat(
         shard_fn,
         mesh=mesh,
         in_specs=(P(*((None,) * (x.ndim - 1) + (axis,))), P(axis, None)),
         out_specs=P(),
-        check_vma=False,
     )(x, w)
 
 
@@ -110,12 +111,11 @@ def compressed_psum(grads: Any, mesh, axis: str) -> Any:
             deq = qs.astype(jnp.float32) * ss.reshape((n,) + (1,) * gl.ndim)
             return jnp.mean(deq, axis=0).astype(gl.dtype)
 
-        return jax.shard_map(
+        return shard_map_compat(
             shard_fn,
             mesh=mesh,
             in_specs=P(*((None,) * g.ndim)),
             out_specs=P(*((None,) * g.ndim)),
-            check_vma=False,
         )(g)
 
     return jax.tree.map(leaf_fn, grads)

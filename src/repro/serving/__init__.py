@@ -1,0 +1,71 @@
+"""Continuous-batching serving for approximate-multiplier inference.
+
+The paper's deployment story is inference-only — a trained network mapped
+onto an approximate MAC array with the control-variate correction — so
+serving is the product surface of this reproduction.  This package turns
+the one-shot ``prefill`` / ``decode_step`` model API into an engine that
+serves heterogeneous request traffic (short chat turns and long documents
+in the same batch) for every multiplier mode and policy.
+
+Architecture
+============
+
+::
+
+    submit() ──> AdmissionController ──> RequestQueue (priority+FIFO)
+                                              │ admit into free slots
+                                              v
+    ┌──────────────────────── engine iteration ───────────────────────┐
+    │  SlotScheduler: one fixed-shape batch per step                  │
+    │    PREFILL (slots, chunk) — next prompt chunk of every          │
+    │        prefilling request (chunked prefill, several at once)    │
+    │    DECODE  (slots, 1)    — last token of every decoding request │
+    │                     │                                           │
+    │                     v                                           │
+    │  jitted ModelApi.decode_slots over the pooled SlotPool cache    │
+    │    (slots, heads, max_len, dim) K/V (or MLA latent / RWKV       │
+    │    state) + per-slot write cursors; rows advance by n_valid     │
+    │                     │                                           │
+    │                     v                                           │
+    │  postprocess: greedy token per finished row -> stream via       │
+    │  on_token, evict finished slots, EngineMetrics accounting       │
+    └─────────────────────────────────────────────────────────────────┘
+
+Design invariants:
+
+  * **Two compiled shapes, ever.**  Every iteration is either the
+    ``(slots, 1)`` decode shape or the ``(slots, prefill_chunk)`` prefill
+    shape, so the jitted approximate+CV step compiles exactly twice and the
+    engine never stalls on mid-traffic recompilation.
+  * **Per-slot cursors, masked attention.**  Each slot has its own write
+    cursor; attention masks keys at ``j > position``, so stale entries from
+    a slot's previous occupant are never visible and eviction is O(1).
+  * **Token-identical to the sequential path.**  Greedy outputs equal the
+    per-request ``prefill`` + ``decode_step`` baseline for float, exact
+    int8, and approximate+CV parameters (tests/test_serving_engine.py).
+  * **Numerics live in the parameters.**  The engine is mode-agnostic;
+    ``build_serving_params`` decides float vs int8 vs approximate+CV.
+
+Follow-ons tracked in ROADMAP.md: paged/block KV allocation, ring-buffer
+and SSM slot state (hymba), mixed prefill+decode rows in one call,
+multi-host request routing.
+"""
+
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_pool import SlotPool
+from repro.serving.metrics import EngineMetrics
+from repro.serving.request import (AdmissionController, Request, RequestQueue,
+                                   RequestState)
+from repro.serving.scheduler import ScheduledBatch, SlotScheduler
+
+__all__ = [
+    "ServingEngine",
+    "SlotPool",
+    "EngineMetrics",
+    "AdmissionController",
+    "Request",
+    "RequestQueue",
+    "RequestState",
+    "ScheduledBatch",
+    "SlotScheduler",
+]

@@ -1,0 +1,161 @@
+"""The continuous-batching serving engine.
+
+:class:`ServingEngine` ties the pieces together: submit() runs admission
+control and enqueues; step() admits into free slots, asks the scheduler for
+one fixed-shape batch, runs the jitted slot step, and advances every
+participating request (streaming tokens to callbacks as they decode).
+
+The same engine serves float, exact-int8, and approximate+CV packed
+parameters — numerics live entirely in the parameter representation
+(``repro.launch.serve.build_serving_params``), not in the engine.
+
+Generation is greedy (argmax), matching the sequential
+``prefill``/``decode_step`` baseline token for token — the equivalence
+contract tested by tests/test_serving_engine.py.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, EngineConfig
+from repro.models import ModelApi, build_model
+from repro.serving.kv_pool import SlotPool
+from repro.serving.metrics import EngineMetrics
+from repro.serving.request import (AdmissionController, Request, RequestQueue,
+                                   RequestState)
+from repro.serving.scheduler import ScheduledBatch, SlotScheduler
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = EngineConfig(),
+                 mesh=None, api: ModelApi | None = None) -> None:
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.params = params
+        self.api = api or build_model(cfg)
+        self.pool = SlotPool(self.api, ecfg.slots, ecfg.max_len, ecfg.cache_dtype)
+        self.queue = RequestQueue()
+        self.admission = AdmissionController(ecfg.max_queue, ecfg.max_len,
+                                             ecfg.prefill_chunk)
+        self.scheduler = SlotScheduler(ecfg.slots, ecfg.prefill_chunk,
+                                       ecfg.interleave)
+        self.metrics = EngineMetrics()
+        self.active: dict[int, Request] = {}
+        self._rid = itertools.count()
+        decode_slots = self.api.decode_slots
+        # one jitted callable, two shapes ever: (slots, 1) and (slots, chunk)
+        self._step_fn = jax.jit(
+            lambda p, t, c, nv: decode_slots(p, t, c, nv, mesh=mesh))
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, priority: int = 0,
+               eos_id: int | None = None,
+               on_token: Callable | None = None) -> Request:
+        """Admission-checked enqueue; returns the Request (maybe REJECTED)."""
+        req = Request(rid=next(self._rid), prompt=[int(t) for t in prompt],
+                      max_new_tokens=int(max_new_tokens), priority=priority,
+                      eos_id=eos_id, on_token=on_token)
+        self.metrics.submitted += 1
+        ok, reason = self.admission.check(self.queue, req)
+        if not ok:
+            req.state = RequestState.REJECTED
+            req.reject_reason = reason
+            self.metrics.rejected += 1
+            return req
+        self.queue.push(req)
+        return req
+
+    # -- engine loop ---------------------------------------------------------
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and not len(self.queue)
+
+    def step(self) -> list[Request]:
+        """One engine iteration; returns requests that finished in it."""
+        self.scheduler.admit(self.queue, self.pool, self.active)
+        batch = self.scheduler.next_batch(self.active)
+        if batch is None:
+            return []
+        logits, new_cache = self._step_fn(
+            self.params, jnp.asarray(batch.tokens), self.pool.cache,
+            jnp.asarray(batch.n_valid))
+        self.pool.update(new_cache)
+        finished, emitted = (self._post_prefill(batch, logits)
+                             if batch.kind == "prefill"
+                             else self._post_decode(batch, logits))
+        self.metrics.record_step(
+            batch.kind, self.pool.occupancy, len(self.queue),
+            prompt_tokens=int(batch.n_valid.sum()) if batch.kind == "prefill" else 0,
+            generated_tokens=emitted)
+        return finished
+
+    def run(self, max_steps: int | None = None) -> list[Request]:
+        """Drive until idle (or ``max_steps``); returns finished requests."""
+        finished: list[Request] = []
+        steps = 0
+        while not self.idle:
+            finished.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return finished
+
+    def compile_count(self) -> int:
+        """Number of shapes the jitted slot step has compiled for."""
+        return self._step_fn._cache_size()
+
+    # -- postprocessing ------------------------------------------------------
+
+    def _post_prefill(self, batch: ScheduledBatch,
+                      logits) -> tuple[list[Request], int]:
+        finished, emitted = [], 0
+        completing = any(r.prefilled + batch.n_valid[r.slot] >= r.prompt_len
+                         for r in batch.rows)
+        # argmax on device: ship a (slots, C) int array, not (slots, C, V)
+        toks = np.asarray(jnp.argmax(logits, -1)) if completing else None
+        for r in batch.rows:
+            n = int(batch.n_valid[r.slot])
+            r.prefilled += n
+            if r.prefilled >= r.prompt_len:
+                # prompt complete: its last token's logits seed generation
+                tok = int(toks[r.slot, n - 1])
+                r.emit(tok)
+                emitted += 1
+                self.metrics.record_first_token(r)
+                r.state = RequestState.DECODE
+                if self._done(r, tok):
+                    finished.append(self._finish(r))
+        return finished, emitted
+
+    def _post_decode(self, batch: ScheduledBatch,
+                     logits) -> tuple[list[Request], int]:
+        finished = []
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for r in batch.rows:
+            tok = int(toks[r.slot])
+            r.emit(tok)
+            if self._done(r, tok):
+                finished.append(self._finish(r))
+        return finished, len(batch.rows)
+
+    def _done(self, r: Request, tok: int) -> bool:
+        return (len(r.generated) >= r.max_new_tokens
+                or (r.eos_id is not None and tok == r.eos_id))
+
+    def _finish(self, r: Request) -> Request:
+        import time
+
+        r.state = RequestState.FINISHED
+        r.t_finish = time.time()
+        self.pool.release(r.slot)
+        del self.active[r.slot]
+        self.metrics.record_finish(r)
+        return r

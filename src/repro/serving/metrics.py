@@ -1,0 +1,92 @@
+"""Per-engine serving metrics.
+
+Counters are recorded on the host around each engine iteration; nothing
+here touches device state.  ``snapshot()`` derives the headline serving
+numbers: decode tokens/s, end-to-end tokens/s, time-to-first-token
+(mean/p50/max), mean queue depth, and mean slot occupancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(q * (len(ys) - 1)))))
+    return ys[i]
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    t_start: float = dataclasses.field(default_factory=time.time)
+
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+
+    submitted: int = 0
+    rejected: int = 0
+    finished: int = 0
+
+    ttfts: list[float] = dataclasses.field(default_factory=list)
+    latencies: list[float] = dataclasses.field(default_factory=list)
+
+    _occupancy_sum: float = 0.0
+    _queue_depth_sum: float = 0.0
+    _samples: int = 0
+
+    # -- recording -----------------------------------------------------------
+
+    def record_step(self, kind: str, occupancy: float, queue_depth: int,
+                    prompt_tokens: int = 0, generated_tokens: int = 0) -> None:
+        if kind == "prefill":
+            self.prefill_steps += 1
+        else:
+            self.decode_steps += 1
+        self.prompt_tokens += prompt_tokens
+        self.generated_tokens += generated_tokens
+        self._occupancy_sum += occupancy
+        self._queue_depth_sum += queue_depth
+        self._samples += 1
+
+    def record_first_token(self, req) -> None:
+        if req.ttft is not None:
+            self.ttfts.append(req.ttft)
+
+    def record_finish(self, req) -> None:
+        self.finished += 1
+        if req.t_finish is not None:
+            self.latencies.append(req.t_finish - req.t_submit)
+
+    # -- derived -------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        elapsed = max(time.time() - self.t_start, 1e-9)
+        total_tok = self.prompt_tokens + self.generated_tokens
+        return {
+            "elapsed_s": round(elapsed, 4),
+            "requests_finished": self.finished,
+            "requests_rejected": self.rejected,
+            "prompt_tokens": self.prompt_tokens,
+            "generated_tokens": self.generated_tokens,
+            "gen_tok_per_s": round(self.generated_tokens / elapsed, 2),
+            "total_tok_per_s": round(total_tok / elapsed, 2),
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "ttft_mean_s": round(sum(self.ttfts) / len(self.ttfts), 4)
+            if self.ttfts else None,
+            "ttft_p50_s": round(_percentile(self.ttfts, 0.5), 4)
+            if self.ttfts else None,
+            "ttft_max_s": round(max(self.ttfts), 4) if self.ttfts else None,
+            "latency_mean_s": round(sum(self.latencies) / len(self.latencies), 4)
+            if self.latencies else None,
+            "mean_slot_occupancy": round(self._occupancy_sum / self._samples, 3)
+            if self._samples else 0.0,
+            "mean_queue_depth": round(self._queue_depth_sum / self._samples, 2)
+            if self._samples else 0.0,
+        }

@@ -1,0 +1,137 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A :class:`Request` carries one generation job through the state machine
+
+    QUEUED -> PREFILL -> DECODE -> FINISHED
+       \\-> REJECTED (admission control)
+
+:class:`RequestQueue` orders admission by (priority, arrival): lower
+``priority`` values run first, FIFO within a priority class.
+:class:`AdmissionController` bounds queue depth and rejects jobs that can
+never fit a slot, so the engine fails fast instead of deadlocking a slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+import time
+from typing import Callable
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+    REJECTED = "rejected"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation job and its per-request serving telemetry."""
+
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    priority: int = 0  # lower = more urgent; FIFO within a class
+    eos_id: int | None = None
+    #: streaming hook, called as on_token(request, token) per generated token
+    on_token: Callable | None = None
+
+    state: RequestState = RequestState.QUEUED
+    reject_reason: str | None = None
+    slot: int | None = None
+    prefilled: int = 0  # prompt tokens already processed (chunked prefill)
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    t_submit: float = dataclasses.field(default_factory=time.time)
+    t_first_token: float | None = None
+    t_finish: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def finished(self) -> bool:
+        return self.state == RequestState.FINISHED
+
+    @property
+    def finish_reason(self) -> str | None:
+        if not self.finished:
+            return None
+        if self.eos_id is not None and self.generated and \
+                self.generated[-1] == self.eos_id:
+            return "eos"
+        return "length"
+
+    @property
+    def ttft(self) -> float | None:
+        """Time to first token (seconds from submit)."""
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    def emit(self, token: int) -> None:
+        if self.t_first_token is None:
+            self.t_first_token = time.time()
+        self.generated.append(token)
+        if self.on_token is not None:
+            self.on_token(self, token)
+
+
+class RequestQueue:
+    """Priority queue with FIFO order inside each priority class."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[int, int, Request]] = []
+        self._seq = itertools.count()
+
+    def push(self, req: Request) -> None:
+        heapq.heappush(self._heap, (req.priority, next(self._seq), req))
+
+    def pop(self) -> Request | None:
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Request | None:
+        return self._heap[0][2] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class AdmissionController:
+    """Bounds queue depth and rejects jobs that cannot fit a slot.
+
+    ``max_len`` is the per-slot KV capacity; a prompt must fit when rounded
+    up to whole prefill chunks (chunk writes are fixed-shape) AND leave room
+    for its generation budget, otherwise the job would stall a slot forever.
+    """
+
+    def __init__(self, max_queue: int, max_len: int, prefill_chunk: int) -> None:
+        self.max_queue = max_queue
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+
+    def check(self, queue: RequestQueue, req: Request) -> tuple[bool, str | None]:
+        if req.prompt_len == 0:
+            return False, "empty prompt"
+        if req.max_new_tokens < 1:
+            return False, "max_new_tokens must be >= 1"
+        if len(queue) >= self.max_queue:
+            return False, f"queue full ({self.max_queue})"
+        ch = self.prefill_chunk
+        padded = ((req.prompt_len + ch - 1) // ch) * ch
+        if padded > self.max_len:
+            return False, (f"prompt of {req.prompt_len} (padded {padded}) "
+                           f"exceeds slot capacity {self.max_len}")
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            return False, (f"prompt+generation {req.prompt_len}+"
+                           f"{req.max_new_tokens} exceeds slot capacity "
+                           f"{self.max_len}")
+        return True, None

@@ -1,0 +1,104 @@
+"""Slot scheduler: admission + fixed-shape batch construction.
+
+Every engine iteration is one of two fixed shapes, so the jitted model step
+compiles exactly twice and never again:
+
+  * a PREFILL batch ``(slots, prefill_chunk)`` — the next chunk of every
+    request still processing its prompt (several requests prefill in the
+    same call);
+  * a DECODE batch ``(slots, 1)`` — the last token of every decoding
+    request.
+
+Rows for idle/finished slots (and the padding tail of a short chunk) carry
+``n_valid = 0`` and do not advance their cursor.
+
+Fairness: admission is (priority, FIFO); when both prefill and decode work
+exist the scheduler alternates strictly between the two batch kinds
+(``interleave=True``), so a stream of long prompts cannot starve running
+decodes and queued decodes cannot starve prompt processing.  Admission into
+a freed slot happens before every batch, so a waiting request is picked up
+at the first opportunity — together with FIFO order this bounds every
+request's wait by the work admitted before it (no starvation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.kv_pool import SlotPool
+from repro.serving.request import Request, RequestQueue, RequestState
+
+
+@dataclasses.dataclass
+class ScheduledBatch:
+    """One fixed-shape engine iteration."""
+
+    kind: str  # "prefill" | "decode"
+    tokens: np.ndarray  # (slots, C) int32
+    n_valid: np.ndarray  # (slots,) int32
+    rows: list[Request]  # participating requests (their .slot indexes rows)
+
+
+class SlotScheduler:
+    def __init__(self, slots: int, prefill_chunk: int,
+                 interleave: bool = True) -> None:
+        self.slots = slots
+        self.prefill_chunk = prefill_chunk
+        self.interleave = interleave
+        self._prefill_turn = True  # alternation state when both kinds pend
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self, queue: RequestQueue, pool: SlotPool,
+              active: dict[int, Request]) -> list[Request]:
+        """Move queued requests into free slots (priority, then FIFO)."""
+        admitted = []
+        while len(queue) and pool.n_free:
+            req = queue.pop()
+            slot = pool.acquire(req.rid)
+            assert slot is not None
+            req.slot = slot
+            req.state = RequestState.PREFILL
+            active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    # -- batch construction --------------------------------------------------
+
+    def next_batch(self, active: dict[int, Request]) -> ScheduledBatch | None:
+        prefilling = [r for r in active.values()
+                      if r.state == RequestState.PREFILL]
+        decoding = [r for r in active.values()
+                    if r.state == RequestState.DECODE]
+        if not prefilling and not decoding:
+            return None
+
+        if prefilling and decoding:
+            do_prefill = self._prefill_turn if self.interleave else True
+            self._prefill_turn = not self._prefill_turn
+        else:
+            do_prefill = bool(prefilling)
+
+        if do_prefill:
+            return self._prefill_batch(prefilling)
+        return self._decode_batch(decoding)
+
+    def _prefill_batch(self, prefilling: list[Request]) -> ScheduledBatch:
+        ch = self.prefill_chunk
+        tokens = np.zeros((self.slots, ch), np.int32)
+        n_valid = np.zeros((self.slots,), np.int32)
+        for r in prefilling:
+            n = min(ch, r.prompt_len - r.prefilled)
+            tokens[r.slot, :n] = r.prompt[r.prefilled : r.prefilled + n]
+            n_valid[r.slot] = n
+        return ScheduledBatch("prefill", tokens, n_valid, prefilling)
+
+    def _decode_batch(self, decoding: list[Request]) -> ScheduledBatch:
+        tokens = np.zeros((self.slots, 1), np.int32)
+        n_valid = np.zeros((self.slots,), np.int32)
+        for r in decoding:
+            tokens[r.slot, 0] = r.generated[-1]
+            n_valid[r.slot] = 1
+        return ScheduledBatch("decode", tokens, n_valid, decoding)

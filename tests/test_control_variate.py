@@ -9,7 +9,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the wheel: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import control_variate as cv
 from repro.core import multipliers as am

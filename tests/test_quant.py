@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without the wheel: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro import quant
 from repro.core.approx_linear import QuantizedDense, dense, pack_dense, pack_params

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 test suite + a ~30s reduced-model serving-engine smoke.
+#
+#   tools/ci_smoke.sh            # full tier-1 + engine smoke
+#   SKIP_TESTS=1 tools/ci_smoke.sh   # engine smoke only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ -z "${SKIP_TESTS:-}" ]]; then
+    echo "== tier-1 pytest =="
+    python -m pytest -x -q
+fi
+
+echo "== serving-engine smoke (reduced model, approximate+CV) =="
+python -m repro.launch.serve --engine --requests 8 \
+    --arch olmo-1b-reduced --mode perforated --m 2 \
+    --slots 4 --max-len 64 --chunk 16
+
+echo "CI smoke OK"
