@@ -27,21 +27,20 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_JSON = os.path.join(_ROOT, "BENCH_serve.json")
 
 
-def _bench_mode(cfg, params, label: str) -> dict:
+def _bench_mode(cfg, params, label: str, numerics: str | None = None) -> dict:
     from repro.configs.base import EngineConfig
     from repro.launch.serve import mixed_trace
     from repro.serving import ServingEngine
-    from repro.serving.metrics import EngineMetrics
 
     ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
                         cache_dtype="bfloat16")
-    eng = ServingEngine(cfg, params, ecfg)
+    eng = ServingEngine(cfg, params, ecfg, numerics=numerics)
 
     # warmup: trigger both compiled shapes (prefill chunk + decode) so the
     # measured trace reflects steady-state serving, not XLA compilation
     eng.submit(list(range(1, 9)), 2)
     eng.run()
-    eng.metrics = EngineMetrics()
+    eng.reset_metrics()
 
     for prompt, gen in mixed_trace(cfg, N_REQUESTS, MAX_LEN, CHUNK, seed=1):
         eng.submit(prompt, gen)
@@ -55,6 +54,7 @@ def _bench_mode(cfg, params, label: str) -> dict:
         "name": f"serve/{label}",
         "us_per_call": round(snap["elapsed_s"] / gen_tok * 1e6, 1),  # per gen tok
         "arch": ARCH,
+        "numerics": snap["numerics"],
         "requests": N_REQUESTS,
         "slots": SLOTS,
         "max_len": MAX_LEN,
@@ -71,9 +71,9 @@ def _bench_mode(cfg, params, label: str) -> dict:
 
 def run() -> list[dict]:
     from repro.configs import get_config
-    from repro.core.policy import ApproxPolicy
     from repro.launch.serve import ServeConfig, build_serving_params
     from repro.models import build_model
+    from repro.numerics import get_preset
 
     cfg = get_config(ARCH)
     api = build_model(cfg)
@@ -81,14 +81,15 @@ def run() -> list[dict]:
 
     modes = [
         ("float", None),
-        ("int8-exact", ApproxPolicy("exact", 0)),
-        ("perforated-m2-cv", ApproxPolicy("perforated", 2, use_cv=True)),
+        ("int8-exact", get_preset("int8")),
+        ("perforated-m2-cv", get_preset("serve-default")),
     ]
     rows = []
-    for label, policy in modes:
-        p = params if policy is None else build_serving_params(
-            params, cfg, ServeConfig(policy=policy))
-        rows.append(_bench_mode(cfg, p, label))
+    for label, spec in modes:
+        p = params if spec is None else build_serving_params(
+            params, cfg, ServeConfig(spec=spec))
+        rows.append(_bench_mode(cfg, p, label,
+                                numerics=None if spec is None else spec.name))
 
     with open(OUT_JSON, "w") as f:
         json.dump({"arch": ARCH, "note": "CPU emulation of the approximate "

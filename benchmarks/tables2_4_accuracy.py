@@ -8,7 +8,9 @@ float models, cached under artifacts/cnn/), calibrated on held-out batches,
 then packed for every (multiplier, m) x {CV, no CV} and evaluated.
 
 Columns mirror the paper: accuracy loss vs the float model, "Ours" (with V)
-vs "w/o V".
+vs "w/o V".  The (multiplier, m) grid comes from the ``paper-grid``
+numerics specs (repro.numerics), the same objects the serving stack
+consumes — no hand-rolled mode/m loops.
 """
 
 from __future__ import annotations
@@ -23,21 +25,15 @@ import numpy as np
 
 from repro.checkpoint.manager import load_pytree, save_pytree
 from repro.configs.cnn_suite import CNN_SUITE, get_cnn
-from repro.core.approx_linear import pack_params
-from repro.core.multipliers import PAPER_M_RANGE
-from repro.core.policy import ApproxPolicy, uniform_policy
 from repro.data.vision import VisionConfig, make_vision_dataset
 from repro.nn.cnn import cnn_apply, init_cnn
+from repro.numerics import apply_numerics, paper_grid_specs
 from repro.quant.observers import CalibrationRecorder
 
 ART_DIR = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                         "..", "artifacts", "cnn"))
 N_TRAIN, N_TEST, N_CALIB = 4000, 1000, 256
 TRAIN_STEPS, BATCH = 300, 64
-
-#: layers kept float (the paper likewise keeps the (tiny) final classifier
-#: exact in spirit — first/last-layer exactness is standard practice)
-SKIP = ()
 
 
 def _train_cnn(name: str, cfg, xtr, ytr) -> dict:
@@ -126,17 +122,23 @@ def run(nets: list[str] | None = None, class_counts=(10, 100)) -> list[dict]:
                      "nets_completed": sorted(done),
                      "note": "cached rows only (background training fills the rest)"})
         return rows
+    # the Tables 2-4 grid, one uniform spec per (multiplier, m) x {CV, no-CV}
+    # (no skip rules: every conv/linear packs, matching the paper setup)
+    grid = list(zip(paper_grid_specs(use_cv=True), paper_grid_specs(use_cv=False)))
     for num_classes in class_counts:
         vcfg = VisionConfig(num_classes=num_classes)
         xtr, ytr = make_vision_dataset(vcfg, "train", N_TRAIN)
         xte, yte = make_vision_dataset(vcfg, "test", N_TEST)
         for net in nets:
             cfg = get_cnn(net, num_classes)
-            todo = [(mode, m) for mode, ms in PAPER_M_RANGE.items() for m in ms
-                    if f"tables2_4/{net}/c{num_classes}/{mode}/m{m}" not in cache]
+
+            def key_of(spec, net=net, num_classes=num_classes):
+                p = spec.default
+                return f"tables2_4/{net}/c{num_classes}/{p.mode}/m{p.m}"
+
+            todo = [pair for pair in grid if key_of(pair[0]) not in cache]
             if not todo:
-                rows.extend(cache[f"tables2_4/{net}/c{num_classes}/{mode}/m{m}"]
-                            for mode, ms in PAPER_M_RANGE.items() for m in ms)
+                rows.extend(cache[key_of(cv_spec)] for cv_spec, _ in grid)
                 continue
             t0 = time.perf_counter()
             params = _train_cnn(net, cfg, xtr, ytr)
@@ -144,28 +146,26 @@ def run(nets: list[str] | None = None, class_counts=(10, 100)) -> list[dict]:
             acc_float = _accuracy(params, cfg, xte, yte)
             ranges = _calibrate(params, cfg, xtr[:N_CALIB])
 
-            for mode, ms in PAPER_M_RANGE.items():
-                for m in ms:
-                    key = f"tables2_4/{net}/c{num_classes}/{mode}/m{m}"
-                    if key in cache:
-                        rows.append(cache[key])
-                        continue
-                    accs = {}
-                    for use_cv in (True, False):
-                        policy = ApproxPolicy(mode, m, use_cv=use_cv)
-                        packed = pack_params(params, uniform_policy(policy, skip=SKIP),
-                                             act_ranges=ranges)
-                        accs[use_cv] = _accuracy(packed, cfg, xte, yte)
-                    row = {
-                        "name": key,
-                        "us_per_call": round(train_us, 0),
-                        "acc_float": round(acc_float, 4),
-                        "acc_cv": round(accs[True], 4),
-                        "acc_no_cv": round(accs[False], 4),
-                        "loss_cv_pct": round(100 * (acc_float - accs[True]), 2),
-                        "loss_no_cv_pct": round(100 * (acc_float - accs[False]), 2),
-                    }
-                    cache[key] = row
-                    _save_cache(cache)
-                    rows.append(row)
+            for spec_cv, spec_no in grid:
+                key = key_of(spec_cv)
+                if key in cache:
+                    rows.append(cache[key])
+                    continue
+                accs = {}
+                for use_cv, spec in ((True, spec_cv), (False, spec_no)):
+                    packed = apply_numerics(params, spec.resolve(params),
+                                            act_ranges=ranges)
+                    accs[use_cv] = _accuracy(packed, cfg, xte, yte)
+                row = {
+                    "name": key,
+                    "us_per_call": round(train_us, 0),
+                    "acc_float": round(acc_float, 4),
+                    "acc_cv": round(accs[True], 4),
+                    "acc_no_cv": round(accs[False], 4),
+                    "loss_cv_pct": round(100 * (acc_float - accs[True]), 2),
+                    "loss_no_cv_pct": round(100 * (acc_float - accs[False]), 2),
+                }
+                cache[key] = row
+                _save_cache(cache)
+                rows.append(row)
     return rows

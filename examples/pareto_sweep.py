@@ -1,5 +1,6 @@
-"""Paper Fig. 10 in miniature: sweep (multiplier, m) x {CV, no-CV} on one
-trained CNN and print the accuracy-loss vs modeled-power Pareto points.
+"""Paper Fig. 10 in miniature: sweep the paper-grid numerics specs x
+{CV, no-CV} on one trained CNN and print the accuracy-loss vs
+modeled-power Pareto points.
 
 Trains (or loads the cached) resnet44 on the procedural dataset first —
 expect a few minutes cold, seconds warm.
@@ -7,17 +8,12 @@ expect a few minutes cold, seconds warm.
     PYTHONPATH=src python examples/pareto_sweep.py
 """
 
-import jax
-import jax.numpy as jnp
-
 from benchmarks.tables2_4_accuracy import (
     N_CALIB, _accuracy, _calibrate, _train_cnn)
 from repro.configs.cnn_suite import get_cnn
 from repro.core import cost_model as cm
-from repro.core.approx_linear import pack_params
-from repro.core.multipliers import PAPER_M_RANGE
-from repro.core.policy import ApproxPolicy, uniform_policy
 from repro.data.vision import VisionConfig, make_vision_dataset
+from repro.numerics import apply_numerics, paper_grid_specs
 
 
 def main() -> None:
@@ -32,18 +28,18 @@ def main() -> None:
     print(f"{'config':22s} {'norm power':>10s} {'dAcc (CV)':>10s} {'dAcc (no CV)':>13s}")
 
     points = []
-    for mode, ms in PAPER_M_RANGE.items():
-        for m in ms:
-            accs = {}
-            for cv in (True, False):
-                packed = pack_params(
-                    params, uniform_policy(ApproxPolicy(mode, m, use_cv=cv)),
-                    act_ranges=ranges)
-                accs[cv] = _accuracy(packed, cfg, xte, yte)
-            power = 1 - cm.power_saving(mode, m, 64) / 100
-            d_cv, d_no = 100 * (acc_f - accs[True]), 100 * (acc_f - accs[False])
-            points.append((power, d_cv, f"{mode}/m{m}"))
-            print(f"{mode+'/m'+str(m):22s} {power:10.3f} {d_cv:9.2f}% {d_no:12.2f}%")
+    for spec_cv, spec_no in zip(paper_grid_specs(use_cv=True),
+                                paper_grid_specs(use_cv=False)):
+        mode, m = spec_cv.default.mode, spec_cv.default.m
+        accs = {}
+        for cv, spec in ((True, spec_cv), (False, spec_no)):
+            packed = apply_numerics(params, spec.resolve(params),
+                                    act_ranges=ranges)
+            accs[cv] = _accuracy(packed, cfg, xte, yte)
+        power = 1 - cm.power_saving(mode, m, 64) / 100
+        d_cv, d_no = 100 * (acc_f - accs[True]), 100 * (acc_f - accs[False])
+        points.append((power, d_cv, f"{mode}/m{m}"))
+        print(f"{mode+'/m'+str(m):22s} {power:10.3f} {d_cv:9.2f}% {d_no:12.2f}%")
 
     front = []
     for p in sorted(points):

@@ -1,7 +1,8 @@
 """Quickstart: the paper's technique in 40 lines.
 
-Trains nothing — takes a tiny randomly-initialized transformer, packs it for
-an approximate-multiplier MAC array (uint8 codes + control-variate
+Trains nothing — takes a tiny randomly-initialized transformer, describes
+the numerics declaratively (NumericsSpec -> PackPlan -> apply), packs it
+for an approximate-multiplier MAC array (uint8 codes + control-variate
 constants), and shows the CV recovering the logits that aggressive
 approximation destroys.
 
@@ -17,6 +18,7 @@ from repro.configs import get_config
 from repro.core.policy import ApproxPolicy
 from repro.launch.serve import ServeConfig, build_serving_params
 from repro.models import build_model
+from repro.numerics import get_preset
 
 
 def main() -> None:
@@ -26,6 +28,12 @@ def main() -> None:
     toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
 
     ref = api.forward(params, {"tokens": toks})  # float reference
+
+    # the spec is declarative and serializable: audit the per-layer plan
+    # before packing anything (same table as `python -m repro.launch.serve plan`)
+    spec = get_preset("serve-default")
+    print(spec.resolve(params).table())
+    print()
 
     print(f"{'numerics':34s} {'mean |logit err|':>18s}")
     for mode, m, cv in [
@@ -38,7 +46,8 @@ def main() -> None:
         ("truncated", 6, True),
     ]:
         policy = ApproxPolicy(mode, m, use_cv=cv)
-        packed = build_serving_params(params, cfg, ServeConfig(policy=policy))
+        spec = get_preset("serve-default", policy=policy)
+        packed = build_serving_params(params, cfg, ServeConfig(spec=spec))
         logits = api.forward(packed, {"tokens": toks})
         err = float(jnp.abs(logits - ref).mean())
         print(f"{policy.label():34s} {err:18.4f}")

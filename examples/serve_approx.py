@@ -18,6 +18,7 @@ from repro.core.policy import ApproxPolicy
 from repro.launch.serve import (ServeConfig, build_serving_params,
                                 mixed_trace)
 from repro.models import build_model
+from repro.numerics import get_preset
 from repro.serving import ServingEngine
 
 
@@ -35,14 +36,15 @@ def main() -> None:
     cfg = get_config(args.arch)
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    scfg = ServeConfig(policy=ApproxPolicy(args.mode, args.m, use_cv=True),
-                       cache_dtype="int8")
+    spec = get_preset("serve-default",
+                      policy=ApproxPolicy(args.mode, args.m, use_cv=True))
+    scfg = ServeConfig(spec=spec, cache_dtype="int8")
     packed = build_serving_params(params, cfg, scfg)
-    print(f"arch={cfg.name}  numerics={scfg.policy.label()}  kv=int8")
+    print(f"arch={cfg.name}  numerics={spec.name}  kv=int8")
 
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.chunk, cache_dtype="int8")
-    eng = ServingEngine(cfg, packed, ecfg)
+    eng = ServingEngine(cfg, packed, ecfg, numerics=spec.name)
 
     # mixed trace: 2/3 short chat turns, 1/3 long documents, varied budgets
     stream_of = {}

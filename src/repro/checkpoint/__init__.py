@@ -1,12 +1,14 @@
 """Checkpointing: atomic, async, shard-per-process tensor store with
 elastic re-mesh restore."""
 
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint.manager import (CheckpointManager, load_pytree,
+                                      read_meta, save_pytree)
 from repro.checkpoint.elastic import restore_with_sharding
 
 __all__ = [
     "CheckpointManager",
     "save_pytree",
     "load_pytree",
+    "read_meta",
     "restore_with_sharding",
 ]

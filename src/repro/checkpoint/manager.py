@@ -13,6 +13,13 @@ Compression is negotiable: shard files carry a 4-byte magic plus a codec
 tag ("zstd" | "zlib" | "none"), so a container without the ``zstandard``
 wheel falls back to stdlib zlib (or raw) and checkpoints stay portable
 between environments.  Legacy headerless zstd frames are still readable.
+
+Shard files also carry a free-form metadata dict (the ``__meta__`` record):
+packed serving checkpoints persist their :class:`~repro.numerics.NumericsSpec`
+there, so the exact per-layer approximation recipe travels with the weights
+(``read_meta`` / ``CheckpointManager.numerics`` recover it without needing a
+template tree; the shard is still decompressed/decoded to reach the header,
+so treat it as a per-restore audit, not a hot-path fleet poll).
 """
 
 from __future__ import annotations
@@ -52,7 +59,8 @@ def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
     return items, treedef
 
 
-def _pack(items: list[tuple[str, np.ndarray]], codec: str | None = None) -> bytes:
+def _pack(items: list[tuple[str, np.ndarray]], codec: str | None = None,
+          meta: dict | None = None) -> bytes:
     codec = codec or _default_codec()
     payload = {
         key: {
@@ -63,8 +71,10 @@ def _pack(items: list[tuple[str, np.ndarray]], codec: str | None = None) -> byte
         for key, arr in items
     }
     # codec tag rides in the msgpack metadata too, so tooling that only sees
-    # the decoded payload still knows how the shard was written
-    raw = msgpack.packb({"__meta__": {"codec": codec}, "leaves": payload},
+    # the decoded payload still knows how the shard was written; callers may
+    # attach extra metadata (e.g. the NumericsSpec the tree was packed under)
+    raw = msgpack.packb({"__meta__": {"codec": codec, **(meta or {})},
+                         "leaves": payload},
                         use_bin_type=True)
     if codec == "zstd":
         if zstandard is None:
@@ -79,7 +89,8 @@ def _pack(items: list[tuple[str, np.ndarray]], codec: str | None = None) -> byte
     return _MAGIC + codec.encode("ascii").ljust(4) + body
 
 
-def _unpack(blob: bytes) -> dict[str, np.ndarray]:
+def _decode(blob: bytes) -> dict:
+    """Shard bytes -> the decoded msgpack payload (meta + leaves)."""
     if blob[:4] == _MAGIC:
         codec = blob[4:8].rstrip().decode("ascii")
         body = blob[8:]
@@ -103,25 +114,42 @@ def _unpack(blob: bytes) -> dict[str, np.ndarray]:
     else:  # pre-header uncompressed msgpack
         raw = blob
     payload = msgpack.unpackb(raw, raw=False)
-    if "__meta__" in payload:
-        payload = payload["leaves"]
+    if "__meta__" not in payload:  # pre-header layout: leaves at top level
+        payload = {"__meta__": {}, "leaves": payload}
+    return payload
+
+
+def _unpack(blob: bytes) -> dict[str, np.ndarray]:
     out = {}
-    for key, rec in payload.items():
+    for key, rec in _decode(blob)["leaves"].items():
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
         out[key] = arr.reshape(rec["shape"])
     return out
 
 
-def save_pytree(tree: Any, path: str, codec: str | None = None) -> None:
+def read_meta(path: str) -> dict:
+    """Shard metadata (codec tag plus anything save_pytree attached, e.g.
+    ``{"numerics": <NumericsSpec dict>}``).  Needs no template tree, but
+    does decompress/decode the shard to reach the header."""
+    with open(path, "rb") as f:
+        return _decode(f.read())["__meta__"]
+
+
+def save_pytree(tree: Any, path: str, codec: str | None = None,
+                meta: dict | None = None) -> None:
     """Atomic single-file save (library-level; the manager adds steps/async).
 
     ``codec`` is "zstd" | "zlib" | "none"; default prefers zstd when the
-    wheel is available and falls back to stdlib zlib otherwise.
+    wheel is available and falls back to stdlib zlib otherwise.  ``meta``
+    is an optional JSON-safe dict stored in the shard header (recovered by
+    :func:`read_meta`); "codec" is a reserved key.
     """
+    if meta and "codec" in meta:
+        raise ValueError("'codec' is a reserved metadata key")
     items, _ = _flatten(tree)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(_pack(items, codec))
+        f.write(_pack(items, codec, meta))
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, path)
@@ -175,32 +203,41 @@ class CheckpointManager:
 
     # -- save ----------------------------------------------------------------
 
-    def _save_sync(self, tree: Any, step: int) -> None:
+    def _save_sync(self, tree: Any, step: int, meta: dict | None = None) -> None:
         sdir = self._step_dir(step)
         tmp_dir = sdir + ".tmp"
         shutil.rmtree(tmp_dir, ignore_errors=True)
         os.makedirs(tmp_dir, exist_ok=True)
         shard = jax.process_index()
-        save_pytree(tree, os.path.join(tmp_dir, f"shard_{shard:05d}.ckpt"))
+        save_pytree(tree, os.path.join(tmp_dir, f"shard_{shard:05d}.ckpt"),
+                    meta=meta)
         os.replace(tmp_dir, sdir)
         with open(os.path.join(sdir, "DONE"), "w") as f:
             f.write(str(time.time()))
         self._gc()
 
-    def save(self, tree: Any, step: int, blocking: bool = True) -> None:
+    def save(self, tree: Any, step: int, blocking: bool = True,
+             numerics: Any = None) -> None:
+        """``numerics`` (a NumericsSpec, or its dict form) is persisted in
+        the shard metadata so a packed serving checkpoint carries the exact
+        per-layer approximation recipe it was built under."""
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+        meta = None
+        if numerics is not None:
+            spec_d = numerics.to_dict() if hasattr(numerics, "to_dict") else dict(numerics)
+            meta = {"numerics": spec_d}
         # snapshot to host memory first (donated/async-safe)
         host_tree = jax.tree.map(np.asarray, tree)
         if blocking:
-            self._save_sync(host_tree, step)
+            self._save_sync(host_tree, step, meta)
             return
         self.wait()
 
         def run():
             try:
-                self._save_sync(host_tree, step)
+                self._save_sync(host_tree, step, meta)
             except BaseException as e:  # surfaced on next save()
                 self._error = e
 
@@ -228,3 +265,20 @@ class CheckpointManager:
         shard = jax.process_index()
         path = os.path.join(self._step_dir(step), f"shard_{shard:05d}.ckpt")
         return load_pytree(template, path), step
+
+    def numerics(self, step: int | None = None):
+        """The NumericsSpec persisted with a step (None when the checkpoint
+        was saved without one)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {self.dir}")
+        shard = jax.process_index()
+        path = os.path.join(self._step_dir(step), f"shard_{shard:05d}.ckpt")
+        spec_d = read_meta(path).get("numerics")
+        if spec_d is None:
+            return None
+        from repro.numerics import NumericsSpec
+
+        return NumericsSpec.from_dict(spec_d)

@@ -7,6 +7,12 @@ whether the control-variate correction V is added, how many CV groups
 
 Policies are static/hashable so jit can specialize on them; they travel with
 packed parameters as pytree metadata.
+
+This module is the *mechanism* layer.  The public way to choose policies
+per layer is the declarative :mod:`repro.numerics` spec subsystem
+(``NumericsSpec`` -> ``PackPlan`` -> ``apply_numerics``); the ``PolicyFn``
+callables below are an internal detail of ``pack_params`` that specs lower
+to.
 """
 
 from __future__ import annotations
@@ -45,6 +51,18 @@ class ApproxPolicy:
         cv = f"+cv(g={self.groups})" if self.use_cv else "-cv"
         return f"{self.mode}(m={self.m}){cv}"
 
+    def to_dict(self) -> dict:
+        """JSON-safe form (consumed by repro.numerics serialization)."""
+        return {"mode": self.mode, "m": self.m, "use_cv": self.use_cv,
+                "groups": self.groups, "backend": self.backend}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ApproxPolicy":
+        unknown = set(d) - {"mode", "m", "use_cv", "groups", "backend"}
+        if unknown:
+            raise ValueError(f"unknown ApproxPolicy fields {sorted(unknown)}")
+        return cls(**d)
+
 
 FLOAT = None  # sentinel: layer stays in float (not packed)
 INT8_EXACT = ApproxPolicy("exact", 0)
@@ -61,7 +79,9 @@ def paper_policies(use_cv: bool = True, backend: Backend = "jnp") -> list[Approx
 
 
 # A PolicyFn maps a parameter tree path (tuple of str keys) to a policy, or
-# FLOAT/None to keep the layer in float.  Used by pack_params.
+# FLOAT/None to keep the layer in float.  Used by pack_params.  Internal:
+# user-facing configuration goes through repro.numerics specs, which lower
+# to a PolicyFn at apply time.
 PolicyFn = Callable[[tuple[str, ...]], ApproxPolicy | None]
 
 
@@ -81,6 +101,57 @@ def uniform_policy(policy: ApproxPolicy | None, skip: tuple[str, ...] = ()) -> P
 # ---------------------------------------------------------------------------
 # Automatic per-layer policy search (beyond paper; ALWANN-flavoured)
 # ---------------------------------------------------------------------------
+
+
+def order_most_aggressive(candidates: list[ApproxPolicy]) -> list[ApproxPolicy]:
+    """Candidates sorted most-aggressive-first by the analytic error sigma."""
+    from repro.core.multipliers import analytic_error_moments_uniform
+
+    return sorted(
+        candidates,
+        key=lambda p: analytic_error_moments_uniform(p.mode, p.m)[1],
+        reverse=True,
+    )
+
+
+def greedy_assign(apply_fn, params, calib_inputs,
+                  items: list[tuple[str, list[ApproxPolicy], float]],
+                  act_ranges: dict | None = None) -> dict[str, ApproxPolicy]:
+    """The greedy ALWANN-style per-layer assignment core (shared by
+    :func:`auto_policy` and the ``auto(...)`` rule lowering in
+    :mod:`repro.numerics`).
+
+    ``items`` is ``[(path, candidates, budget_rel_err)]`` with candidates
+    ordered most-aggressive-first (see :func:`order_most_aggressive`).  Per
+    layer (independently), the first candidate whose model-output relative
+    error on the calibration inputs fits the budget wins; layers too
+    sensitive for any candidate fall back to exact int8.  Greedy-independent
+    works because the CV keeps per-layer errors zero-mean, so sensitivities
+    compose roughly additively at small errors.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.approx_linear import pack_params
+
+    ref = apply_fn(params, calib_inputs)
+    ref_scale = float(jnp.abs(ref).mean()) + 1e-12
+
+    out: dict[str, ApproxPolicy] = {}
+    for path, candidates, budget in items:
+        chosen = INT8_EXACT
+        for cand in candidates:
+            one = pack_params(
+                params,
+                lambda p, path=path, cand=cand:
+                    cand if "/".join(p) == path else None,
+                act_ranges=act_ranges,
+            )
+            err = float(jnp.abs(apply_fn(one, calib_inputs) - ref).mean())
+            if err / ref_scale <= budget:
+                chosen = cand
+                break
+        out[path] = chosen
+    return out
 
 
 def auto_policy(
@@ -106,45 +177,20 @@ def auto_policy(
 
     Returns (policy_map: path -> ApproxPolicy, report rows).
     """
-    import jax.numpy as jnp
+    from repro.core.approx_linear import pack_params, packed_layer_paths
 
-    from repro.core.approx_linear import pack_params
-
-    candidates = candidates or paper_policies(use_cv=True)
-    # order candidates most-aggressive-first using the analytic error sigma
-    from repro.core.multipliers import analytic_error_moments_uniform
-
-    candidates = sorted(
-        candidates,
-        key=lambda p: analytic_error_moments_uniform(p.mode, p.m)[1],
-        reverse=True,
-    )
-
-    ref = apply_fn(params, calib_inputs)
-    ref_scale = float(jnp.abs(ref).mean()) + 1e-12
+    candidates = order_most_aggressive(candidates or paper_policies(use_cv=True))
 
     # enumerate packable layer paths
     probe = pack_params(params, uniform_policy(INT8_EXACT, skip=skip),
                         act_ranges=act_ranges)
-    from repro.core.approx_linear import packed_layer_paths
-
     paths = packed_layer_paths(probe)
-    policy_map: dict[str, ApproxPolicy] = {}
-    rows = []
-    for path in paths:
-        chosen = INT8_EXACT
-        for cand in candidates:
-            one = pack_params(
-                params,
-                lambda p, path=path, cand=cand: cand if "/".join(p) == path else None,
-                act_ranges=act_ranges,
-            )
-            err = float(jnp.abs(apply_fn(one, calib_inputs) - ref).mean()) / ref_scale
-            if err <= budget_rel_err:
-                chosen = cand
-                break
-        policy_map[path] = chosen
-        rows.append({"layer": path, "policy": chosen.label()})
+    policy_map = greedy_assign(
+        apply_fn, params, calib_inputs,
+        [(path, candidates, budget_rel_err) for path in paths],
+        act_ranges=act_ranges)
+    rows = [{"layer": path, "policy": policy_map[path].label()}
+            for path in paths]
 
     def fn(p: tuple[str, ...]):
         return policy_map.get("/".join(p))

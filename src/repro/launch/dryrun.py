@@ -131,9 +131,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, approx_mode: str = "perfora
             lowered = jitted.lower(abstract_state, batch_abs)
         else:
             from repro.core.policy import ApproxPolicy
+            from repro.numerics import get_preset
 
-            scfg = ServeConfig(policy=ApproxPolicy(approx_mode, approx_m, use_cv=True),
-                               cache_dtype=cache_dtype)
+            num_spec = get_preset("serve-default",
+                                  policy=ApproxPolicy(approx_mode, approx_m,
+                                                      use_cv=True))
+            scfg = ServeConfig(spec=num_spec, cache_dtype=cache_dtype)
             params_abs = _serving_abstract_params(cfg, scfg)
             params_sh = param_shardings(params_abs, mesh, cfg)
             if spec.kind == "prefill":

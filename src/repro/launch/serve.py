@@ -1,9 +1,12 @@
 """Serving driver: the paper's technique as a first-class deployment mode.
 
-`build_serving_params` turns trained float parameters into the approximate
-int8 + control-variate representation (uint8 weight codes, per-layer CV
-constants, bf16 for the non-array parts) via one parameter transformation —
-exactly the paper's deployment story (same network, different MAC array).
+Numerics are configured declaratively: a :class:`~repro.numerics.NumericsSpec`
+(preset, JSON file, or built in code) resolves against the parameter tree
+into a :class:`~repro.numerics.PackPlan`, and `build_serving_params` executes
+that plan — float params become the approximate int8 + control-variate
+representation (uint8 weight codes, per-layer CV constants, bf16 for the
+non-array parts) in one parameter transformation, exactly the paper's
+deployment story (same network, different MAC array).
 
 `make_prefill_step` / `make_decode_step` build the sharded serving steps the
 dry-run lowers for the prefill_32k / decode_32k / long_500k cells.
@@ -14,7 +17,15 @@ model with a mixed-length request trace:
     PYTHONPATH=src python -m repro.launch.serve --engine --requests 8 \
         --arch olmo-1b-reduced --mode perforated --m 2
 
-``--legacy`` keeps the old lock-step rectangular-batch loop for comparison.
+and `plan` prints the resolved per-layer assignment table without packing
+anything (shapes only, runs in milliseconds):
+
+    PYTHONPATH=src python -m repro.launch.serve plan --arch olmo-1b-reduced
+    PYTHONPATH=src python -m repro.launch.serve plan --preset int8 --json
+
+``--legacy`` keeps the old lock-step rectangular-batch loop for comparison;
+``--spec-json FILE`` serves under a spec shipped as JSON (the same payload
+checkpoints and engine metadata carry).
 """
 
 from __future__ import annotations
@@ -22,6 +33,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import sys
 import time
 from typing import Any
 
@@ -31,30 +43,45 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ArchConfig, EngineConfig
-from repro.core.approx_linear import pack_params
-from repro.core.policy import ApproxPolicy, uniform_policy
+from repro.core.policy import ApproxPolicy
 from repro.models import build_model
-
-# layers kept float in serving: embeddings (lookup, not a GEMM), norms,
-# router (control logic), kv_b (absorbed-decode einsums, DESIGN.md), and
-# tiny lora/mix projections.
-SERVE_SKIP = ("embed", "router", "kv_a", "kv_b", "q_norm", "k_norm", "norm",
-              "dt_proj", "x_proj")
+from repro.numerics import (NumericsSpec, PackPlan, apply_numerics,
+                            get_preset)
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    policy: ApproxPolicy = ApproxPolicy("perforated", 2, use_cv=True)
+    """Serving numerics + cache configuration.
+
+    ``spec`` is the source of truth.  ``policy`` is a convenience shorthand
+    — when ``spec`` is None, the policy is wrapped into the ``serve-default``
+    preset (its documented keep-float rule-set plus this policy everywhere
+    else), which reproduces the old uniform-policy behavior.
+    """
+
+    spec: NumericsSpec | None = None
+    policy: ApproxPolicy | None = None
     act_range: tuple[float, float] = (-8.0, 8.0)  # default when uncalibrated
     cache_dtype: str = "bfloat16"
 
+    def numerics_spec(self) -> NumericsSpec:
+        if self.spec is not None:
+            return self.spec
+        return get_preset("serve-default", policy=self.policy)
+
 
 def build_serving_params(params: Any, cfg: ArchConfig, scfg: ServeConfig,
-                         act_ranges: dict | None = None) -> Any:
-    """float params -> packed approximate serving params (+ bf16 float rest)."""
-    policy_fn = uniform_policy(scfg.policy, skip=SERVE_SKIP)
-    packed = pack_params(params, policy_fn, act_ranges=act_ranges,
-                         default_range=scfg.act_range)
+                         act_ranges: dict | None = None,
+                         plan: PackPlan | None = None) -> Any:
+    """float params -> packed approximate serving params (+ bf16 float rest).
+
+    ``plan`` short-circuits resolution when the caller already has one (e.g.
+    printed/audited via the `plan` CLI, or restored from a checkpoint).
+    """
+    if plan is None:
+        plan = scfg.numerics_spec().resolve(params)
+    packed = apply_numerics(params, plan, act_ranges=act_ranges,
+                            default_range=scfg.act_range)
 
     def to_bf16(x):
         if hasattr(x, "dtype") and x.dtype == jnp.float32 and x.ndim >= 1:
@@ -76,9 +103,17 @@ def build_serving_params(params: Any, cfg: ArchConfig, scfg: ServeConfig,
     return walk(packed)
 
 
+_CACHE_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                 "int8": jnp.int8}
+
+
 def _cache_dt(scfg: ServeConfig):
-    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
-            "int8": jnp.int8}[scfg.cache_dtype]
+    try:
+        return _CACHE_DTYPES[scfg.cache_dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown cache_dtype {scfg.cache_dtype!r}; "
+            f"valid choices: {sorted(_CACHE_DTYPES)}") from None
 
 
 def make_prefill_step(cfg: ArchConfig, max_len: int, mesh=None,
@@ -102,20 +137,33 @@ def make_decode_step(cfg: ArchConfig, mesh=None, scfg: ServeConfig = ServeConfig
 
 
 # ---------------------------------------------------------------------------
-# CLI: continuous-batching engine (default) / legacy lock-step demo
+# CLI: continuous-batching engine (default) / legacy lock-step demo / plan
 # ---------------------------------------------------------------------------
+
+
+def _spec_from_args(args) -> NumericsSpec | None:
+    """Spec from CLI flags: --spec-json wins, then --preset, then --mode/--m
+    shorthand.  Returns None for float serving (no packing at all)."""
+    if getattr(args, "spec_json", None):
+        with open(args.spec_json) as f:
+            return NumericsSpec.from_json(f.read())
+    if getattr(args, "preset", None):
+        return get_preset(args.preset)
+    if args.mode == "float":
+        return None
+    policy = ApproxPolicy(args.mode, 0 if args.mode == "exact" else args.m,
+                          use_cv=not args.no_cv)
+    return get_preset("serve-default", policy=policy)
 
 
 def _prepare_params(cfg: ArchConfig, args):
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    if args.mode == "float":
+    spec = _spec_from_args(args)
+    if spec is None:
         return params, "float"
-    scfg = ServeConfig(
-        policy=ApproxPolicy(args.mode, 0 if args.mode == "exact" else args.m,
-                            use_cv=not args.no_cv)
-    )
-    return build_serving_params(params, cfg, scfg), scfg.policy.label()
+    scfg = ServeConfig(spec=spec)
+    return build_serving_params(params, cfg, scfg), spec.name
 
 
 def mixed_trace(cfg: ArchConfig, n_requests: int, max_len: int,
@@ -142,7 +190,7 @@ def run_engine(args) -> dict:
     params, label = _prepare_params(cfg, args)
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.chunk, cache_dtype=args.cache_dtype)
-    eng = ServingEngine(cfg, params, ecfg)
+    eng = ServingEngine(cfg, params, ecfg, numerics=label)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
           f"kv={ecfg.cache_dtype}")
@@ -190,13 +238,51 @@ def run_legacy(args) -> None:
     print("sample:", np.asarray(gen[0])[:16].tolist())
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
+def run_plan(args) -> PackPlan:
+    """`plan` subcommand: resolve and print the per-layer assignment table
+    without packing — parameters are abstract (eval_shape), so this is
+    instant and allocation-free."""
+    cfg = get_config(args.arch)
+    api = build_model(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    spec = _spec_from_args(args)
+    if spec is None:
+        raise SystemExit("nothing to plan for float serving (pick --preset, "
+                         "--spec-json, or --mode/--m)")
+    plan = spec.resolve(params)
+    if args.json:
+        print(plan.to_json(indent=2))
+    else:
+        print(f"arch={cfg.name} spec={spec.name}")
+        print(plan.table())
+    return plan
+
+
+def _add_numerics_flags(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--arch", default="olmo-1b-reduced")
     ap.add_argument("--mode", default="perforated",
                     choices=["exact", "perforated", "truncated", "recursive", "float"])
     ap.add_argument("--m", type=int, default=2)
     ap.add_argument("--no-cv", action="store_true")
+    ap.add_argument("--preset", default=None,
+                    help="named NumericsSpec preset (serve-default, int8, ...)")
+    ap.add_argument("--spec-json", default=None, metavar="FILE",
+                    help="serve under a NumericsSpec loaded from a JSON file")
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+
+    if argv and argv[0] == "plan":
+        ap = argparse.ArgumentParser(prog="repro.launch.serve plan")
+        _add_numerics_flags(ap)
+        ap.add_argument("--json", action="store_true",
+                        help="emit the PackPlan as JSON instead of a table")
+        run_plan(ap.parse_args(argv[1:]))
+        return
+
+    ap = argparse.ArgumentParser()
+    _add_numerics_flags(ap)
     # engine path (default)
     ap.add_argument("--engine", action="store_true",
                     help="continuous-batching engine (default path)")

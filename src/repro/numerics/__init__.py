@@ -1,0 +1,38 @@
+"""Declarative, serializable numerics configuration — the single entrypoint
+for per-layer approximation across packing, serving, and sweeps.
+
+The three-step contract::
+
+    spec = get_preset("serve-default")            # or NumericsSpec(...)
+    plan = spec.resolve(params)                   # inspectable assignment table
+    packed = apply_numerics(params, plan, act_ranges=ranges)
+
+Specs are ordered pattern rules (segment-anchored glob / regex on
+parameter-tree paths) mapping to an ApproxPolicy, FLOAT, or a deferred
+``auto(budget=...)`` search; they round-trip through JSON so the same
+object travels in checkpoints, CLI flags, and engine metadata.  See
+docs/numerics.md for the worked example.
+"""
+
+from repro.numerics.plan import PackPlan, PlanEntry, apply_numerics
+from repro.numerics.presets import (PRESETS, SERVE_FLOAT_RULES, get_preset,
+                                    paper_grid_specs, uniform_spec)
+from repro.numerics.spec import (FLOAT, Auto, NumericsSpec, Rule, auto,
+                                 match_path)
+
+__all__ = [
+    "NumericsSpec",
+    "Rule",
+    "Auto",
+    "auto",
+    "FLOAT",
+    "match_path",
+    "PackPlan",
+    "PlanEntry",
+    "apply_numerics",
+    "PRESETS",
+    "SERVE_FLOAT_RULES",
+    "get_preset",
+    "paper_grid_specs",
+    "uniform_spec",
+]

@@ -1,0 +1,106 @@
+"""Named NumericsSpec presets.
+
+``get_preset(name, **kw)`` is the catalogue the CLI / ServeConfig /
+benchmarks draw from:
+
+  * ``serve-default`` — the production serving recipe: the documented
+    keep-float rule-set below plus one uniform policy (paper default
+    perforated m=2 + CV) everywhere else;
+  * ``int8`` — same rule-set, exact int8 everywhere else (the paper's
+    baseline array);
+  * ``paper-grid`` — the serving rule-set with an ``auto(budget=...)``
+    default: per-layer greedy assignment over the paper's Tables 2-4
+    candidate grid at resolve time.
+
+``paper_grid_specs()`` expands the same Tables 2-4 grid into one uniform
+spec per (multiplier, m) point — the sweep form benchmarks iterate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.policy import INT8_EXACT, ApproxPolicy, Backend, paper_policies
+from repro.numerics.spec import FLOAT, Auto, NumericsSpec, Rule
+
+__all__ = [
+    "SERVE_FLOAT_RULES",
+    "PRESETS",
+    "get_preset",
+    "paper_grid_specs",
+    "uniform_spec",
+]
+
+
+#: The serving keep-float rule-set (was the ``SERVE_SKIP`` substring list in
+#: launch/serve.py).  Patterns are segment-anchored globs — ``*norm``
+#: matches the ``attn_norm`` / ``q_norm`` / ``final_norm`` segments but NOT
+#: a hypothetical ``denormalizer`` layer, which the old substring test
+#: matched by accident.
+SERVE_FLOAT_RULES: tuple[Rule, ...] = (
+    Rule("embed*", FLOAT, note="token embedding: a lookup, not a GEMM"),
+    Rule("router", FLOAT, note="MoE router: control logic stays exact"),
+    Rule("kv_a", FLOAT, note="MLA latent down-proj: absorbed-decode einsum"),
+    Rule("kv_b", FLOAT, note="MLA latent up-proj: absorbed-decode einsum"),
+    Rule("*norm", FLOAT, note="norm scales: elementwise, no MAC array"),
+    Rule("dt_proj", FLOAT, note="SSM dt projection: tiny, timestep-critical"),
+    Rule("x_proj", FLOAT, note="SSM input mix: tiny low-rank projection"),
+)
+
+
+def serve_default(policy: ApproxPolicy | None = None) -> NumericsSpec:
+    pol = policy if policy is not None else ApproxPolicy("perforated", 2,
+                                                         use_cv=True)
+    return NumericsSpec(name=f"serve-default[{pol.label()}]",
+                        rules=SERVE_FLOAT_RULES, default=pol)
+
+
+def int8() -> NumericsSpec:
+    return NumericsSpec(name="int8", rules=SERVE_FLOAT_RULES,
+                        default=INT8_EXACT)
+
+
+def paper_grid(budget: float = 0.05) -> NumericsSpec:
+    return NumericsSpec(name=f"paper-grid[auto<={budget}]",
+                        rules=SERVE_FLOAT_RULES,
+                        default=Auto(budget_rel_err=budget))
+
+
+PRESETS = {
+    "serve-default": serve_default,
+    "int8": int8,
+    "paper-grid": paper_grid,
+}
+
+
+def get_preset(name: str, **kwargs) -> NumericsSpec:
+    """Build a named preset spec (kwargs are preset-specific, e.g.
+    ``policy=`` for serve-default, ``budget=`` for paper-grid)."""
+    try:
+        builder = PRESETS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown numerics preset {name!r}; known: {sorted(PRESETS)}"
+        ) from None
+    return builder(**kwargs)
+
+
+def uniform_spec(policy: ApproxPolicy | None,
+                 rules: tuple[Rule, ...] = (),
+                 name: str | None = None) -> NumericsSpec:
+    """One policy everywhere (after ``rules``) — the spec form of the old
+    ``uniform_policy`` helper."""
+    label = "float" if policy is None else policy.label()
+    return NumericsSpec(name=name or f"uniform[{label}]", rules=rules,
+                        default=policy)
+
+
+def paper_grid_specs(use_cv: bool = True, backend: Backend = "jnp",
+                     rules: tuple[Rule, ...] = ()) -> list[NumericsSpec]:
+    """The Tables 2-4 sweep: one uniform spec per (multiplier, m) grid
+    point, in the paper's presentation order."""
+    return [
+        dataclasses.replace(uniform_spec(p, rules=rules),
+                            name=f"paper-grid/{p.label()}")
+        for p in paper_policies(use_cv=use_cv, backend=backend)
+    ]

@@ -7,7 +7,10 @@ participating request (streaming tokens to callbacks as they decode).
 
 The same engine serves float, exact-int8, and approximate+CV packed
 parameters — numerics live entirely in the parameter representation
-(``repro.launch.serve.build_serving_params``), not in the engine.
+(``repro.launch.serve.build_serving_params``), not in the engine.  The
+engine records which NumericsSpec produced its parameters (``numerics=``,
+normally the spec's name) and surfaces it through the metrics snapshot so
+a fleet's per-engine numerics are auditable from monitoring alone.
 
 Generation is greedy (argmax), matching the sequential
 ``prefill``/``decode_step`` baseline token for token — the equivalence
@@ -34,18 +37,20 @@ from repro.serving.scheduler import ScheduledBatch, SlotScheduler
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = EngineConfig(),
-                 mesh=None, api: ModelApi | None = None) -> None:
+                 mesh=None, api: ModelApi | None = None,
+                 numerics: str | None = None) -> None:
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
         self.api = api or build_model(cfg)
+        self.numerics = numerics  # active NumericsSpec name (None = unknown)
         self.pool = SlotPool(self.api, ecfg.slots, ecfg.max_len, ecfg.cache_dtype)
         self.queue = RequestQueue()
         self.admission = AdmissionController(ecfg.max_queue, ecfg.max_len,
                                              ecfg.prefill_chunk)
         self.scheduler = SlotScheduler(ecfg.slots, ecfg.prefill_chunk,
                                        ecfg.interleave)
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(numerics=numerics)
         self.active: dict[int, Request] = {}
         self._rid = itertools.count()
         decode_slots = self.api.decode_slots
@@ -111,6 +116,11 @@ class ServingEngine:
     def compile_count(self) -> int:
         """Number of shapes the jitted slot step has compiled for."""
         return self._step_fn._cache_size()
+
+    def reset_metrics(self) -> None:
+        """Fresh counters (e.g. after warmup) without losing the numerics
+        label the engine was built with."""
+        self.metrics = EngineMetrics(numerics=self.numerics)
 
     # -- postprocessing ------------------------------------------------------
 

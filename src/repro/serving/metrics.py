@@ -24,6 +24,10 @@ def _percentile(xs: list[float], q: float) -> float:
 class EngineMetrics:
     t_start: float = dataclasses.field(default_factory=time.time)
 
+    #: name of the NumericsSpec the served parameters were packed under
+    #: (None = unknown/float); surfaced in snapshot() for fleet audits
+    numerics: str | None = None
+
     prompt_tokens: int = 0
     generated_tokens: int = 0
     prefill_steps: int = 0
@@ -69,6 +73,7 @@ class EngineMetrics:
         elapsed = max(time.time() - self.t_start, 1e-9)
         total_tok = self.prompt_tokens + self.generated_tokens
         return {
+            "numerics": self.numerics,
             "elapsed_s": round(elapsed, 4),
             "requests_finished": self.finished,
             "requests_rejected": self.rejected,

@@ -43,8 +43,7 @@ def test_grouped_matches_per_expert(mode, m):
 def test_moe_with_packed_experts_runs():
     """End to end: pack a MoE layer's expert stacks and run moe_apply."""
     from repro.nn import moe as moelib
-    from repro.core.approx_linear import pack_params
-    from repro.core.policy import uniform_policy
+    from repro.numerics import Rule, apply_numerics, uniform_spec
 
     cfg = moelib.MoEConfig(d_model=32, d_ff_expert=16, n_experts=8, top_k=2,
                            n_shared=1)
@@ -52,9 +51,9 @@ def test_moe_with_packed_experts_runs():
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32))
     ref = moelib.moe_apply(p, x, cfg)
 
-    packed = pack_params(
-        p, uniform_policy(ApproxPolicy("perforated", 1), skip=("router",)),
-        default_range=(-6.0, 6.0))
+    spec = uniform_spec(ApproxPolicy("perforated", 1),
+                        rules=(Rule("router"),))
+    packed = apply_numerics(p, spec.resolve(p), default_range=(-6.0, 6.0))
     assert isinstance(packed["experts"]["gate"], QuantizedDense)
     out = moelib.moe_apply(packed, x, cfg)
     assert out.shape == ref.shape and bool(jnp.isfinite(out).all())

@@ -1,0 +1,325 @@
+"""The declarative numerics subsystem: spec JSON round-trip, rule
+precedence, segment-anchored matching (the SERVE_SKIP substring-fragility
+regression), plan/apply equivalence with the legacy uniform-policy path,
+auto-rule lowering, checkpoint spec persistence, and the serve CLI surface.
+"""
+
+import dataclasses
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.approx_linear import pack_params, packed_layer_paths
+from repro.core.policy import INT8_EXACT, ApproxPolicy, uniform_policy
+from repro.launch.serve import ServeConfig, build_serving_params, _cache_dt
+from repro.models import build_model
+from repro.numerics import (FLOAT, NumericsSpec, PackPlan, Rule,
+                            apply_numerics, auto, get_preset, match_path,
+                            paper_grid_specs, uniform_spec)
+
+
+def _toy_params(key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": {"table": jnp.zeros((32, 8))},
+        "blocks": {
+            "attn": {"q": {"w": jax.random.normal(k1, (8, 8)) * 0.3},
+                     "router": {"w": jnp.zeros((8, 4))}},
+            "denormalizer": {"w": jax.random.normal(k2, (8, 8)) * 0.3},
+            "attn_norm": {"scale": jnp.ones(8)},
+        },
+        "lm_head": {"w": jax.random.normal(k3, (8, 32)) * 0.3,
+                    "b": jnp.zeros(32)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# matching semantics
+# ---------------------------------------------------------------------------
+
+
+def test_glob_patterns_anchor_on_segments():
+    # a bare pattern must match a WHOLE segment, not a substring of one
+    assert match_path("norm", ("blocks", "0", "norm"))
+    assert not match_path("norm", ("blocks", "0", "denormalizer"))
+    assert match_path("*norm", ("blocks", "0", "attn_norm"))
+    assert not match_path("*norm", ("blocks", "0", "denormalizer"))
+    # path patterns: * stays within a segment, ** spans segments
+    assert match_path("blocks/*/q", ("blocks", "7", "q"))
+    assert not match_path("blocks/*/q", ("blocks", "7", "mlp", "q"))
+    assert match_path("blocks/**/q", ("blocks", "7", "mlp", "q"))
+    assert not match_path("blocks/*", ("blocks",))
+    # regex rules search the joined path
+    assert match_path(r"attn/(q|v)$", ("blocks", "attn", "q"), kind="regex")
+    assert not match_path(r"attn/(q|v)$", ("blocks", "attn", "o"), kind="regex")
+
+
+def test_serve_skip_substring_regression():
+    """The old SERVE_SKIP substring test would keep a hypothetical
+    `denormalizer` layer float because it contains "norm"; the preset's
+    segment-anchored rules must pack it while still skipping router."""
+    params = _toy_params()
+    plan = get_preset("serve-default").resolve(params)
+    by_path = {e.path: e for e in plan.entries}
+    assert by_path["blocks/denormalizer"].policy is not None  # packed now
+    assert by_path["blocks/attn/router"].policy is None  # still float
+    assert by_path["blocks/attn/router"].rule == "router"
+
+
+def test_rule_precedence_first_match_wins():
+    spec = NumericsSpec(
+        name="prec",
+        rules=(Rule("lm_head", ApproxPolicy("truncated", 5)),
+               Rule("lm_head", FLOAT),  # shadowed by the rule above
+               Rule("**/q", FLOAT),
+               Rule("router", FLOAT)),
+        default=ApproxPolicy("perforated", 2))
+    params = _toy_params()
+    plan = spec.resolve(params)
+    by_path = {e.path: e for e in plan.entries}
+    assert by_path["lm_head"].policy == ApproxPolicy("truncated", 5)
+    assert by_path["blocks/attn/q"].policy is None
+    assert by_path["blocks/denormalizer"].policy == ApproxPolicy("perforated", 2)
+    assert by_path["blocks/denormalizer"].rule == "default"
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_round_trip_identical_plan():
+    spec = NumericsSpec(
+        name="rt",
+        rules=(Rule("*norm", FLOAT, note="norms stay float"),
+               Rule("router", FLOAT),
+               Rule("lm_head", ApproxPolicy("recursive", 3, groups=2)),
+               Rule(r"attn/(q|v)$", auto(budget=0.1), kind="regex")),
+        default=ApproxPolicy("perforated", 2))
+    spec2 = NumericsSpec.from_json(spec.to_json())
+    assert spec2 == spec
+
+    # auto-free subset resolves identically through the JSON round trip
+    plain = dataclasses.replace(spec, rules=spec.rules[:3])
+    params = _toy_params()
+    plan = plain.resolve(params)
+    plan2 = NumericsSpec.from_json(plain.to_json()).resolve(params)
+    assert plan == plan2
+
+    # the plan itself round-trips too (it travels in engine/checkpoint metadata)
+    assert PackPlan.from_json(plan.to_json()) == plan
+
+
+def test_spec_json_round_trip_on_real_model():
+    cfg = get_config("olmo-1b-reduced")
+    api = build_model(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    spec = get_preset("serve-default")
+    plan = spec.resolve(params)
+    plan2 = NumericsSpec.from_json(spec.to_json()).resolve(params)
+    assert plan == plan2
+    assert len(plan.entries) > 0
+    # resolution is pure shape work: it ran on an abstract eval_shape tree
+
+
+def test_unknown_preset_and_bad_actions_raise():
+    with pytest.raises(ValueError, match="unknown numerics preset"):
+        get_preset("nope")
+    with pytest.raises(ValueError, match="unknown candidate set"):
+        auto(candidates="nope")
+    with pytest.raises(ValueError):
+        Rule("x", kind="substring")
+
+
+# ---------------------------------------------------------------------------
+# plan/apply equivalence with the legacy path
+# ---------------------------------------------------------------------------
+
+
+def test_apply_equivalent_to_legacy_uniform_policy():
+    """spec.resolve + apply_numerics must be bit-identical to the old
+    pack_params(uniform_policy(...)) call it replaces."""
+    params = _toy_params()
+    policy = ApproxPolicy("perforated", 2, use_cv=True)
+    spec = uniform_spec(policy, rules=(Rule("router"),))
+    new = apply_numerics(params, spec.resolve(params))
+    old = pack_params(params, uniform_policy(policy, skip=("router",)))
+    assert packed_layer_paths(new) == packed_layer_paths(old)
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 8))
+    from repro.core.approx_linear import dense
+    y_new = dense(new["blocks"]["attn"]["q"], x)
+    y_old = dense(old["blocks"]["attn"]["q"], x)
+    assert np.array_equal(np.asarray(y_new), np.asarray(y_old))
+
+
+def test_serve_default_token_identical_to_legacy_serving_params():
+    """Acceptance: the serve-default preset through spec/plan/apply yields
+    logits token-identical (in fact bit-identical) to the legacy
+    policy-shorthand build_serving_params on olmo-1b-reduced."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab)
+
+    legacy = build_serving_params(
+        params, cfg, ServeConfig(policy=ApproxPolicy("perforated", 2,
+                                                     use_cv=True)))
+    spec = get_preset("serve-default")
+    plan = spec.resolve(params)
+    new = build_serving_params(params, cfg, ServeConfig(spec=spec), plan=plan)
+
+    lg_legacy = api.forward(legacy, {"tokens": toks})
+    lg_new = api.forward(new, {"tokens": toks})
+    assert np.array_equal(np.asarray(lg_legacy), np.asarray(lg_new))
+    assert np.array_equal(np.asarray(jnp.argmax(lg_legacy, -1)),
+                          np.asarray(jnp.argmax(lg_new, -1)))
+
+
+def test_apply_rejects_mismatched_plan():
+    params = _toy_params()
+    plan = get_preset("serve-default").resolve(params)
+    del params["lm_head"]
+    with pytest.raises(ValueError, match="does not match"):
+        apply_numerics(params, plan)
+
+
+def test_paper_grid_specs_match_paper_policies():
+    from repro.core.policy import paper_policies
+
+    specs = paper_grid_specs(use_cv=True)
+    policies = paper_policies(use_cv=True)
+    assert [s.default for s in specs] == policies
+    assert all(not s.rules for s in specs)  # sweep packs every layer
+
+
+# ---------------------------------------------------------------------------
+# auto lowering
+# ---------------------------------------------------------------------------
+
+
+def test_auto_rule_lowers_to_concrete_policies():
+    from repro.core.approx_linear import dense
+
+    params = _toy_params()
+
+    def apply_fn(p, x):  # a small dense stack routed through every layer
+        h = dense(p["blocks"]["attn"]["q"], x)
+        h = dense(p["blocks"]["denormalizer"], jax.nn.gelu(h))
+        return dense(p["lm_head"], h)
+
+    spec = NumericsSpec(
+        name="auto-test",
+        rules=(Rule("router", FLOAT), Rule("embed*", FLOAT)),
+        default=auto(budget=0.15))
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+    plan = spec.resolve(params, apply_fn=apply_fn, calib_inputs=x)
+    by_path = {e.path: e for e in plan.entries}
+    # every auto layer lowered to a CONCRETE policy (auto never reaches apply)
+    for e in plan.entries:
+        assert e.policy is None or isinstance(e.policy, ApproxPolicy)
+    assert by_path["blocks/attn/router"].policy is None
+    lowered = [e for e in plan.entries if "auto" in e.rule]
+    assert lowered and all(e.policy is not None for e in lowered)
+
+    # budget respected end to end
+    packed = apply_numerics(params, plan)
+    ref = apply_fn(params, x)
+    out = apply_fn(packed, x)
+    rel = float(jnp.abs(out - ref).mean() / (jnp.abs(ref).mean() + 1e-12))
+    assert rel < 0.6, rel
+
+
+def test_auto_requires_calibration_inputs():
+    params = _toy_params()
+    spec = NumericsSpec(name="a", default=auto(budget=0.1))
+    with pytest.raises(ValueError, match="auto"):
+        spec.resolve(params)
+
+
+# ---------------------------------------------------------------------------
+# spec persistence in checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_persists_numerics_spec():
+    from repro.checkpoint import CheckpointManager, read_meta
+
+    spec = get_preset("int8")
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(tree, 3, numerics=spec)
+        restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+        assert step == 3
+        assert np.array_equal(np.asarray(restored["w"]), tree["w"])
+        assert mgr.numerics() == spec
+        # raw metadata is readable without decoding tensors
+        meta = read_meta(os.path.join(d, "step_0000000003",
+                                      "shard_00000.ckpt"))
+        assert meta["numerics"]["name"] == "int8"
+        # steps saved without a spec report None
+        mgr.save(tree, 4)
+        assert mgr.numerics(4) is None
+
+
+def test_save_pytree_meta_reserved_key():
+    from repro.checkpoint import save_pytree
+
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError, match="reserved"):
+            save_pytree({"w": np.zeros(2)}, os.path.join(d, "x.ckpt"),
+                        meta={"codec": "zstd"})
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_cache_dtype_error_lists_choices():
+    with pytest.raises(ValueError) as e:
+        _cache_dt(ServeConfig(cache_dtype="fp8"))
+    msg = str(e.value)
+    assert "fp8" in msg and "bfloat16" in msg and "int8" in msg
+
+
+def test_plan_cli_runs_without_packing(capsys):
+    from repro.launch.serve import main
+
+    main(["plan", "--arch", "olmo-1b-reduced"])
+    out = capsys.readouterr().out
+    assert "perforated(m=2)+cv(g=1)" in out
+    assert "packed" in out
+
+    main(["plan", "--arch", "olmo-1b-reduced", "--preset", "int8", "--json"])
+    out = capsys.readouterr().out
+    plan = PackPlan.from_dict(json.loads(out))
+    assert plan.spec_name == "int8"
+    assert all(e.policy in (None, INT8_EXACT) for e in plan.entries)
+
+
+def test_engine_metrics_expose_numerics_label():
+    from repro.configs.base import EngineConfig
+    from repro.serving import ServingEngine
+
+    cfg = get_config("olmo-1b-reduced")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    spec = get_preset("serve-default")
+    packed = build_serving_params(params, cfg, ServeConfig(spec=spec))
+    eng = ServingEngine(cfg, packed,
+                        EngineConfig(slots=2, max_len=32, prefill_chunk=8),
+                        numerics=spec.name)
+    eng.submit([1, 2, 3], 2)
+    eng.run()
+    assert eng.metrics.snapshot()["numerics"] == spec.name
+    eng.reset_metrics()  # warmup reset keeps the label
+    assert eng.metrics.snapshot()["numerics"] == spec.name

@@ -11,7 +11,7 @@ except ImportError:  # container without the wheel: deterministic fallback
 
 from repro import quant
 from repro.core.approx_linear import QuantizedDense, dense, pack_dense, pack_params
-from repro.core.policy import ApproxPolicy, uniform_policy
+from repro.core.policy import ApproxPolicy
 
 
 def test_quantize_roundtrip_error_bounded():
@@ -62,15 +62,17 @@ def test_cv_beats_no_cv_at_layer_level(mode, m):
 
 
 def test_pack_params_walks_tree_and_skips():
+    from repro.numerics import Rule, apply_numerics, uniform_spec
+
     params = {
         "blocks": {"attn": {"q": {"w": jnp.ones((8, 8))}},
                    "norm": {"scale": jnp.ones(8)}},
         "router": {"w": jnp.ones((8, 4))},
     }
-    packed = pack_params(params, uniform_policy(ApproxPolicy("perforated", 2),
-                                                skip=("router",)))
+    spec = uniform_spec(ApproxPolicy("perforated", 2), rules=(Rule("router"),))
+    packed = apply_numerics(params, spec.resolve(params))
     assert isinstance(packed["blocks"]["attn"]["q"], QuantizedDense)
-    assert isinstance(packed["router"], dict)  # skipped
+    assert isinstance(packed["router"], dict)  # kept float by the rule
     assert "scale" in packed["blocks"]["norm"]
 
 

@@ -12,6 +12,13 @@ if [[ -z "${SKIP_TESTS:-}" ]]; then
     python -m pytest -x -q
 fi
 
+echo "== numerics plan (declarative spec -> assignment table, no packing) =="
+python -m repro.launch.serve plan --arch olmo-1b-reduced
+python -m repro.launch.serve plan --arch olmo-1b-reduced --preset int8 --json > /dev/null
+
+echo "== quickstart (spec/plan/apply public API) =="
+python examples/quickstart.py
+
 echo "== serving-engine smoke (reduced model, approximate+CV) =="
 python -m repro.launch.serve --engine --requests 8 \
     --arch olmo-1b-reduced --mode perforated --m 2 \
