@@ -2,10 +2,25 @@
 of the Pallas kernels in interpret mode (CPU container; interpret timings
 measure Python-loop emulation, NOT TPU performance — the TPU-relevant
 numbers are the §Roofline terms; these rows track relative costs and
-regressions)."""
+regressions).
+
+The ``packed_dense`` rows are END-TO-END serving-path timings (float
+activations through ``dense()``/``dense_group()`` on the jnp backend — the
+path serve_bench actually exercises on CPU) at the two shapes the
+continuous-batching engine compiles: prefill chunks (M=128) and one-token
+decode over the slot batch (M=4).  Results persist to BENCH_kernels.json at
+the repo root so the kernel-path perf trajectory is tracked alongside
+BENCH_serve.json.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench          # full reps
+    PYTHONPATH=src python -m benchmarks.kernel_bench --reps 1 # CI quick mode
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -15,17 +30,90 @@ import numpy as np
 from repro.core import multipliers as am
 from repro.core import control_variate as cv
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
+
+#: serving shapes for the end-to-end packed-dense rows (reduced-model scale:
+#: fan-in/width around the CPU bench configs, M = engine batch shapes)
+PACKED_K, PACKED_N = 256, 512
+PREFILL_M, DECODE_M = 128, 4
+
 
 def _time(fn, *args, reps=5) -> float:
-    fn(*args)  # warmup/compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+    """Best-of-``reps`` wall time in µs (min rejects scheduler interference
+    on shared CI boxes; each rep is individually synchronized)."""
+    jax.block_until_ready(fn(*args))  # warmup/compile
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
-def run() -> list[dict]:
+def _packed_dense_rows(reps: int) -> list[dict]:
+    """End-to-end ``dense()`` timings: float baseline vs packed numerics at
+    prefill (M=128) and decode (M=4) shapes, plus the fan-out-fused QKV
+    group vs three separate calls."""
+    from repro.core.approx_linear import (dense, dense_group, pack_dense,
+                                          pack_params)
+    from repro.core.policy import ApproxPolicy
+
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.05, (PACKED_K, PACKED_N)), jnp.float32)
+    fp = {"w": w}
+    rows = []
+    policies = [
+        ("int8-exact", ApproxPolicy("exact", 0)),
+        ("perforated-m2-cv", ApproxPolicy("perforated", 2)),
+    ]
+    for m_rows, tag in [(PREFILL_M, "prefill_m128"), (DECODE_M, "decode_m4")]:
+        x = jnp.asarray(rng.normal(0, 1, (m_rows, PACKED_K)), jnp.float32)
+        f_float = jax.jit(lambda x: dense(fp, x))
+        rows.append({
+            "name": f"kernel/packed_dense/{tag}/float",
+            "us_per_call": round(_time(f_float, x, reps=reps), 1),
+        })
+        for label, pol in policies:
+            qd = pack_dense(fp, pol, (-4.0, 4.0))
+            f = jax.jit(lambda x, qd=qd: dense(qd, x))
+            rows.append({
+                "name": f"kernel/packed_dense/{tag}/{label}",
+                "us_per_call": round(_time(f, x, reps=reps), 1),
+            })
+
+        # fan-out fusion: fused QKV group vs three separate dense calls
+        # ("o" anchors the attention-shaped dict for fusion eligibility)
+        qkv = {
+            "q": {"w": w[:, : PACKED_N // 2]},
+            "k": {"w": w[:, PACKED_N // 2 : 3 * PACKED_N // 4]},
+            "v": {"w": w[:, 3 * PACKED_N // 4 :]},
+            "o": {"w": w[:, : PACKED_N // 2].T},
+        }
+        pol = ApproxPolicy("perforated", 2)
+        fused = pack_params(qkv, lambda p: pol)
+        sep = pack_params(qkv, lambda p: pol, fuse=False)
+        # return every output: XLA would dead-code-eliminate unused members
+        f_fused = jax.jit(lambda x: tuple(dense_group(fused["qkv"], x).values()))
+        f_sep = jax.jit(lambda x: (dense(sep["q"], x), dense(sep["k"], x),
+                                   dense(sep["v"], x)))
+        us_f = _time(f_fused, x, reps=reps)
+        us_s = _time(f_sep, x, reps=reps)
+        rows.append({
+            "name": f"kernel/packed_dense/{tag}/qkv_fused",
+            "us_per_call": round(us_f, 1),
+            "speedup_vs_separate": round(us_s / max(us_f, 1e-9), 2),
+        })
+        rows.append({
+            "name": f"kernel/packed_dense/{tag}/qkv_separate",
+            "us_per_call": round(us_s, 1),
+        })
+    return rows
+
+
+def run(reps: int | None = None, write: bool = True) -> list[dict]:
+    if reps is None:
+        reps = int(os.environ.get("KERNEL_BENCH_REPS", "5"))
     rows = []
     rng = np.random.default_rng(0)
     m_, k_, n_ = 256, 1024, 256
@@ -34,15 +122,18 @@ def run() -> list[dict]:
 
     exact = jax.jit(lambda a, w: am.approx_matmul(a, w, "exact", 0))
     rows.append({"name": "kernel/xla_int_matmul_256x1024x256",
-                 "us_per_call": round(_time(exact, a, w), 1),
+                 "us_per_call": round(_time(exact, a, w, reps=reps), 1),
                  "gflops": round(2 * m_ * k_ * n_ / 1e9, 3)})
 
     for mode, m in [("perforated", 2), ("recursive", 3), ("truncated", 6)]:
         f = jax.jit(lambda a, w, mode=mode, m=m: cv.approx_matmul_cv(a, w, mode, m))
-        us = _time(f, a, w)
+        us = _time(f, a, w, reps=reps)
         rows.append({"name": f"kernel/xla_approx_cv/{mode}_m{m}",
                      "us_per_call": round(us, 1),
-                     "overhead_vs_exact": round(us / max(_time(exact, a, w), 1e-9), 2)})
+                     "overhead_vs_exact": round(
+                         us / max(_time(exact, a, w, reps=reps), 1e-9), 2)})
+
+    rows.extend(_packed_dense_rows(reps))
 
     # Pallas interpret-mode correctness-path timing (NOT TPU performance)
     from repro.kernels import ops
@@ -55,7 +146,22 @@ def run() -> list[dict]:
         aq, wq, c, c, sqw, c, 0.01, 0.01, 0.0, 0.0,
         mode="perforated", m=2, interpret=True)
     rows.append({"name": "kernel/pallas_interpret_approx_matmul_128x512x128",
-                 "us_per_call": round(_time(lambda _: f(), None, reps=2), 1),
+                 "us_per_call": round(
+                     _time(lambda _: f(), None, reps=min(reps, 2)), 1),
+                 "note": "interpret mode (CPU emulation), TPU is the target"})
+
+    # blocked-layout fused kernel (quantize-in-kernel), same scale
+    from repro.core.approx_linear import pack_dense as _pd
+    from repro.core.policy import ApproxPolicy as _AP
+
+    qd = _pd({"w": jnp.asarray(rng.normal(0, 0.05, (512, 128)), jnp.float32)},
+             _AP("perforated", 2, backend="pallas"), (-4.0, 4.0))
+    xf = jnp.asarray(rng.normal(0, 1, (128, 512)), jnp.float32)
+    fb = lambda: ops.quantized_dense_fused_op(
+        xf, qd.blocked, mode="perforated", m=2, interpret=True)
+    rows.append({"name": "kernel/pallas_interpret_fused_blocked_128x512x128",
+                 "us_per_call": round(
+                     _time(lambda _: fb(), None, reps=min(reps, 2)), 1),
                  "note": "interpret mode (CPU emulation), TPU is the target"})
 
     from repro.kernels.rwkv6_scan import rwkv6_scan
@@ -70,8 +176,31 @@ def run() -> list[dict]:
     u = jnp.asarray(rng.normal(0, 0.3, (h, d)), jnp.float32)
     seq = jax.jit(lambda *xs: kref.rwkv6_scan_ref(*xs, jnp.zeros((b, h, d, d)))[0])
     rows.append({"name": "kernel/rwkv6_sequential_ref_T256",
-                 "us_per_call": round(_time(seq, r, k2, v2, wd, u), 1)})
+                 "us_per_call": round(_time(seq, r, k2, v2, wd, u, reps=reps), 1)})
     chunked = jax.jit(lambda *xs: rwkv6_scan(*xs, chunk=32, interpret=True))
     rows.append({"name": "kernel/rwkv6_chunked_interpret_T256",
-                 "us_per_call": round(_time(chunked, r, k2, v2, wd, u, reps=2), 1)})
+                 "us_per_call": round(
+                     _time(chunked, r, k2, v2, wd, u, reps=min(reps, 2)), 1)})
+
+    if write:
+        with open(OUT_JSON, "w") as fjson:
+            json.dump({"note": "CPU wall times (jnp paths + interpret-mode "
+                       "Pallas emulation); relative numbers are the signal",
+                       "method": "min over reps, per-rep sync",
+                       "reps": reps, "rows": rows}, fjson, indent=2)
     return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timing repetitions (1 = CI quick mode)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip persisting BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    for r in run(reps=args.reps, write=not args.no_write):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

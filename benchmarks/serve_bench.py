@@ -22,33 +22,43 @@ N_REQUESTS = 16
 SLOTS = 4
 MAX_LEN = 128
 CHUNK = 32
+#: measured traces per mode; the BEST run (gen tok/s) is reported.  Shared
+#: CI boxes schedule noisily — best-of-N applied identically to every mode
+#: keeps the float/int8/approx comparison fair while rejecting interference.
+REPEATS = int(os.environ.get("SERVE_BENCH_REPEATS", "3"))
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_JSON = os.path.join(_ROOT, "BENCH_serve.json")
 
 
-def _bench_mode(cfg, params, label: str, numerics: str | None = None) -> dict:
+def _make_engine(cfg, params, numerics: str | None):
     from repro.configs.base import EngineConfig
-    from repro.launch.serve import mixed_trace
     from repro.serving import ServingEngine
 
     ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
                         cache_dtype="bfloat16")
     eng = ServingEngine(cfg, params, ecfg, numerics=numerics)
-
     # warmup: trigger both compiled shapes (prefill chunk + decode) so the
-    # measured trace reflects steady-state serving, not XLA compilation
+    # measured traces reflect steady-state serving, not XLA compilation
     eng.submit(list(range(1, 9)), 2)
     eng.run()
-    eng.reset_metrics()
+    return eng
 
+
+def _run_trace(cfg, eng, label: str) -> dict:
+    from repro.launch.serve import mixed_trace
+
+    eng.reset_metrics()
     for prompt, gen in mixed_trace(cfg, N_REQUESTS, MAX_LEN, CHUNK, seed=1):
         eng.submit(prompt, gen)
     finished = eng.run()
     snap = eng.metrics.snapshot()
     assert len(finished) == N_REQUESTS, (label, len(finished))
     assert eng.compile_count() <= 2, eng.compile_count()
+    return snap
 
+
+def _row(label: str, snap: dict) -> dict:
     gen_tok = max(snap["generated_tokens"], 1)
     return {
         "name": f"serve/{label}",
@@ -84,16 +94,31 @@ def run() -> list[dict]:
         ("int8-exact", get_preset("int8")),
         ("perforated-m2-cv", get_preset("serve-default")),
     ]
-    rows = []
+    # engines up front, repeats ROUND-ROBIN over modes: scheduler
+    # interference on shared boxes hits every mode alike instead of biasing
+    # whichever mode happened to run during a slow window
+    engines = []
     for label, spec in modes:
         p = params if spec is None else build_serving_params(
             params, cfg, ServeConfig(spec=spec))
-        rows.append(_bench_mode(cfg, p, label,
-                                numerics=None if spec is None else spec.name))
+        engines.append((label, _make_engine(
+            cfg, p, numerics=None if spec is None else spec.name)))
+
+    best: dict[str, dict] = {}
+    for _ in range(max(REPEATS, 1)):
+        for label, eng in engines:
+            snap = _run_trace(cfg, eng, label)
+            if (label not in best
+                    or snap["gen_tok_per_s"] > best[label]["gen_tok_per_s"]):
+                best[label] = snap
+    rows = [_row(label, best[label]) for label, _ in engines]
 
     with open(OUT_JSON, "w") as f:
         json.dump({"arch": ARCH, "note": "CPU emulation of the approximate "
                    "MAC array; relative numbers are the signal",
+                   "method": f"best-of-{max(REPEATS, 1)} round-robin repeats "
+                   "per mode, warm engines (numbers are not comparable to "
+                   "single-run measurements)",
                    "rows": rows}, f, indent=2)
     return rows
 

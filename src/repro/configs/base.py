@@ -20,6 +20,8 @@ class EngineConfig:
     ``slots`` fixes the decode batch shape (the jitted step never
     recompiles); ``max_len`` is the per-slot KV capacity; prompts are
     processed in ``prefill_chunk``-token pieces interleaved with decode.
+    Slot counts <= repro.kernels.ops.DECODE_M_MAX additionally hit the
+    packed-dense kernels' decode-specialized (thin-M, single-K-step) tiles.
     """
 
     slots: int = 8

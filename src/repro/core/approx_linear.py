@@ -26,22 +26,58 @@ from repro.core import control_variate as cv
 from repro.core import multipliers as am
 from repro.core.policy import ApproxPolicy, PolicyFn
 from repro.quant.quantize import (
+    BlockedPack,
     PackedLinear,
     QuantParams,
+    build_blocked_layout,
+    build_fold,
     calibrate_minmax,
+    concat_packs,
+    folded_linear,
     pack_linear,
     quantized_linear,
+    serving_blocks,
 )
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QuantizedDense:
-    """Packed approximate linear layer.  ``policy`` is static metadata."""
+    """Packed approximate linear layer.  ``policy`` is static metadata.
+
+    ``blocked`` (pallas-backend packs only) is the offline-blocked serving
+    layout: weight codes pre-padded to kernel tiles and all epilogue
+    operands in one aligned table, so the forward pass never pads or
+    assembles static parameters (see repro.quant.BlockedPack).
+    """
 
     pack: PackedLinear
     a_qp: QuantParams
     policy: ApproxPolicy = dataclasses.field(metadata=dict(static=True))
+    blocked: BlockedPack | None = None
+    fold: dict | None = None
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedDenseGroup:
+    """Fan-out-fused sibling linears (Q|K|V, gate|up) sharing one input.
+
+    One concatenated pack (per-column weight quant params) executes all
+    members in a single wide-N call: activations are quantized ONCE and the
+    per-row MAC* statistics (sumx, sumqa) are computed ONCE and reused for
+    every fused output column — they are per-row, column-independent, so the
+    fused outputs are bit-identical to the separate member calls.
+    ``names``/``splits`` recover the member outputs by column range.
+    """
+
+    pack: PackedLinear
+    a_qp: QuantParams
+    policy: ApproxPolicy = dataclasses.field(metadata=dict(static=True))
+    names: tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    splits: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    blocked: BlockedPack | None = None
+    fold: dict | None = None
 
 
 def is_linear_params(p: Any) -> bool:
@@ -60,10 +96,15 @@ def dense(p: Any, x: jax.Array, name: str | None = None) -> jax.Array:
 
     if isinstance(p, QuantizedDense):
         pol = p.policy
-        if pol.backend == "pallas" and pol.is_approx:
+        if pol.backend == "pallas" and pol.is_approx and pol.groups == 1:
             from repro.kernels import ops as kops
 
             return kops.quantized_dense_pallas(x, p).astype(x.dtype)
+        if p.fold is not None:  # serving fast path: folded float GEMMs
+            return folded_linear(x, p.fold, pol.mode, pol.m,
+                                 pol.use_cv).astype(x.dtype)
+        # grouped CV has no Pallas kernel yet: backend="pallas" with
+        # groups > 1 falls back to the jnp grouped path instead of crashing
         return quantized_linear(
             x,
             p.pack,
@@ -101,17 +142,8 @@ def init_dense(key, k: int, n: int, *, bias: bool = True, scale: float | None = 
 # ---------------------------------------------------------------------------
 
 
-def pack_dense(
-    p: dict,
-    policy: ApproxPolicy,
-    act_range: tuple[float, float] | tuple[jax.Array, jax.Array],
-) -> QuantizedDense:
-    """Pack one float linear layer for the approximate array.
-
-    Handles both 2D weights and 3D (layers, k, n) scanned stacks — for the
-    latter every per-layer slice gets its own quant/CV constants (vmapped),
-    and `lax.scan` over the resulting QuantizedDense xs slices them per step.
-    """
+def _pack_leaf(p: dict, policy: ApproxPolicy) -> PackedLinear:
+    """Quantize one float linear leaf (2D, or vmapped over a 3D stack)."""
     import functools
 
     w = p["w"]
@@ -125,15 +157,165 @@ def pack_dense(
         )
         if b is None:
             pack = dataclasses.replace(pack, bias=None)
-        # per-layer activation quant params so lax.scan can slice the pack
-        a_qp = calibrate_minmax(
+        return pack
+    return fn(w, b)
+
+
+def _act_qp(act_range, w: jax.Array) -> QuantParams:
+    """Activation quant params; per-layer vectors for 3D stacks so
+    ``lax.scan`` can slice the pack."""
+    if w.ndim == 3:
+        return calibrate_minmax(
             jnp.broadcast_to(jnp.asarray(act_range[0], jnp.float32), (w.shape[0],)),
             jnp.broadcast_to(jnp.asarray(act_range[1], jnp.float32), (w.shape[0],)),
         )
+    return calibrate_minmax(act_range[0], act_range[1])
+
+
+def _maybe_blocked(pack: PackedLinear, a_qp: QuantParams,
+                   policy: ApproxPolicy, ndim: int) -> BlockedPack | None:
+    """Offline-blocked serving layout for pallas-backend single-CV packs."""
+    if not (policy.backend == "pallas" and policy.is_approx
+            and policy.groups == 1):
+        return None
+    k, n = pack.w_q.shape[-2:]
+    bn, bk = serving_blocks(k, n)
+    if ndim == 3:
+        return jax.vmap(
+            lambda pk, aq: build_blocked_layout(pk, aq, bn, bk))(pack, a_qp)
+    return build_blocked_layout(pack, a_qp, bn, bk)
+
+
+def _maybe_fold(pack: PackedLinear, a_qp: QuantParams,
+                policy: ApproxPolicy) -> dict | None:
+    """Folded float serving operands for jnp-path packs (build_fold); the
+    pallas-approx path reads the blocked layout instead."""
+    if policy.backend == "pallas" and policy.is_approx and policy.groups == 1:
+        return None
+    return build_fold(pack, a_qp, policy.mode, policy.m, policy.use_cv)
+
+
+def pack_dense(
+    p: dict,
+    policy: ApproxPolicy,
+    act_range: tuple[float, float] | tuple[jax.Array, jax.Array],
+    fold: bool = True,
+) -> QuantizedDense:
+    """Pack one float linear layer for the approximate array.
+
+    Handles both 2D weights and 3D (layers, k, n) scanned stacks — for the
+    latter every per-layer slice gets its own quant/CV constants (vmapped),
+    and `lax.scan` over the resulting QuantizedDense xs slices them per step.
+    """
+    w = p["w"]
+    pack = _pack_leaf(p, policy)
+    a_qp = _act_qp(act_range, w)
+    return QuantizedDense(pack=pack, a_qp=a_qp, policy=policy,
+                          blocked=_maybe_blocked(pack, a_qp, policy, w.ndim),
+                          fold=_maybe_fold(pack, a_qp, policy) if fold
+                          else None)
+
+
+def pack_dense_group(
+    members: list[tuple[str, dict]],
+    policy: ApproxPolicy,
+    act_range: tuple[float, float] | tuple[jax.Array, jax.Array],
+    fold: bool = True,
+) -> QuantizedDenseGroup:
+    """Pack sibling linears that consume the SAME activations into one
+    fan-out-fused wide-N pack (quantize once, shared MAC* statistics).
+
+    Each member keeps its own weight quant scale/zero-point (per-column
+    vectors in the fused pack) and CV constants, so per-column arithmetic —
+    and therefore the outputs — are bit-identical to separate packing.
+    """
+    names = tuple(name for name, _ in members)
+    leaves = [leaf for _, leaf in members]
+    w0 = leaves[0]["w"]
+    splits = tuple(int(leaf["w"].shape[-1]) for leaf in leaves)
+    pack = concat_packs([_pack_leaf(leaf, policy) for leaf in leaves])
+    a_qp = _act_qp(act_range, w0)
+    return QuantizedDenseGroup(
+        pack=pack, a_qp=a_qp, policy=policy, names=names, splits=splits,
+        blocked=_maybe_blocked(pack, a_qp, policy, w0.ndim),
+        fold=_maybe_fold(pack, a_qp, policy) if fold else None)
+
+
+def dense_group(g: QuantizedDenseGroup, x: jax.Array) -> dict[str, jax.Array]:
+    """Run a fused fan-out group: one wide-N call, outputs split per member.
+
+    Returns ``{name: (..., n_name)}`` in the group's member order.
+    """
+    pol = g.policy
+    if (pol.backend == "pallas" and pol.is_approx and pol.groups == 1
+            and g.blocked is not None):
+        from repro.kernels import ops as kops
+
+        y = kops.quantized_dense_fused_op(
+            x, g.blocked, mode=pol.mode, m=pol.m, use_cv=pol.use_cv)
+    elif g.fold is not None:  # serving fast path: folded float GEMMs
+        y = folded_linear(x, g.fold, pol.mode, pol.m,
+                          pol.use_cv).astype(x.dtype)
     else:
-        pack = fn(w, b)
-        a_qp = calibrate_minmax(act_range[0], act_range[1])
-    return QuantizedDense(pack=pack, a_qp=a_qp, policy=policy)
+        y = quantized_linear(
+            x, g.pack, g.a_qp, pol.mode, pol.m,
+            use_cv=pol.use_cv, groups=pol.groups,
+        ).astype(x.dtype)
+    out: dict[str, jax.Array] = {}
+    off = 0
+    for name, n in zip(g.names, g.splits):
+        out[name] = jax.lax.slice_in_dim(y, off, off + n, axis=-1)
+        off += n
+    return out
+
+
+#: Sibling sets eligible for fan-out fusion (consume the SAME activations):
+#: (member names, fused key, companion key).  The companion key must also be
+#: present — it anchors the dict to the module shape whose call sites
+#: actually feed every member the same input (attention blocks have "o",
+#: swiglu has "down"), so name-coincidences in other modules (e.g. RWKV
+#: time-mix r/k/v with token-shifted inputs) can never fuse.  MoE expert
+#: stacks ("experts" dicts) carry the same member names but run through the
+#: ragged grouped-GEMM path, so they are never fused here.
+FUSABLE_GROUPS: tuple[tuple[tuple[str, ...], str, str], ...] = (
+    (("q", "k", "v"), "qkv", "o"),
+    (("gate", "up"), "gateup", "down"),
+)
+
+
+def _ranges_equal(a, b) -> bool:
+    import numpy as np
+
+    try:
+        return bool(np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                    and np.array_equal(np.asarray(a[1]), np.asarray(b[1])))
+    except Exception:
+        return False
+
+
+def _fusable(node: dict, names: tuple[str, ...], companion: str, path,
+             policy_fn, act_ranges, default_range):
+    """If ``names`` form a fusable sibling set in ``node``, return
+    (policy, act_range); else None."""
+    if companion not in node:
+        return None
+    if not all(n in node and is_linear_params(node[n]) for n in names):
+        return None
+    leaves = [node[n] for n in names]
+    w0 = leaves[0]["w"]
+    if any(leaf["w"].shape[:-1] != w0.shape[:-1] or leaf["w"].ndim != w0.ndim
+           for leaf in leaves):
+        return None  # different fan-in / stacking: not the same input
+    if len({("b" in leaf and leaf.get("b") is not None) for leaf in leaves}) > 1:
+        return None
+    policies = [policy_fn(path + (n,)) for n in names]
+    if policies[0] is None or any(p != policies[0] for p in policies):
+        return None
+    ranges = [(act_ranges or {}).get("/".join(path + (n,)), default_range)
+              for n in names]
+    if any(not _ranges_equal(r, ranges[0]) for r in ranges):
+        return None
+    return policies[0], ranges[0]
 
 
 def pack_params(
@@ -141,6 +323,8 @@ def pack_params(
     policy_fn: PolicyFn,
     act_ranges: dict[str, tuple[float, float]] | None = None,
     default_range: tuple[float, float] = (-8.0, 8.0),
+    fuse: bool = True,
+    fold: bool = True,
 ) -> Any:
     """Walk a parameter tree, replacing float linear leaves with packed ones.
 
@@ -148,6 +332,14 @@ def pack_params(
     ``act_ranges`` maps "/".join(path) -> (lo, hi) calibration stats recorded
     by :mod:`repro.quant.observers`.  Layers without stats use
     ``default_range`` (safe-wide; accuracy benchmarks always calibrate).
+
+    With ``fuse`` (default), sibling layers in :data:`FUSABLE_GROUPS` that
+    share a policy and activation range are packed into ONE fan-out-fused
+    :class:`QuantizedDenseGroup` (key "qkv" / "gateup", replacing the member
+    keys) — bit-identical outputs, one wide-N kernel call at serving time.
+    With ``fold`` (default), jnp-path packs carry the folded f32 serving
+    operands (:func:`repro.quant.quantize.build_fold`); pass ``fold=False``
+    to keep every pack on the exact-integer path (no f32 staging memory).
     """
 
     def walk(node: Any, path: tuple[str, ...]) -> Any:
@@ -157,9 +349,34 @@ def pack_params(
                 return node
             key = "/".join(path)
             rng = (act_ranges or {}).get(key, default_range)
-            return pack_dense(node, policy, rng)
+            # expert stacks run the ragged grouped-GEMM path, which reads
+            # only the canonical pack — folded operands would be dead weight
+            leaf_fold = fold and path[-2:-1] != ("experts",)
+            return pack_dense(node, policy, rng, fold=leaf_fold)
         if isinstance(node, dict):
-            return {k: walk(v, path + (str(k),)) for k, v in node.items()}
+            groups: dict[str, Any] = {}  # first-member key -> (group key, group)
+            consumed: set[str] = set()
+            if fuse and path[-1:] != ("experts",):
+                for names, gkey, companion in FUSABLE_GROUPS:
+                    if consumed.intersection(names):
+                        continue
+                    hit = _fusable(node, names, companion, path, policy_fn,
+                                   act_ranges, default_range)
+                    if hit is None:
+                        continue
+                    policy, rng = hit
+                    groups[names[0]] = (gkey, pack_dense_group(
+                        [(n, node[n]) for n in names], policy, rng,
+                        fold=fold))
+                    consumed.update(names)
+            out: dict[str, Any] = {}
+            for k, v in node.items():
+                if k in groups:
+                    gkey, g = groups[k]
+                    out[gkey] = g
+                elif str(k) not in consumed:
+                    out[k] = walk(v, path + (str(k),))
+            return out
         if isinstance(node, (list, tuple)):
             t = type(node)
             return t(walk(v, path + (str(i),)) for i, v in enumerate(node))
@@ -169,12 +386,20 @@ def pack_params(
 
 
 def packed_layer_paths(params: Any) -> list[str]:
-    """All paths that hold a QuantizedDense (for reporting/tests)."""
+    """All paths that hold packed layers (for reporting/tests).
+
+    Fan-out-fused groups report their ORIGINAL member paths (e.g. a group
+    at ``blocks/attn/qkv`` lists ``blocks/attn/q`` etc.), and the listing is
+    sorted, so it is stable across the fused and unfused representations.
+    """
     out: list[str] = []
 
     def walk(node: Any, path: tuple[str, ...]):
         if isinstance(node, QuantizedDense):
             out.append("/".join(path))
+        elif isinstance(node, QuantizedDenseGroup):
+            for name in node.names:
+                out.append("/".join(path[:-1] + (name,)))
         elif isinstance(node, dict):
             for k, v in node.items():
                 walk(v, path + (str(k),))
@@ -183,4 +408,4 @@ def packed_layer_paths(params: Any) -> list[str]:
                 walk(v, path + (str(i),))
 
     walk(params, ())
-    return out
+    return sorted(out)

@@ -39,6 +39,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.multipliers import Mode
+from repro.quant.quantize import (EPI_BIAS, EPI_C, EPI_C0, EPI_ROWS, EPI_SUM_QW,
+                                  EPI_SW, EPI_ZW, META_LEN, META_SA,
+                                  META_TRUE_K, META_ZA)
 
 # MXU-aligned defaults: int8-friendly tiles, K deep enough to amortize the
 # epilogue; A tile (128x512) + W tile (512x128) + int32 acc (128x128) stay
@@ -148,7 +151,10 @@ def _compiler_params(nk: int):
     cls = getattr(pltpu, "CompilerParams", None) or getattr(
         pltpu, "TPUCompilerParams"
     )
-    return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+    # single K step (decode-specialized tiles): no cross-step accumulator
+    # carry, so every grid axis is freely parallel/reorderable
+    sem = "parallel" if nk == 1 else "arbitrary"
+    return cls(dimension_semantics=("parallel", "parallel", sem))
 
 
 @functools.partial(
@@ -231,3 +237,144 @@ def approx_matmul_cv(
         bias.reshape(1, nn).astype(jnp.float32),
         meta,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused serving kernel: quantize-in-kernel over the offline-blocked layout
+# ---------------------------------------------------------------------------
+#
+# One launch computes  float x -> quantize -> bit-slice AM matmuls ->
+# MAC* statistics -> CV + zero-point epilogue -> output dtype cast.  The
+# static operands arrive pre-blocked (repro.quant.BlockedPack): weight codes
+# padded to tile multiples offline and all per-column epilogue operands in
+# one aligned (EPI_ROWS, Nb) table — the forward pass does no padding of
+# static parameters and no meta assembly.  Per-COLUMN weight quant params
+# (epilogue rows EPI_SW / EPI_ZW) make the same kernel serve fan-out-fused
+# multi-projection packs (Q|K|V, gate|up): activations are quantized once
+# and sumx/sumqa are computed once for every fused output column.
+
+
+def _fused_kernel(
+    # inputs
+    x_ref,  # (bm, bk) float activations
+    w_ref,  # (bk, bn) uint8 codes (zero-padded offline)
+    epi_ref,  # (EPI_ROWS, bn) f32 epilogue table
+    meta_ref,  # (1, META_LEN) f32 scalars
+    # outputs
+    out_ref,  # (bm, bn) out_dtype
+    # scratch
+    acc_ref,  # (bm, bn) i32
+    sumx_ref,  # (bm, 1) i32
+    sumqa_ref,  # (bm, 1) i32
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool,
+    nk: int,
+    bk: int,
+):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        sumx_ref[...] = jnp.zeros_like(sumx_ref)
+        sumqa_ref[...] = jnp.zeros_like(sumqa_ref)
+
+    sa = meta_ref[0, META_SA]
+    za = meta_ref[0, META_ZA]
+    true_k = meta_ref[0, META_TRUE_K]
+
+    # quantize in-kernel (identical arithmetic to quant.quantize_i32), then
+    # zero the K-padding columns: padded float zeros would quantize to the
+    # zero-point code, which must not reach acc/sumx/sumqa
+    x = x_ref[...].astype(jnp.float32)
+    a = jnp.clip(jnp.round(x / sa) + za, 0.0, 255.0).astype(jnp.int32)
+    kcol = k_step * bk + jax.lax.broadcasted_iota(jnp.float32, a.shape, 1)
+    a = jnp.where(kcol < true_k, a, 0)
+    w = w_ref[...].astype(jnp.int32)
+
+    acc_ref[...] += _am_tile_acc(a, w, mode, m)
+    sumqa_ref[...] += jnp.sum(a, axis=1, dtype=jnp.int32, keepdims=True)
+    if use_cv and mode != "exact" and m > 0:
+        sumx_ref[...] += jnp.sum(
+            _x_tile(a, mode, m), axis=1, dtype=jnp.int32, keepdims=True
+        )
+
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        epi = epi_ref[...]
+        c = epi[EPI_C : EPI_C + 1, :]
+        c0 = epi[EPI_C0 : EPI_C0 + 1, :]
+        sum_qw = epi[EPI_SUM_QW : EPI_SUM_QW + 1, :]
+        bias = epi[EPI_BIAS : EPI_BIAS + 1, :]
+        sw = epi[EPI_SW : EPI_SW + 1, :]
+        zw = epi[EPI_ZW : EPI_ZW + 1, :]
+
+        out = acc_ref[...].astype(jnp.float32)
+        if use_cv and mode != "exact" and m > 0:
+            out = out + sumx_ref[...].astype(jnp.float32) * c
+            out = out + c0
+        # exact gemmlowp zero-point corrections (true_k: K padding excluded)
+        out = out - zw * sumqa_ref[...].astype(jnp.float32)
+        out = out - za * sum_qw
+        out = out + true_k * za * zw
+        out = out * (sa * sw) + bias
+        out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "m", "use_cv", "bm", "bn", "bk", "out_dtype", "interpret",
+    ),
+)
+def approx_matmul_cv_fused(
+    x: jax.Array,  # (M, Kb) float activations (M/K pre-padded to blocks)
+    w_qb: jax.Array,  # (Kb, Nb) uint8 codes, blocked offline
+    epilogue: jax.Array,  # (EPI_ROWS, Nb) f32
+    meta: jax.Array,  # (1, META_LEN) f32
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool = True,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused float->float approximate matmul; returns ``out_dtype`` (M, Nb)."""
+    mm, kk = x.shape
+    kk2, nn = w_qb.shape
+    assert kk == kk2, (x.shape, w_qb.shape)
+    assert mm % bm == 0 and nn % bn == 0 and kk % bk == 0, (
+        (mm, kk, nn), (bm, bk, bn),
+    )
+    assert epilogue.shape == (EPI_ROWS, nn), epilogue.shape
+    nk = kk // bk
+
+    kernel = functools.partial(
+        _fused_kernel, mode=mode, m=m, use_cv=use_cv, nk=nk, bk=bk
+    )
+    grid = (mm // bm, nn // bn, nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((EPI_ROWS, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, META_LEN), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.int32),
+        ],
+        compiler_params=_compiler_params(nk),
+        interpret=interpret,
+    )(x, w_qb, epilogue, meta)

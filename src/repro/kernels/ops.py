@@ -34,19 +34,38 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+#: Row counts at or below this are decode-shaped (engine slot counts): the
+#: block picker specializes to the thinnest M tile and a single K step, so a
+#: one-token-per-slot step never pays prefill-sized tiles.  The serving
+#: engine's ``EngineConfig.slots`` maps onto M here via ``decode_slots``
+#: (tokens are (slots, 1) during continuous decode).
+DECODE_M_MAX = 8
+
+#: Largest fully-unrolled K extent a decode step takes in one grid step
+#: (a (8, 4096) activation tile + (4096, 128) weight tile stay far under
+#: VMEM; a single K step also drops the cross-step accumulator carry).
+DECODE_FULL_K_MAX = 4096
+
+
 def _pick_blocks(mm: int, kk: int, nn: int, bm: int, bn: int, bk: int):
-    """Shrink default blocks for small operands (keeps grid >= 1 per axis)."""
+    """Shrink default blocks for small operands (keeps grid >= 1 per axis).
 
-    def shrink(size, block, floor):
-        while block > floor and size < block:
-            block //= 2
-        return max(block, floor)
+    Decode-shaped calls (mm <= DECODE_M_MAX) additionally widen the K block
+    to the whole (padded) contraction when it fits, collapsing the grid's
+    K axis to one parallel step.
+    """
+    from repro.quant.quantize import shrink_block as shrink
 
-    return (
-        shrink(mm, bm, 8),
-        shrink(nn, bn, 128 if nn >= 128 else 8),
-        shrink(kk, bk, 128 if kk >= 128 else 8),
-    )
+    bm_ = shrink(mm, bm, 8)
+    bn_ = shrink(nn, bn, 128 if nn >= 128 else 8)
+    bk_ = shrink(kk, bk, 128 if kk >= 128 else 8)
+    if mm <= DECODE_M_MAX:
+        # one K block spanning the whole padded contraction (same padding
+        # granularity, merged steps)
+        bk_full = -(-kk // bk_) * bk_
+        if bk_full <= DECODE_FULL_K_MAX:
+            bk_ = bk_full
+    return bm_, bn_, bk_
 
 
 def approx_matmul_cv_op(
@@ -123,8 +142,65 @@ def approx_matmul_cv_op(
     return out[:mm, :nn].reshape(*lead, nn)
 
 
+def quantized_dense_fused_op(
+    x: jax.Array,  # (..., k) FLOAT activations
+    blocked,  # repro.quant.BlockedPack
+    *,
+    mode: Mode,
+    m: int,
+    use_cv: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Zero-overhead serving path: float activations against an
+    offline-blocked pack, one kernel launch (quantize + matmul + epilogue).
+
+    Only the activations are padded here (M to the picked tile, K from the
+    true fan-in to the pack's blocked extent); every static operand was laid
+    out at pack time.  Returns ``x.dtype`` (..., n).
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+
+    lead = x.shape[:-1]
+    kk = x.shape[-1]
+    assert kk == blocked.k, (x.shape, blocked.k)
+    kb, nb = blocked.w_qb.shape
+    x2 = x.reshape(-1, kk)
+    mm = x2.shape[0]
+
+    bm_, _, bk_ = _pick_blocks(mm, kb, nb, _amk.DEFAULT_BM, blocked.bn,
+                               blocked.bk)
+    # K blocks must tile the offline layout exactly: fall back to the pack
+    # granularity unless the decode merge consumed all of Kb
+    if kb % bk_ != 0:
+        bk_ = blocked.bk
+    x2 = _pad_to(_pad_to(x2, 0, bm_), 1, kb)
+
+    out = _amk.approx_matmul_cv_fused(
+        x2,
+        blocked.w_qb,
+        blocked.epilogue,
+        blocked.meta,
+        mode=mode,
+        m=m,
+        use_cv=use_cv,
+        bm=bm_,
+        bn=blocked.bn,
+        bk=bk_,
+        out_dtype=x.dtype,
+        interpret=interpret,
+    )
+    return out[:mm, : blocked.n].reshape(*lead, blocked.n)
+
+
 def quantized_dense_pallas(x: jax.Array, qd) -> jax.Array:
-    """Bridge: QuantizedDense params + float activations -> fused kernel."""
+    """Bridge: QuantizedDense params + float activations -> fused kernel.
+
+    Packs carrying the offline-blocked serving layout take the
+    float-in/float-out fused kernel (quantize-in-kernel, no per-call padding
+    of static operands); legacy packs quantize here and run the original
+    kernel with per-call padding.
+    """
     from repro.quant.quantize import quantize
 
     pol = qd.policy
@@ -132,6 +208,9 @@ def quantized_dense_pallas(x: jax.Array, qd) -> jax.Array:
         raise NotImplementedError(
             "grouped CV uses the jnp path (set backend='jnp' for groups > 1)"
         )
+    if getattr(qd, "blocked", None) is not None:
+        return quantized_dense_fused_op(
+            x, qd.blocked, mode=pol.mode, m=pol.m, use_cv=pol.use_cv)
     a_q = quantize(x, qd.a_qp)
     pack = qd.pack
     bias = pack.bias

@@ -63,6 +63,8 @@ class ServeConfig:
     policy: ApproxPolicy | None = None
     act_range: tuple[float, float] = (-8.0, 8.0)  # default when uncalibrated
     cache_dtype: str = "bfloat16"
+    fuse: bool = True  # fan-out fusion (Q|K|V, gate|up groups)
+    fold: bool = True  # folded f32 serving operands (CPU fast path)
 
     def numerics_spec(self) -> NumericsSpec:
         if self.spec is not None:
@@ -81,7 +83,8 @@ def build_serving_params(params: Any, cfg: ArchConfig, scfg: ServeConfig,
     if plan is None:
         plan = scfg.numerics_spec().resolve(params)
     packed = apply_numerics(params, plan, act_ranges=act_ranges,
-                            default_range=scfg.act_range)
+                            default_range=scfg.act_range,
+                            fuse=scfg.fuse, fold=scfg.fold)
 
     def to_bf16(x):
         if hasattr(x, "dtype") and x.dtype == jnp.float32 and x.ndim >= 1:

@@ -693,6 +693,12 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     Returns (logits (slots, C, V) f32, cache with per-row cursors advanced
     by ``n_valid``).  The caller reads row b's logits at column
     ``n_valid[b] - 1``.
+
+    Kernel decode specialization: the packed-dense fast path keys its tile
+    choice on the flattened row count slots*C, so continuous decode (C == 1,
+    slots <= repro.kernels.ops.DECODE_M_MAX) runs thin-M single-K-step
+    launches while prefill chunks (C == prefill_chunk) keep prefill tiles —
+    both from the same jitted step, one compiled shape each.
     """
     reason = _slot_unsupported(cfg)
     if reason is not None:

@@ -26,7 +26,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.approx_linear import dense, init_dense
+from repro.core.approx_linear import dense, dense_group, init_dense
 from repro.nn.layers import (
     apply_rope,
     init_rmsnorm,
@@ -87,9 +87,16 @@ def _angles(cfg: AttnConfig, positions: jax.Array):
 
 def _project_qkv(p: dict, x: jax.Array, cfg: AttnConfig, angles):
     b, t, _ = x.shape
-    q = dense(p["q"], x, name="q").reshape(b, t, cfg.n_heads, cfg.head_dim)
-    k = dense(p["k"], x, name="k").reshape(b, t, cfg.kv_heads, cfg.head_dim)
-    v = dense(p["v"], x, name="v").reshape(b, t, cfg.kv_heads, cfg.head_dim)
+    if "qkv" in p:  # fan-out-fused serving pack: one wide-N projection call
+        qkv = dense_group(p["qkv"], x)
+        q, k, v = qkv["q"], qkv["k"], qkv["v"]
+    else:
+        q = dense(p["q"], x, name="q")
+        k = dense(p["k"], x, name="k")
+        v = dense(p["v"], x, name="v")
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.kv_heads, cfg.head_dim)
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q)
         k = rmsnorm(p["k_norm"], k)

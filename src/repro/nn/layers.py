@@ -104,8 +104,14 @@ def init_swiglu(key, d: int, ff: int, dtype=jnp.float32) -> dict:
 
 
 def swiglu(p: dict, x: jax.Array) -> jax.Array:
-    g = dense(p["gate"], x, name="gate")
-    u = dense(p["up"], x, name="up")
+    if "gateup" in p:  # fan-out-fused serving pack: one wide-N call
+        from repro.core.approx_linear import dense_group
+
+        gu = dense_group(p["gateup"], x)
+        g, u = gu["gate"], gu["up"]
+    else:
+        g = dense(p["gate"], x, name="gate")
+        u = dense(p["up"], x, name="up")
     return dense(p["down"], jax.nn.silu(g) * u, name="down")
 
 

@@ -63,18 +63,54 @@ class PlanEntry:
 
 
 def _packed_bytes(w_shape: tuple[int, ...], policy: ApproxPolicy | None,
-                  has_bias: bool) -> int:
+                  has_bias: bool, expert_stack: bool = False) -> int:
     """Serving bytes for one layer: float layers at f32, packed layers as
-    uint8 codes + int32 column sums + float32 CV constants (+ bias)."""
+    uint8 codes + int32 column sums + float32 CV constants (+ bias).
+
+    Packed layers additionally count their resident serving staging —
+    everything the fast paths actually read at serving time, on top of the
+    canonical pack:
+
+      * pallas-backend single-CV layers: the OFFLINE-BLOCKED layout
+        (repro.quant.BlockedPack — tile-padded codes, the aligned
+        (EPI_ROWS, Nb) f32 epilogue table, the f32 meta vector);
+      * jnp-backend single-CV layers at shallow fan-in: the FOLDED f32
+        operands (repro.quant.build_fold — A, the mode's B slice, delta).
+    """
     n_elem = math.prod(w_shape)
     if policy is None:
         return 4 * n_elem + (4 * w_shape[-1] if has_bias else 0)
-    *lead, _, n = w_shape
+    *lead, k, n = w_shape
     stacks = math.prod(lead) if lead else 1
     per_stack = 4 * n * (1 + 1 + policy.groups)  # sum_qw + c + c0
     if has_bias:
         per_stack += 4 * n
-    return n_elem + stacks * per_stack
+    total = n_elem + stacks * per_stack  # canonical uint8 pack
+    if policy.backend == "pallas" and policy.is_approx and policy.groups == 1:
+        from repro.quant.quantize import EPI_ROWS, META_LEN, serving_blocks
+
+        bn, bk = serving_blocks(k, n)
+        kb, nb = -(-k // bk) * bk, -(-n // bn) * bn
+        total += stacks * (kb * nb + 4 * (EPI_ROWS * nb + META_LEN))
+    elif not expert_stack:  # expert stacks never carry fold operands
+        total += stacks * _fold_bytes(k, n, policy)
+    return total
+
+
+def _fold_bytes(k: int, n: int, policy: ApproxPolicy) -> int:
+    """Bytes of the folded f32 serving operands (mirrors build_fold's
+    eligibility and shapes: A (k, n), mode slice B, delta (n,))."""
+    from repro.core.multipliers import _F32_EXACT_K
+
+    if policy.groups != 1 or k > _F32_EXACT_K:
+        return 0
+    b_rows = 0
+    if policy.is_approx:
+        if policy.mode in ("perforated", "recursive"):
+            b_rows = k
+        elif policy.mode == "truncated":
+            b_rows = policy.m * k + (k if policy.use_cv else 0)
+    return 4 * ((k + b_rows) * n + n)
 
 
 def plan_entry(path: str, node: dict, policy: ApproxPolicy | None,
@@ -86,9 +122,11 @@ def plan_entry(path: str, node: dict, policy: ApproxPolicy | None,
     has_bias = node.get("b") is not None and "b" in node
     saving = (power_saving(policy.mode, policy.m, n_array)
               if policy is not None and policy.is_approx else 0.0)
+    expert_stack = path.split("/")[-2:-1] == ["experts"]
     return PlanEntry(path=path, policy=policy, rule=rule, w_shape=w_shape,
                      has_bias=has_bias,
-                     packed_bytes=_packed_bytes(w_shape, policy, has_bias),
+                     packed_bytes=_packed_bytes(w_shape, policy, has_bias,
+                                                expert_stack=expert_stack),
                      power_saving_pct=round(saving, 2))
 
 
@@ -166,12 +204,18 @@ class PackPlan:
 def apply_numerics(params: Any, plan: PackPlan,
                    act_ranges: dict | None = None,
                    default_range: tuple[float, float] = (-8.0, 8.0),
-                   strict: bool = True) -> Any:
+                   strict: bool = True, fuse: bool = True,
+                   fold: bool = True) -> Any:
     """Execute a plan: float params -> packed approximate params.
 
     With ``strict`` (default) the plan must cover exactly the packable
     layers of ``params`` — applying a plan resolved from a different
     architecture is an error, not a silent partial pack.
+
+    ``fuse``/``fold`` pass through to
+    :func:`~repro.core.approx_linear.pack_params`: disable fan-out fusion
+    (keep member layers separate) or the folded f32 serving operands (keep
+    every pack on the exact-integer path, no staging memory).
     """
     from repro.core.approx_linear import is_linear_params, pack_params
 
@@ -199,4 +243,5 @@ def apply_numerics(params: Any, plan: PackPlan,
                 f"plan-only layers {missing[:5]}, unplanned layers {extra[:5]}")
 
     return pack_params(params, lambda p: want.get("/".join(p)),
-                       act_ranges=act_ranges, default_range=default_range)
+                       act_ranges=act_ranges, default_range=default_range,
+                       fuse=fuse, fold=fold)

@@ -78,16 +78,17 @@ _PARAM_RULES: list[tuple[str, Any]] = [
     (r"router/", P(None, None)),
     (r"experts/(gate|up)/w$", P("model", None, None)),
     (r"experts/down/w$", P("model", None, None)),
-    # attention projections
-    (r"attn/(q|k|v)/w$", _COL),
+    # attention projections (qkv = the fan-out-fused Q|K|V group: its
+    # concatenated output axis is column-parallel exactly like the members)
+    (r"attn/(q|k|v|qkv)/w$", _COL),
     (r"attn/o/w$", _ROW),
-    (r"attn/(q|k|v)/b$", P("model")),
+    (r"attn/(q|k|v|qkv)/b$", P("model")),
     (r"attn/kv_a/", P(None, None)),  # tiny latent projection: replicate
     (r"attn/kv_b/w$", _COL),
-    # MLPs
-    (r"(mlp|shared)/(gate|up)/w$", _COL),
+    # MLPs (gateup = the fused gate|up group, column-parallel like members)
+    (r"(mlp|shared)/(gate|up|gateup)/w$", _COL),
     (r"(mlp|shared)/down/w$", _ROW),
-    (r"(mlp|shared)/up/b$", P("model")),
+    (r"(mlp|shared)/(up|gateup)/b$", P("model")),
     (r"(mlp|shared)/down/b$", P(None)),
     # SSM (d_inner sharded on model)
     (r"ssm/in_proj/w$", _COL),
@@ -128,20 +129,31 @@ def _base_spec(path: str, ndim: int, fsdp: bool):
 
 def _packed_leaf_spec(path: str, ndim: int, fsdp: bool):
     """Specs for QuantizedDense / PackedLinear leaves: derive from the parent
-    linear's (in, out) rule.  w_q shards like w; per-output vectors (c, c0,
-    sum_qw, bias) shard like the out dim; scales/zero-points replicate."""
-    m = re.search(r"(.*)/(pack|a_qp)/(w_q|sum_qw|c|c0|bias|w_scale|w_zp|scale|zero_point)$", path)
+    linear's (in, out) rule.  Weight-shaped operands (w_q, the blocked
+    serving codes, folded A/B matrices) shard like w; per-output vectors
+    (c, c0, sum_qw, bias, epilogue table, fold delta) shard like the out
+    dim; scalars/meta replicate."""
+    m = re.search(
+        r"(.*)/(pack|a_qp|blocked|fold)/"
+        r"(w_q|sum_qw|c|c0|bias|w_scale|w_zp|scale|zero_point"
+        r"|w_qb|epilogue|meta|A|B|delta|sa|za)$", path)
     if not m:
         return None
     parent, _, leaf = m.groups()
     base = _base_spec(parent + "/w", 2, fsdp)
     if base is None:
         return P()
-    if leaf == "w_q":
+    out_axis = base[1] if len(base) > 1 else None
+    if leaf in ("w_q", "A"):
         return base
-    if leaf in ("sum_qw", "c", "c0", "bias"):
-        return P(base[1] if len(base) > 1 else None)
-    return P()  # scalars
+    if leaf == "w_qb" or leaf == "B":
+        # K axis is padded/stacked in tile multiples: shard the out dim only
+        return P(None, out_axis)
+    if leaf in ("sum_qw", "c", "c0", "bias", "delta"):
+        return P(out_axis)
+    if leaf == "epilogue":
+        return P(None, out_axis)
+    return P()  # scalars / meta
 
 
 def param_shardings(abstract_params: Any, mesh: Mesh, cfg: ArchConfig | None = None,

@@ -11,21 +11,35 @@ provides exactly that substrate.
 from repro.quant.quantize import (
     QuantParams,
     quantize,
+    quantize_i32,
     dequantize,
     calibrate_minmax,
     calibrate_tensor,
     quantized_linear,
     pack_linear,
     PackedLinear,
+    BlockedPack,
+    build_blocked_layout,
+    build_fold,
+    concat_packs,
+    folded_linear,
+    serving_blocks,
 )
 
 __all__ = [
     "QuantParams",
     "quantize",
+    "quantize_i32",
     "dequantize",
     "calibrate_minmax",
     "calibrate_tensor",
     "quantized_linear",
     "pack_linear",
     "PackedLinear",
+    "BlockedPack",
+    "build_blocked_layout",
+    "build_fold",
+    "concat_packs",
+    "folded_linear",
+    "serving_blocks",
 ]

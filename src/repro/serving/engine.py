@@ -35,6 +35,30 @@ from repro.serving.request import (AdmissionController, Request, RequestQueue,
 from repro.serving.scheduler import ScheduledBatch, SlotScheduler
 
 
+def _has_blocked_packs(params) -> bool:
+    """True iff any packed leaf ships the offline-blocked Pallas layout
+    (the only path the decode-specialized block picker applies to)."""
+    from repro.core.approx_linear import QuantizedDense, QuantizedDenseGroup
+
+    found = False
+
+    def walk(node):
+        nonlocal found
+        if found:
+            return
+        if isinstance(node, (QuantizedDense, QuantizedDenseGroup)):
+            found = found or node.blocked is not None
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return found
+
+
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = EngineConfig(),
                  mesh=None, api: ModelApi | None = None,
@@ -50,7 +74,17 @@ class ServingEngine:
                                              ecfg.prefill_chunk)
         self.scheduler = SlotScheduler(ecfg.slots, ecfg.prefill_chunk,
                                        ecfg.interleave)
-        self.metrics = EngineMetrics(numerics=numerics)
+        # decode steps are (slots, 1) token blocks: a slot count within the
+        # kernel block picker's decode window means every continuous-decode
+        # iteration runs the thin-M, single-K-step specialized tiles — but
+        # only the Pallas blocked packs go through that picker, so the flag
+        # is gated on the served parameters actually carrying blocked layouts
+        from repro.kernels.ops import DECODE_M_MAX
+
+        self.metrics = EngineMetrics(
+            numerics=numerics,
+            decode_specialized=(ecfg.slots <= DECODE_M_MAX
+                                and _has_blocked_packs(params)))
         self.active: dict[int, Request] = {}
         self._rid = itertools.count()
         decode_slots = self.api.decode_slots
@@ -120,7 +154,9 @@ class ServingEngine:
     def reset_metrics(self) -> None:
         """Fresh counters (e.g. after warmup) without losing the numerics
         label the engine was built with."""
-        self.metrics = EngineMetrics(numerics=self.numerics)
+        self.metrics = EngineMetrics(
+            numerics=self.numerics,
+            decode_specialized=self.metrics.decode_specialized)
 
     # -- postprocessing ------------------------------------------------------
 

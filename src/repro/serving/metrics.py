@@ -28,6 +28,11 @@ class EngineMetrics:
     #: (None = unknown/float); surfaced in snapshot() for fleet audits
     numerics: str | None = None
 
+    #: whether the engine's slot count fits the kernel block picker's
+    #: decode-specialized tiles (repro.kernels.ops.DECODE_M_MAX): one-token
+    #: decode steps then run thin-M, single-K-step kernel launches
+    decode_specialized: bool | None = None
+
     prompt_tokens: int = 0
     generated_tokens: int = 0
     prefill_steps: int = 0
@@ -74,6 +79,7 @@ class EngineMetrics:
         total_tok = self.prompt_tokens + self.generated_tokens
         return {
             "numerics": self.numerics,
+            "decode_specialized": self.decode_specialized,
             "elapsed_s": round(elapsed, 4),
             "requests_finished": self.finished,
             "requests_rejected": self.rejected,

@@ -19,6 +19,9 @@ python -m repro.launch.serve plan --arch olmo-1b-reduced --preset int8 --json > 
 echo "== quickstart (spec/plan/apply public API) =="
 python examples/quickstart.py
 
+echo "== kernel bench quick mode (1 rep; fails smoke on kernel-path breakage) =="
+python -m benchmarks.kernel_bench --reps 1 --no-write > /dev/null
+
 echo "== serving-engine smoke (reduced model, approximate+CV) =="
 python -m repro.launch.serve --engine --requests 8 \
     --arch olmo-1b-reduced --mode perforated --m 2 \
