@@ -30,6 +30,10 @@ class EngineConfig:
     max_queue: int = 256
     cache_dtype: str = "bfloat16"  # "bfloat16" | "float32" | "int8"
     interleave: bool = True  # alternate prefill/decode when both are pending
+    #: decode rows ride chunk-shaped prefill calls with n_valid=1, so a
+    #: running decode advances every iteration (no stall behind prefill
+    #: turns); off falls back to whole-batch alternation (``interleave``)
+    mixed_batches: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

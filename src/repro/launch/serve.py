@@ -192,11 +192,12 @@ def run_engine(args) -> dict:
     cfg = get_config(args.arch)
     params, label = _prepare_params(cfg, args)
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
-                        prefill_chunk=args.chunk, cache_dtype=args.cache_dtype)
+                        prefill_chunk=args.chunk, cache_dtype=args.cache_dtype,
+                        mixed_batches=not args.no_mixed)
     eng = ServingEngine(cfg, params, ecfg, numerics=label)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
-          f"kv={ecfg.cache_dtype}")
+          f"kv={ecfg.cache_dtype} mixed={ecfg.mixed_batches}")
 
     trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
     for prompt, gen in trace:
@@ -297,6 +298,9 @@ def main(argv=None) -> None:
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--cache-dtype", default="bfloat16",
                     choices=["bfloat16", "float32", "int8"])
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="disable mixed prefill+decode batches (fall back "
+                         "to whole-batch alternation)")
     # legacy path knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -552,12 +552,16 @@ def prefill(params: Params, batch: dict, cfg: ArchConfig, max_len: int,
 #
 #   * C == 1           -> continuous decode over heterogeneous sequences;
 #   * C == chunk size  -> one bounded-shape chunk of a prompt (chunked
-#                         prefill), interleaved with decode iterations.
+#                         prefill) — and, in a MIXED batch, decode rows
+#                         riding the same call with n_valid == 1, so a
+#                         running decode never stalls behind a prefill turn.
 #
-# Rows with n_valid == 0 are padding: their K/V writes land beyond their
-# cursor (never attended, overwritten by the slot's next real tokens) and
-# their cursor does not move — so the jitted step only ever sees the two
-# shapes (slots, 1) and (slots, chunk) and never recompiles mid-serve.
+# n_valid is fully per-row: any mix of 0 (idle padding), 1 (decode) and C
+# (whole prompt chunk) is valid in one call.  Rows with n_valid == 0 are
+# padding: their K/V writes land beyond their cursor (never attended,
+# overwritten by the slot's next real tokens) and their cursor does not
+# move — so the jitted step only ever sees the two shapes (slots, 1) and
+# (slots, chunk) and never recompiles mid-serve.
 
 
 def _slot_unsupported(cfg: ArchConfig) -> str | None:
@@ -589,18 +593,36 @@ def _slot_update(cache_arr: jax.Array, update: jax.Array, starts: jax.Array,
 
     Padding columns (>= n_valid[b]) are blended back to the OLD cache
     values, so they never write.  This matters beyond hygiene:
-    ``dynamic_update_slice`` CLAMPS out-of-range starts, so a padding row
+    ``dynamic_update_slice`` CLAMPS out-of-range starts.  A padding row
     (n_valid == 0) whose cursor exceeds S - C would otherwise have its
-    block write clamped back over valid, attended entries.  Active rows
-    never clamp (the engine guarantees starts + n_valid <= S on whole-chunk
-    boundaries), so the blend is exact for them."""
+    block write clamped back over valid, attended entries — and a MIXED
+    batch legitimately carries short rows deep in their stripe (a decode
+    row with n_valid == 1 riding a chunk-shaped call can sit anywhere up
+    to S - 1).  The write is therefore clamp-aware: the update block is
+    rolled by the clamp displacement so its valid head still lands at
+    [starts, starts + n_valid), and the blend mask is expressed in the
+    clamped coordinates.  For rows that do not clamp this reduces to the
+    plain masked blend."""
     c_len = update.shape[-2]
 
     def write(c, u, st, nv):
+        s = c.shape[-2]
+        if c_len > 1:
+            # where dynamic_update_slice will actually place the block
+            st_eff = jnp.clip(st, 0, max(s - c_len, 0))
+            shift = st - st_eff  # > 0 only when the raw start would clamp
+            u = jnp.roll(u, shift, axis=-2)  # u[0] realigns to cache col st
+            idx = jnp.arange(c_len)
+            mask = (idx >= shift) & (idx < shift + nv)
+            st = st_eff
+        else:
+            # static fast path: a one-column write can never clamp (every
+            # cursor is <= S - 1), so skip the dynamic roll on the thin
+            # (slots, 1) decode step — the hottest per-layer write
+            mask = jnp.arange(c_len) < nv
         start = (0,) * (c.ndim - 2) + (st, 0)
         old = jax.lax.dynamic_slice(c, start, u.shape)
-        mask = (jnp.arange(c_len) < nv).reshape(
-            (1,) * (u.ndim - 2) + (c_len, 1))
+        mask = mask.reshape((1,) * (u.ndim - 2) + (c_len, 1))
         return jax.lax.dynamic_update_slice(c, jnp.where(mask, u, old), start)
 
     return jax.vmap(write)(cache_arr, update, starts, n_valid)

@@ -1,9 +1,12 @@
 """The continuous-batching serving engine.
 
 :class:`ServingEngine` ties the pieces together: submit() runs admission
-control and enqueues; step() admits into free slots, asks the scheduler for
-one fixed-shape batch, runs the jitted slot step, and advances every
-participating request (streaming tokens to callbacks as they decode).
+control (with priority eviction from a full queue) and enqueues; step()
+admits into free slots, asks the scheduler for one fixed-shape batch —
+chunk-shaped with mixed prefill+decode rows when both kinds pend
+(``EngineConfig.mixed_batches``), thin ``(slots, 1)`` otherwise — runs the
+jitted slot step, and advances every participating request through one
+unified per-row postprocess (streaming tokens to callbacks as they decode).
 
 The same engine serves float, exact-int8, and approximate+CV packed
 parameters — numerics live entirely in the parameter representation
@@ -73,7 +76,7 @@ class ServingEngine:
         self.admission = AdmissionController(ecfg.max_queue, ecfg.max_len,
                                              ecfg.prefill_chunk)
         self.scheduler = SlotScheduler(ecfg.slots, ecfg.prefill_chunk,
-                                       ecfg.interleave)
+                                       ecfg.interleave, ecfg.mixed_batches)
         # decode steps are (slots, 1) token blocks: a slot count within the
         # kernel block picker's decode window means every continuous-decode
         # iteration runs the thin-M, single-K-step specialized tiles — but
@@ -97,17 +100,30 @@ class ServingEngine:
     def submit(self, prompt, max_new_tokens: int, priority: int = 0,
                eos_id: int | None = None,
                on_token: Callable | None = None) -> Request:
-        """Admission-checked enqueue; returns the Request (maybe REJECTED)."""
+        """Admission-checked enqueue; returns the Request (maybe REJECTED).
+
+        A request returned as QUEUED can still become REJECTED later: a
+        full queue evicts its worst member when a strictly-higher-priority
+        request arrives.  Callers polling a single Request must treat
+        ``state == REJECTED`` as terminal alongside ``finished``."""
         req = Request(rid=next(self._rid), prompt=[int(t) for t in prompt],
                       max_new_tokens=int(max_new_tokens), priority=priority,
                       eos_id=eos_id, on_token=on_token)
         self.metrics.submitted += 1
-        ok, reason = self.admission.check(self.queue, req)
+        ok, reason, evicted = self.admission.admit(self.queue, req)
         if not ok:
             req.state = RequestState.REJECTED
             req.reject_reason = reason
             self.metrics.rejected += 1
             return req
+        if evicted is not None:
+            # queue was full of strictly lower-priority work: the worst
+            # queued request is re-rejected to make room for this one
+            evicted.state = RequestState.REJECTED
+            evicted.reject_reason = (f"evicted from full queue by "
+                                     f"higher-priority request {req.rid}")
+            self.metrics.rejected += 1
+            self.metrics.evicted += 1
         self.queue.push(req)
         return req
 
@@ -123,17 +139,18 @@ class ServingEngine:
         batch = self.scheduler.next_batch(self.active)
         if batch is None:
             return []
+        # arm the throughput clock BEFORE the dispatch: warmup between
+        # construction and the first served batch stays excluded, but the
+        # first measured step's own wall time is inside the window
+        self.metrics.start_clock()
         logits, new_cache = self._step_fn(
             self.params, jnp.asarray(batch.tokens), self.pool.cache,
             jnp.asarray(batch.n_valid))
         self.pool.update(new_cache)
-        finished, emitted = (self._post_prefill(batch, logits)
-                             if batch.kind == "prefill"
-                             else self._post_decode(batch, logits))
+        finished, emitted, prompt_toks = self._postprocess(batch, logits)
         self.metrics.record_step(
             batch.kind, self.pool.occupancy, len(self.queue),
-            prompt_tokens=int(batch.n_valid.sum()) if batch.kind == "prefill" else 0,
-            generated_tokens=emitted)
+            prompt_tokens=prompt_toks, generated_tokens=emitted)
         return finished
 
     def run(self, max_steps: int | None = None) -> list[Request]:
@@ -160,41 +177,66 @@ class ServingEngine:
 
     # -- postprocessing ------------------------------------------------------
 
-    def _post_prefill(self, batch: ScheduledBatch,
-                      logits) -> tuple[list[Request], int]:
-        finished, emitted = [], 0
-        completing = any(r.prefilled + batch.n_valid[r.slot] >= r.prompt_len
-                         for r in batch.rows)
-        # argmax on device: ship a (slots, C) int array, not (slots, C, V)
-        toks = np.asarray(jnp.argmax(logits, -1)) if completing else None
-        for r in batch.rows:
-            n = int(batch.n_valid[r.slot])
-            r.prefilled += n
-            if r.prefilled >= r.prompt_len:
-                # prompt complete: its last token's logits seed generation
-                tok = int(toks[r.slot, n - 1])
-                r.emit(tok)
-                emitted += 1
-                self.metrics.record_first_token(r)
-                r.state = RequestState.DECODE
-                if self._done(r, tok):
-                    finished.append(self._finish(r))
-        return finished, emitted
+    def _postprocess(self, batch: ScheduledBatch,
+                     logits) -> tuple[list[Request], int, int]:
+        """Unified per-row advance for every batch kind.
 
-    def _post_decode(self, batch: ScheduledBatch,
-                     logits) -> tuple[list[Request], int]:
-        finished = []
-        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        for r in batch.rows:
-            tok = int(toks[r.slot])
-            r.emit(tok)
-            if self._done(r, tok):
-                finished.append(self._finish(r))
-        return finished, len(batch.rows)
+        Each row's next token lives at logits column ``n_valid[slot] - 1``
+        (a decode row's single column, or a prompt chunk's last real
+        column).  Decode rows always emit; prefill rows emit only on the
+        chunk that completes their prompt.  Returns
+        ``(finished, generated_tokens, prompt_tokens)`` — per-row
+        attribution, so mixed batches account both kinds at once.
+        """
+        finished, emitted, prompt_toks = [], 0, 0
+        emitting = any(
+            kind == "decode"
+            or r.prefilled + int(batch.n_valid[r.slot]) >= r.prompt_len
+            for r, kind in zip(batch.rows, batch.row_kinds))
+        toks = None
+        if emitting:
+            # gather each row's one needed column (n_valid-1) BEFORE the
+            # argmax, then ship a (slots,) int array — not an argmax over
+            # all C columns of (slots, C, V) in the hot serving loop
+            cols = jnp.asarray(np.maximum(batch.n_valid - 1, 0))
+            picked = jnp.take_along_axis(logits, cols[:, None, None], axis=1)
+            toks = np.asarray(jnp.argmax(picked[:, 0], axis=-1))
+        for r, kind in zip(batch.rows, batch.row_kinds):
+            if kind == "prefill":
+                n = int(batch.n_valid[r.slot])
+                r.prefilled += n
+                prompt_toks += n
+                if r.prefilled < r.prompt_len:
+                    continue
+                # prompt complete: its last token's logits seed generation
+                r.state = RequestState.DECODE
+                self._emit_row(r, int(toks[r.slot]), finished, first=True)
+            else:
+                self._emit_row(r, int(toks[r.slot]), finished, first=False)
+            emitted += 1
+        return finished, emitted, prompt_toks
+
+    def _emit_row(self, r: Request, tok: int, finished: list[Request],
+                  first: bool) -> None:
+        gap = r.emit(tok)
+        if first:
+            self.metrics.record_first_token(r)
+        self.metrics.record_itl(gap)
+        if self._done(r, tok):
+            finished.append(self._finish(r))
 
     def _done(self, r: Request, tok: int) -> bool:
-        return (len(r.generated) >= r.max_new_tokens
-                or (r.eos_id is not None and tok == r.eos_id))
+        """Stop check; records ``finish_reason`` at the moment it fires.
+        The length budget takes precedence: a final greedy token that
+        merely coincides with ``eos_id`` on the budget's last step is
+        still a length stop."""
+        if len(r.generated) >= r.max_new_tokens:
+            r.finish_reason = "length"
+            return True
+        if r.eos_id is not None and tok == r.eos_id:
+            r.finish_reason = "eos"
+            return True
+        return False
 
     def _finish(self, r: Request) -> Request:
         import time

@@ -15,6 +15,7 @@ follow-on; today a slot owns a contiguous ``max_len`` stripe.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,6 +43,13 @@ class SlotPool:
         # is cursor-reset only; RECURRENT state (rwkv) has no mask — the
         # previous occupant's state must be zeroed on reassignment
         self._recurrent = bool(api.cfg.rwkv)
+        # recurrent-state zeroing for one slot, fused: one jitted dispatch
+        # updating every state leaf (slot index traced -> compiles once),
+        # instead of one .at[:, slot].set(0) dispatch per leaf per admission
+        self._zero_slot = jax.jit(
+            lambda leaves, slot: jax.tree.map(
+                lambda v: v.at[:, slot].set(0), leaves)) \
+            if self._recurrent else None
         self._free: list[int] = list(range(slots - 1, -1, -1))  # pop -> slot 0 first
         self._owner: dict[int, int] = {}  # slot -> rid
 
@@ -55,9 +63,12 @@ class SlotPool:
         self._owner[slot] = rid
         self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
         if self._recurrent:
-            for k, v in self.cache.items():
-                if k != "lengths":  # leaves are (L, slots, ...)
-                    self.cache[k] = v.at[:, slot].set(0)
+            # collect the state keys first — never mutate the dict being
+            # iterated — then zero every leaf in one fused update
+            keys = [k for k in self.cache if k != "lengths"]  # (L, slots, ...)
+            zeroed = self._zero_slot({k: self.cache[k] for k in keys},
+                                     jnp.asarray(slot, jnp.int32))
+            self.cache.update(zeroed)
         return slot
 
     def release(self, slot: int) -> None:

@@ -3,7 +3,16 @@
 Counters are recorded on the host around each engine iteration; nothing
 here touches device state.  ``snapshot()`` derives the headline serving
 numbers: decode tokens/s, end-to-end tokens/s, time-to-first-token
-(mean/p50/max), mean queue depth, and mean slot occupancy.
+(mean/p50/max), inter-token stall (p50/p95/max over per-request gaps
+between consecutive generated tokens — the decode-stall signal the mixed
+scheduler exists to shrink), mean queue depth, and mean slot occupancy.
+
+The throughput clock starts lazily at the FIRST served batch (the engine
+arms it just before dispatching; ``record_step`` arms it as a fallback),
+not at construction: engines compile and warm up between being built and
+serving their first batch, and charging that wall time to the denominator
+deflates ``gen_tok_per_s`` for short traces.  ``reset_metrics()`` (a fresh
+instance) therefore re-arms the lazy clock too.
 """
 
 from __future__ import annotations
@@ -22,7 +31,8 @@ def _percentile(xs: list[float], q: float) -> float:
 
 @dataclasses.dataclass
 class EngineMetrics:
-    t_start: float = dataclasses.field(default_factory=time.time)
+    #: set by the first record_step (lazy); None while nothing was served
+    t_start: float | None = None
 
     #: name of the NumericsSpec the served parameters were packed under
     #: (None = unknown/float); surfaced in snapshot() for fleet audits
@@ -37,12 +47,16 @@ class EngineMetrics:
     generated_tokens: int = 0
     prefill_steps: int = 0
     decode_steps: int = 0
+    mixed_steps: int = 0  # chunk-shaped batches carrying decode rows
 
     submitted: int = 0
     rejected: int = 0
+    evicted: int = 0  # queued requests re-rejected for higher-priority work
     finished: int = 0
 
     ttfts: list[float] = dataclasses.field(default_factory=list)
+    #: per-request gaps between consecutive generated tokens (seconds)
+    itls: list[float] = dataclasses.field(default_factory=list)
     latencies: list[float] = dataclasses.field(default_factory=list)
 
     _occupancy_sum: float = 0.0
@@ -51,10 +65,21 @@ class EngineMetrics:
 
     # -- recording -----------------------------------------------------------
 
+    def start_clock(self) -> None:
+        """Arm the throughput clock (idempotent).  The engine calls this
+        just before dispatching its first batch, so that step's wall time
+        is inside the measured window; ``record_step`` also arms it as a
+        fallback for direct users of the metrics object."""
+        if self.t_start is None:
+            self.t_start = time.time()
+
     def record_step(self, kind: str, occupancy: float, queue_depth: int,
                     prompt_tokens: int = 0, generated_tokens: int = 0) -> None:
+        self.start_clock()
         if kind == "prefill":
             self.prefill_steps += 1
+        elif kind == "mixed":
+            self.mixed_steps += 1
         else:
             self.decode_steps += 1
         self.prompt_tokens += prompt_tokens
@@ -67,6 +92,12 @@ class EngineMetrics:
         if req.ttft is not None:
             self.ttfts.append(req.ttft)
 
+    def record_itl(self, gap: float | None) -> None:
+        """One inter-token gap (``Request.emit``'s return; None = first
+        token of a request, which has no gap)."""
+        if gap is not None:
+            self.itls.append(gap)
+
     def record_finish(self, req) -> None:
         self.finished += 1
         if req.t_finish is not None:
@@ -75,7 +106,8 @@ class EngineMetrics:
     # -- derived -------------------------------------------------------------
 
     def snapshot(self) -> dict:
-        elapsed = max(time.time() - self.t_start, 1e-9)
+        elapsed = (max(time.time() - self.t_start, 1e-9)
+                   if self.t_start is not None else 0.0)
         total_tok = self.prompt_tokens + self.generated_tokens
         return {
             "numerics": self.numerics,
@@ -83,17 +115,26 @@ class EngineMetrics:
             "elapsed_s": round(elapsed, 4),
             "requests_finished": self.finished,
             "requests_rejected": self.rejected,
+            "requests_evicted": self.evicted,
             "prompt_tokens": self.prompt_tokens,
             "generated_tokens": self.generated_tokens,
-            "gen_tok_per_s": round(self.generated_tokens / elapsed, 2),
-            "total_tok_per_s": round(total_tok / elapsed, 2),
+            "gen_tok_per_s": round(self.generated_tokens / elapsed, 2)
+            if elapsed else 0.0,
+            "total_tok_per_s": round(total_tok / elapsed, 2)
+            if elapsed else 0.0,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
+            "mixed_steps": self.mixed_steps,
             "ttft_mean_s": round(sum(self.ttfts) / len(self.ttfts), 4)
             if self.ttfts else None,
             "ttft_p50_s": round(_percentile(self.ttfts, 0.5), 4)
             if self.ttfts else None,
             "ttft_max_s": round(max(self.ttfts), 4) if self.ttfts else None,
+            "itl_p50_s": round(_percentile(self.itls, 0.5), 4)
+            if self.itls else None,
+            "itl_p95_s": round(_percentile(self.itls, 0.95), 4)
+            if self.itls else None,
+            "itl_max_s": round(max(self.itls), 4) if self.itls else None,
             "latency_mean_s": round(sum(self.latencies) / len(self.latencies), 4)
             if self.latencies else None,
             "mean_slot_occupancy": round(self._occupancy_sum / self._samples, 3)

@@ -43,12 +43,18 @@ class Request:
 
     state: RequestState = RequestState.QUEUED
     reject_reason: str | None = None
+    #: recorded by the engine at the moment the stop condition fires
+    #: ("length" | "eos"); None while running.  Recorded — not re-derived
+    #: from the token tail — because a length-stopped generation whose last
+    #: greedy token merely coincides with ``eos_id`` is still a length stop.
+    finish_reason: str | None = None
     slot: int | None = None
     prefilled: int = 0  # prompt tokens already processed (chunked prefill)
     generated: list[int] = dataclasses.field(default_factory=list)
 
     t_submit: float = dataclasses.field(default_factory=time.time)
     t_first_token: float | None = None
+    t_last_token: float | None = None
     t_finish: float | None = None
 
     @property
@@ -60,27 +66,24 @@ class Request:
         return self.state == RequestState.FINISHED
 
     @property
-    def finish_reason(self) -> str | None:
-        if not self.finished:
-            return None
-        if self.eos_id is not None and self.generated and \
-                self.generated[-1] == self.eos_id:
-            return "eos"
-        return "length"
-
-    @property
     def ttft(self) -> float | None:
         """Time to first token (seconds from submit)."""
         if self.t_first_token is None:
             return None
         return self.t_first_token - self.t_submit
 
-    def emit(self, token: int) -> None:
+    def emit(self, token: int) -> float | None:
+        """Record one generated token; returns the inter-token gap in
+        seconds (None for the first token) for stall accounting."""
+        now = time.time()
+        gap = None if self.t_last_token is None else now - self.t_last_token
         if self.t_first_token is None:
-            self.t_first_token = time.time()
+            self.t_first_token = now
+        self.t_last_token = now
         self.generated.append(token)
         if self.on_token is not None:
             self.on_token(self, token)
+        return gap
 
 
 class RequestQueue:
@@ -101,6 +104,24 @@ class RequestQueue:
     def peek(self) -> Request | None:
         return self._heap[0][2] if self._heap else None
 
+    def lowest_priority(self) -> int | None:
+        """Worst (numerically largest) priority value currently queued."""
+        return max(pr for pr, _, _ in self._heap) if self._heap else None
+
+    def evict_lowest(self) -> Request | None:
+        """Remove and return the worst queued request: the lowest priority
+        class, latest arrival within it (evicting the newest lowest-priority
+        job preserves FIFO fairness among its peers)."""
+        if not self._heap:
+            return None
+        i = max(range(len(self._heap)),
+                key=lambda j: (self._heap[j][0], self._heap[j][1]))
+        req = self._heap[i][2]
+        self._heap[i] = self._heap[-1]
+        self._heap.pop()
+        heapq.heapify(self._heap)
+        return req
+
     def __len__(self) -> int:
         return len(self._heap)
 
@@ -119,12 +140,21 @@ class AdmissionController:
         self.prefill_chunk = prefill_chunk
 
     def check(self, queue: RequestQueue, req: Request) -> tuple[bool, str | None]:
+        """Pure admission predicate (no queue mutation).
+
+        A full queue rejects the newcomer only when nothing queued has
+        strictly lower priority; otherwise :meth:`admit` makes room by
+        evicting the worst queued request — a priority-0 job must never be
+        dropped in favour of already-queued best-effort work.
+        """
         if req.prompt_len == 0:
             return False, "empty prompt"
         if req.max_new_tokens < 1:
             return False, "max_new_tokens must be >= 1"
         if len(queue) >= self.max_queue:
-            return False, f"queue full ({self.max_queue})"
+            worst = queue.lowest_priority()
+            if worst is None or worst <= req.priority:
+                return False, f"queue full ({self.max_queue})"
         ch = self.prefill_chunk
         padded = ((req.prompt_len + ch - 1) // ch) * ch
         if padded > self.max_len:
@@ -135,3 +165,20 @@ class AdmissionController:
                            f"{req.max_new_tokens} exceeds slot capacity "
                            f"{self.max_len}")
         return True, None
+
+    def admit(self, queue: RequestQueue,
+              req: Request) -> tuple[bool, str | None, Request | None]:
+        """:meth:`check` plus queue-full eviction.
+
+        Returns ``(ok, reason, evicted)``.  When the queue is at capacity
+        but holds strictly lower-priority work, the worst queued request is
+        removed and returned so the caller can re-reject it (and account
+        for the eviction); the newcomer is admitted in its place.
+        """
+        ok, reason = self.check(queue, req)
+        if not ok:
+            return False, reason, None
+        evicted = None
+        if len(queue) >= self.max_queue:
+            evicted = queue.evict_lowest()
+        return True, None, evicted

@@ -3,22 +3,29 @@
 Every engine iteration is one of two fixed shapes, so the jitted model step
 compiles exactly twice and never again:
 
-  * a PREFILL batch ``(slots, prefill_chunk)`` — the next chunk of every
-    request still processing its prompt (several requests prefill in the
-    same call);
+  * a chunk-shaped batch ``(slots, prefill_chunk)`` — the next chunk of
+    every request still processing its prompt, and (``mixed=True``, the
+    default) every decoding request riding the same call with
+    ``n_valid = 1``;
   * a DECODE batch ``(slots, 1)`` — the last token of every decoding
-    request.
+    request, used whenever no prefill work pends so the thin-M
+    decode-specialized kernel tiles keep firing.
 
 Rows for idle/finished slots (and the padding tail of a short chunk) carry
-``n_valid = 0`` and do not advance their cursor.
+``n_valid = 0`` and do not advance their cursor.  ``ScheduledBatch.row_kinds``
+records, per participating request, whether its row is a prompt chunk
+("prefill") or a single generated token ("decode") — the engine's unified
+postprocess and per-row metrics attribution key off it.
 
-Fairness: admission is (priority, FIFO); when both prefill and decode work
-exist the scheduler alternates strictly between the two batch kinds
-(``interleave=True``), so a stream of long prompts cannot starve running
-decodes and queued decodes cannot starve prompt processing.  Admission into
-a freed slot happens before every batch, so a waiting request is picked up
-at the first opportunity — together with FIFO order this bounds every
-request's wait by the work admitted before it (no starvation).
+Fairness: admission is (priority, FIFO).  With ``mixed=True`` a running
+decode advances on EVERY iteration, so a stream of long prompts cannot
+stall it at all (the historical decode stall).  With ``mixed=False`` the
+scheduler falls back to strict whole-batch alternation between the two
+kinds (``interleave=True``), which bounds — but does not remove — the
+stall at one chunk call per decode token.  Admission into a freed slot
+happens before every batch, so a waiting request is picked up at the first
+opportunity — together with FIFO order this bounds every request's wait by
+the work admitted before it (no starvation).
 """
 
 from __future__ import annotations
@@ -35,18 +42,20 @@ from repro.serving.request import Request, RequestQueue, RequestState
 class ScheduledBatch:
     """One fixed-shape engine iteration."""
 
-    kind: str  # "prefill" | "decode"
+    kind: str  # "prefill" | "decode" | "mixed" (chunk-shaped, both row kinds)
     tokens: np.ndarray  # (slots, C) int32
     n_valid: np.ndarray  # (slots,) int32
     rows: list[Request]  # participating requests (their .slot indexes rows)
+    row_kinds: list[str]  # per entry of ``rows``: "prefill" | "decode"
 
 
 class SlotScheduler:
     def __init__(self, slots: int, prefill_chunk: int,
-                 interleave: bool = True) -> None:
+                 interleave: bool = True, mixed: bool = True) -> None:
         self.slots = slots
         self.prefill_chunk = prefill_chunk
         self.interleave = interleave
+        self.mixed = mixed
         self._prefill_turn = True  # alternation state when both kinds pend
 
     # -- admission -----------------------------------------------------------
@@ -76,16 +85,21 @@ class SlotScheduler:
             return None
 
         if prefilling and decoding:
+            if self.mixed:
+                return self._chunk_batch(prefilling, decoding)
             do_prefill = self._prefill_turn if self.interleave else True
             self._prefill_turn = not self._prefill_turn
         else:
             do_prefill = bool(prefilling)
 
         if do_prefill:
-            return self._prefill_batch(prefilling)
+            return self._chunk_batch(prefilling, [])
         return self._decode_batch(decoding)
 
-    def _prefill_batch(self, prefilling: list[Request]) -> ScheduledBatch:
+    def _chunk_batch(self, prefilling: list[Request],
+                     decoding: list[Request]) -> ScheduledBatch:
+        """Chunk-shaped ``(slots, prefill_chunk)`` batch: prompt chunks plus
+        (mixed mode) decode rows with ``n_valid = 1``."""
         ch = self.prefill_chunk
         tokens = np.zeros((self.slots, ch), np.int32)
         n_valid = np.zeros((self.slots,), np.int32)
@@ -93,7 +107,13 @@ class SlotScheduler:
             n = min(ch, r.prompt_len - r.prefilled)
             tokens[r.slot, :n] = r.prompt[r.prefilled : r.prefilled + n]
             n_valid[r.slot] = n
-        return ScheduledBatch("prefill", tokens, n_valid, prefilling)
+        for r in decoding:
+            tokens[r.slot, 0] = r.generated[-1]
+            n_valid[r.slot] = 1
+        kind = "mixed" if decoding else "prefill"
+        return ScheduledBatch(kind, tokens, n_valid, prefilling + decoding,
+                              ["prefill"] * len(prefilling)
+                              + ["decode"] * len(decoding))
 
     def _decode_batch(self, decoding: list[Request]) -> ScheduledBatch:
         tokens = np.zeros((self.slots, 1), np.int32)
@@ -101,4 +121,5 @@ class SlotScheduler:
         for r in decoding:
             tokens[r.slot, 0] = r.generated[-1]
             n_valid[r.slot] = 1
-        return ScheduledBatch("decode", tokens, n_valid, decoding)
+        return ScheduledBatch("decode", tokens, n_valid, decoding,
+                              ["decode"] * len(decoding))

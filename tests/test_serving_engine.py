@@ -86,7 +86,10 @@ def test_admit_order_and_slot_reuse():
 
 
 def test_interleave_prevents_starvation():
-    sched = SlotScheduler(slots=2, prefill_chunk=4, interleave=True)
+    """mixed=False fallback: strict whole-batch alternation still bounds
+    the decode stall at one prefill turn per decode token."""
+    sched = SlotScheduler(slots=2, prefill_chunk=4, interleave=True,
+                          mixed=False)
     long_prefill = _req(0, plen=400, gen=2)
     long_prefill.slot, long_prefill.state = 0, RequestState.PREFILL
     decoding = _req(1)
@@ -112,6 +115,60 @@ def test_prefill_batch_shapes_and_padding():
     assert b.kind == "prefill" and b.tokens.shape == (3, 8)
     assert b.n_valid.tolist() == [0, 5, 0]
     assert b.tokens[1, :5].tolist() == r.prompt and b.tokens[1, 5:].sum() == 0
+    assert b.row_kinds == ["prefill"]
+
+
+def test_mixed_batch_construction():
+    """With both kinds pending, decode rows ride the chunk-shaped call with
+    n_valid = 1 — the decode stall never happens.  Decode-only turns keep
+    the (slots, 1) shape so the thin-M kernel specialization still fires."""
+    sched = SlotScheduler(slots=3, prefill_chunk=8, mixed=True)
+    pre = _req(0, plen=20)
+    pre.slot, pre.state = 0, RequestState.PREFILL
+    dec = _req(1)
+    dec.slot, dec.state = 2, RequestState.DECODE
+    dec.generated = [42]
+    b = sched.next_batch({0: pre, 2: dec})
+    assert b.kind == "mixed" and b.tokens.shape == (3, 8)
+    assert b.n_valid.tolist() == [8, 0, 1]
+    assert b.tokens[2, 0] == 42 and b.tokens[2, 1:].sum() == 0
+    assert dict(zip((r.slot for r in b.rows), b.row_kinds)) == {
+        0: "prefill", 2: "decode"}
+    # every iteration advances the decode row — no alternation turn skipped
+    pre.prefilled = 8
+    b2 = sched.next_batch({0: pre, 2: dec})
+    assert b2.kind == "mixed" and b2.n_valid.tolist() == [8, 0, 1]
+    # decode-only: thin (slots, 1) shape preserved
+    pre.state = RequestState.DECODE
+    pre.generated = [7]
+    b3 = sched.next_batch({0: pre, 2: dec})
+    assert b3.kind == "decode" and b3.tokens.shape == (3, 1)
+    assert b3.row_kinds == ["decode", "decode"]
+
+
+def test_admission_evicts_lowest_priority():
+    """A full queue must not drop an urgent request while it holds only
+    lower-priority work: the worst queued job (lowest class, latest
+    arrival) is evicted instead."""
+    adm = AdmissionController(max_queue=3, max_len=64, prefill_chunk=8)
+    q = RequestQueue()
+    victims = [_req(i, priority=5) for i in range(2)]
+    for v in victims:
+        q.push(v)
+    q.push(_req(2, priority=1))
+    # urgent request: admitted by evicting the NEWEST priority-5 job
+    ok, reason, evicted = adm.admit(q, _req(3, priority=0))
+    assert ok and reason is None and evicted is victims[1]
+    assert len(q) == 2
+    q.push(_req(3, priority=0))
+    # equal priority to the worst queued -> plain queue-full rejection
+    # (eviction requires STRICTLY lower-priority queued work)
+    ok, reason, evicted = adm.admit(q, _req(4, priority=5))
+    assert not ok and "queue full" in reason and evicted is None
+    # strictly lower-priority work still queued -> the priority-5 survivor
+    # is the next victim
+    ok, _, evicted = adm.admit(q, _req(5, priority=1))
+    assert ok and evicted is victims[0]
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +351,195 @@ def test_engine_high_cursor_interleave_token_identical():
                                                 decode)
     assert rb.generated == _sequential_baseline(api, params, prompt_b, 4, 64,
                                                 decode)
+
+
+def test_mixed_vs_alternating_vs_sequential_token_identical():
+    """The core mixed-batch contract: one engine with mixed batches on, one
+    with the alternating fallback, both token-identical to the sequential
+    baseline on a trace where prefill chunks and decode rows share calls —
+    including a request that finishes its prefill in the same call a
+    neighbor decodes."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    max_len = 64
+    rng = np.random.default_rng(23)
+    prompt_a = rng.integers(0, cfg.vocab, 6).tolist()
+    prompt_b = rng.integers(0, cfg.vocab, 12).tolist()  # single-chunk prompt
+    prompt_c = rng.integers(0, cfg.vocab, 35).tolist()  # multi-chunk prompt
+
+    outs = {}
+    for mixed in (True, False):
+        eng = ServingEngine(cfg, params,
+                            EngineConfig(slots=2, max_len=max_len,
+                                         prefill_chunk=16,
+                                         cache_dtype="float32",
+                                         mixed_batches=mixed))
+        ra = eng.submit(prompt_a, 12)
+        eng.step()  # A prefills (whole prompt, one chunk) and starts decoding
+        assert ra.state == RequestState.DECODE
+        # B's whole prompt fits one chunk: it COMPLETES prefill in the very
+        # call where A's decode row rides along
+        rb = eng.submit(prompt_b, 5)
+        eng.step()
+        if mixed:
+            assert len(rb.generated) == 1  # emitted in the shared call
+            assert len(ra.generated) == 2  # and A advanced in the same call
+        rc = eng.submit(prompt_c, 4)  # multi-chunk prefill over running decodes
+        eng.run()
+        assert eng.compile_count() <= 2
+        snap = eng.metrics.snapshot()
+        assert (snap["mixed_steps"] > 0) == mixed
+        outs[mixed] = [ra.generated, rb.generated, rc.generated]
+
+    assert outs[True] == outs[False]
+    decode = jax.jit(api.decode_step)
+    for got, (prompt, gen) in zip(outs[True], [(prompt_a, 12), (prompt_b, 5),
+                                               (prompt_c, 4)]):
+        assert got == _sequential_baseline(api, params, prompt, gen, max_len,
+                                           decode)
+
+
+def test_decode_row_high_cursor_in_chunk_call():
+    """_slot_update regression: a decode row (n_valid == 1) whose cursor
+    exceeds max_len - chunk rides a chunk-shaped call.  dynamic_update_slice
+    clamps the start, so without the clamp-aware roll+mask the token's K/V
+    would land chunk-displaced over attended history."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    S, CH = 64, 16
+    rng = np.random.default_rng(3)
+    cache = api.init_slot_cache(2, S, jnp.float32)
+    # drive slot 0's cursor to 60 > S - CH
+    for _ in range(3):
+        toks = np.zeros((2, CH), np.int32)
+        toks[0] = rng.integers(0, cfg.vocab, CH)
+        _, cache = api.decode_slots(params, jnp.asarray(toks), cache,
+                                    jnp.asarray([CH, 0], np.int32))
+    for _ in range(12):
+        toks = np.zeros((2, 1), np.int32)
+        toks[0] = rng.integers(0, cfg.vocab)
+        _, cache = api.decode_slots(params, jnp.asarray(toks), cache,
+                                    jnp.asarray([1, 0], np.int32))
+    assert int(cache["lengths"][0]) == 60
+    ref = {k: np.asarray(v) for k, v in cache.items()}
+
+    # mixed call: slot 0 decodes one token AT CURSOR 60 inside the
+    # chunk-shaped call that prefills slot 1
+    tok0 = int(rng.integers(0, cfg.vocab))
+    mixed_toks = np.zeros((2, CH), np.int32)
+    mixed_toks[0, 0] = tok0
+    mixed_toks[1] = rng.integers(0, cfg.vocab, CH)
+    mixed_logits, mixed_cache = api.decode_slots(
+        params, jnp.asarray(mixed_toks), cache,
+        jnp.asarray([1, CH], np.int32))
+
+    # reference: the same decode token through a thin (slots, 1) call
+    thin_toks = np.zeros((2, 1), np.int32)
+    thin_toks[0, 0] = tok0
+    thin_logits, thin_cache = api.decode_slots(
+        params, jnp.asarray(thin_toks), cache, jnp.asarray([1, 0], np.int32))
+
+    assert int(mixed_cache["lengths"][0]) == 61
+    for key in ("k", "v"):
+        got = np.asarray(mixed_cache[key])[:, 0]
+        want = np.asarray(thin_cache[key])[:, 0]
+        # the new K/V must land at column 60 exactly, history untouched
+        assert np.array_equal(got, want), key
+        assert not np.array_equal(got[..., :61, :], ref[key][:, 0][..., :61, :])
+    np.testing.assert_allclose(np.asarray(mixed_logits[0, 0]),
+                               np.asarray(thin_logits[0, 0]), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_engine_eviction_surfaces_in_metrics():
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(slots=2, max_len=64, prefill_chunk=16,
+                                     cache_dtype="float32", max_queue=2))
+    prompt = list(range(1, 9))
+    low1 = eng.submit(prompt, 2, priority=5)
+    low2 = eng.submit(prompt, 2, priority=5)
+    urgent = eng.submit(prompt, 2, priority=0)  # queue full of priority-5 work
+    assert urgent.state == RequestState.QUEUED
+    assert low2.state == RequestState.REJECTED  # newest low-priority victim
+    assert "evicted" in low2.reject_reason
+    assert low1.state == RequestState.QUEUED
+    assert eng.metrics.evicted == 1 and eng.metrics.rejected == 1
+    finished = eng.run()
+    assert {r.rid for r in finished} == {low1.rid, urgent.rid}
+    assert eng.metrics.snapshot()["requests_evicted"] == 1
+
+
+def test_metrics_clock_starts_at_first_step():
+    """Warmup/compile time before the first served batch must not deflate
+    throughput: the clock arms at the first record_step."""
+    from repro.serving.metrics import EngineMetrics
+    import time as _time
+
+    m = EngineMetrics()
+    snap = m.snapshot()  # nothing served yet: well-defined zeros
+    assert snap["elapsed_s"] == 0.0 and snap["gen_tok_per_s"] == 0.0
+    _time.sleep(0.25)  # "warmup" before the first batch
+    m.record_step("decode", 0.5, 0, generated_tokens=100)
+    snap = m.snapshot()
+    # construction-time clock would report >= 0.25s elapsed and <= 400 tok/s
+    assert snap["elapsed_s"] < 0.2
+    assert snap["gen_tok_per_s"] > 500
+
+
+def test_finish_reason_recorded_not_rederived():
+    """A length-stopped generation whose final greedy token coincides with
+    eos_id is a LENGTH stop; tail re-derivation would misreport it as
+    eos."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    prompt = list(np.random.default_rng(2).integers(0, cfg.vocab, 8))
+    base = _sequential_baseline(api, params, prompt, 3, 64)
+
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(slots=2, max_len=64, prefill_chunk=16,
+                                     cache_dtype="float32"))
+    # budget of 1 with eos_id equal to the token that will be generated:
+    # both stop conditions fire on the same step; length is the actual stop
+    r_len = eng.submit(prompt, 1, eos_id=base[0])
+    # eos genuinely earlier than the budget
+    r_eos = eng.submit(prompt, 3, eos_id=base[1])
+    eng.run()
+    assert r_len.generated == base[:1] and r_len.finish_reason == "length"
+    assert r_eos.generated == base[:2] and r_eos.finish_reason == "eos"
+    assert eng.submit(prompt, 1).finish_reason is None  # queued, not finished
+
+
+def test_slot_pool_fused_recurrent_zeroing():
+    """Recycling a slot must zero ONLY that slot's recurrent state, in one
+    fused update (the old per-leaf loop mutated the dict mid-iteration)."""
+    from repro.serving.kv_pool import SlotPool
+
+    cfg = dataclasses.replace(get_config("rwkv6-1.6b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    pool = SlotPool(api, slots=2, max_len=32, cache_dtype="float32")
+    dirty = {k: (jnp.ones_like(v) if k != "lengths"
+                 else jnp.asarray([4, 7], jnp.int32))
+             for k, v in pool.cache.items()}
+    pool.update(dirty)
+    slot = pool.acquire(rid=0)
+    for k, v in pool.cache.items():
+        arr = np.asarray(v)
+        if k == "lengths":
+            assert arr[slot] == 0 and arr[1 - slot] == 7
+        else:  # leaves are (L, slots, ...)
+            assert arr[:, slot].sum() == 0, k
+            assert np.all(arr[:, 1 - slot] == 1), k
 
 
 def test_engine_rejects_unservable():

@@ -27,4 +27,7 @@ python -m repro.launch.serve --engine --requests 8 \
     --arch olmo-1b-reduced --mode perforated --m 2 \
     --slots 4 --max-len 64 --chunk 16
 
+echo "== mixed-load serve bench (decode stall p95, mixed on/off, 1 rep) =="
+python -m benchmarks.serve_bench --mixed-load-only --reps 1 --no-write
+
 echo "CI smoke OK"
