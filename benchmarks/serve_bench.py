@@ -7,12 +7,22 @@ MIXED-LOAD scenario replays staggered long-prompt arrivals over running
 decodes with mixed batches on vs off and reports the decode inter-token
 stall p95 alongside throughput — the number the unified batch exists to
 shrink (alternating stall ~ chunk + decode call; mixed ~ one shared chunk
-call).  Results are also written to BENCH_serve.json at the repo root so
-later PRs have a perf trajectory to beat.
+call).  A third SHARED-PREFIX FLEET scenario serves N requests over one
+long warmed system prompt, paged vs contiguous KV layout, and reports
+TTFT, gen tok/s, prefix-hit tokens, and peak KV bytes — the prefix-cache
+payoff the paged subsystem exists for.  Results are also written to
+BENCH_serve.json at the repo root so later PRs have a perf trajectory to
+beat.
+
+Every scenario LOGS what it ran: silent truncation of the scenario list
+is the failure mode this guards against — a bench that quietly skips a
+scenario reads as "covered" when it was not.
 
     PYTHONPATH=src python -m benchmarks.serve_bench
     PYTHONPATH=src python -m benchmarks.serve_bench --mixed-load-only \
         --reps 1 --no-write    # CI smoke row
+    PYTHONPATH=src python -m benchmarks.serve_bench --paged-only \
+        --reps 1 --no-write    # CI paged smoke (shared-prefix fleet)
 """
 
 from __future__ import annotations
@@ -40,12 +50,14 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_JSON = os.path.join(_ROOT, "BENCH_serve.json")
 
 
-def _make_engine(cfg, params, numerics: str | None, mixed: bool = True):
+def _make_engine(cfg, params, numerics: str | None, mixed: bool = True,
+                 **ecfg_kw):
     from repro.configs.base import EngineConfig
     from repro.serving import ServingEngine
 
     ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
-                        cache_dtype="bfloat16", mixed_batches=mixed)
+                        cache_dtype="bfloat16", mixed_batches=mixed,
+                        **ecfg_kw)
     eng = ServingEngine(cfg, params, ecfg, numerics=numerics)
     # warmup: trigger both compiled shapes (prefill chunk + decode) so the
     # measured traces reflect steady-state serving, not XLA compilation
@@ -182,6 +194,128 @@ def run_mixed_load(reps: int = REPEATS) -> list[dict]:
     return rows
 
 
+# -- shared-prefix fleet: N requests over one warmed system prompt -----------
+#
+# One warmer request fills the shared system prompt's KV blocks; a fleet of
+# N requests (same prompt + distinct short suffixes) then arrives at once.
+# Under the PAGED layout with the prefix cache every fleet request attaches
+# to the cached blocks and prefills only its suffix; under the CONTIGUOUS
+# layout every request re-prefills the full prompt.  Both layouts must stay
+# greedy-token-identical — asserted here, not just in tests.
+
+PREFIX_BLOCK = 8
+SHARED_PREFIX = 64  # 8 full blocks: the whole system prompt is shareable
+N_FLEET = 6
+FLEET_SUFFIX = 8
+FLEET_GEN = 8
+
+
+def _run_shared_prefix(cfg, eng, label: str) -> tuple[dict, list[list[int]]]:
+    import numpy as np
+
+    rng = np.random.default_rng(29)
+    shared = rng.integers(1, cfg.vocab, SHARED_PREFIX).tolist()
+    suffixes = [rng.integers(1, cfg.vocab, FLEET_SUFFIX).tolist()
+                for _ in range(N_FLEET)]
+    warm = eng.submit(shared, 2)  # fills (and, paged, publishes) the prefix
+    eng.run()
+    assert warm.finished, label
+    eng.reset_metrics()  # fleet-only TTFT/throughput window
+    fleet = [eng.submit(shared + s, FLEET_GEN) for s in suffixes]
+    eng.run()
+    snap = eng.metrics.snapshot()
+    assert all(r.finished for r in fleet), label
+    assert eng.compile_count() <= 2, eng.compile_count()
+    if eng.ecfg.kv_layout == "paged" and eng.ecfg.prefix_cache:
+        # the acceptance bar: every fleet request skips at least the
+        # shared-prefix token count of prefill work
+        assert snap["prefix_hit_tokens"] >= N_FLEET * SHARED_PREFIX, snap
+    return snap, [r.generated for r in fleet]
+
+
+def _kv_bytes(eng) -> dict:
+    """Provisioned vs peak-used KV bytes for either layout.  Contiguous
+    stripes are committed whole at admission, so peak == provisioned; the
+    paged pool's peak is whatever the block allocator actually touched."""
+    if eng.ecfg.kv_layout == "paged":
+        per_blk = eng.pool.per_block_bytes()
+        return {
+            "provisioned_kv_bytes": per_blk * eng.pool.blocks_total,
+            "peak_used_kv_bytes": per_blk * eng.pool.allocator.peak_used,
+        }
+    total = sum(int(v.size) * v.dtype.itemsize
+                for k, v in eng.pool.cache.items() if k != "lengths")
+    return {"provisioned_kv_bytes": total, "peak_used_kv_bytes": total}
+
+
+def _shared_prefix_row(label: str, snap: dict, kv_bytes: dict) -> dict:
+    return {
+        "name": f"serve/shared-prefix/{label}",
+        "arch": ARCH,
+        "numerics": snap["numerics"],
+        "kv_layout": snap["kv_layout"],
+        "scenario": (f"1 warmed {SHARED_PREFIX}-tok system prompt + "
+                     f"{N_FLEET} fleet requests ({FLEET_SUFFIX}-tok "
+                     f"suffixes, {FLEET_GEN} gen)"),
+        "slots": SLOTS,
+        "max_len": MAX_LEN,
+        "prefill_chunk": CHUNK,
+        "kv_block_size": PREFIX_BLOCK if label == "paged" else None,
+        "ttft_mean_s": snap["ttft_mean_s"],
+        "ttft_p50_s": snap["ttft_p50_s"],
+        "gen_tok_per_s": snap["gen_tok_per_s"],
+        "total_tok_per_s": snap["total_tok_per_s"],
+        "prompt_tokens": snap["prompt_tokens"],
+        "prefix_hits": snap["prefix_hits"],
+        "prefix_hit_tokens": snap["prefix_hit_tokens"],
+        "no_capacity_stalls": snap["no_capacity_stalls"],
+        "mean_block_utilization": snap["mean_block_utilization"],
+        "mean_block_fragmentation": snap["mean_block_fragmentation"],
+        "cow_copies": snap["cow_copies"],
+        **kv_bytes,
+    }
+
+
+def run_shared_prefix(reps: int = REPEATS) -> list[dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.serve import ServeConfig, build_serving_params
+    from repro.models import build_model
+    from repro.numerics import get_preset
+
+    cfg = get_config(ARCH)
+    api = build_model(cfg)
+    spec = get_preset("serve-default")
+    params = build_serving_params(api.init(jax.random.PRNGKey(0)), cfg,
+                                  ServeConfig(spec=spec))
+    engines = [
+        ("paged", _make_engine(cfg, params, spec.name, kv_layout="paged",
+                               kv_block_size=PREFIX_BLOCK)),
+        ("contiguous", _make_engine(cfg, params, spec.name)),
+    ]
+    snaps: dict[str, list[dict]] = {label: [] for label, _ in engines}
+    outs: dict[str, list[list[int]]] = {}
+    for rep in range(max(reps, 1)):
+        for label, eng in engines:
+            print(f"[serve_bench] scenario=shared-prefix mode={label} "
+                  f"rep={rep + 1}/{max(reps, 1)}")
+            snap, toks = _run_shared_prefix(cfg, eng, label)
+            snaps[label].append(snap)
+            outs.setdefault(label, toks)
+    # the layouts must agree token for token on the same fleet
+    assert outs["paged"] == outs["contiguous"], "paged/contiguous divergence"
+    rows = []
+    for label, eng in engines:
+        agg = dict(snaps[label][0])
+        for k in ("ttft_mean_s", "ttft_p50_s"):
+            agg[k] = round(statistics.median(s[k] for s in snaps[label]), 4)
+        for k in ("gen_tok_per_s", "total_tok_per_s"):
+            agg[k] = round(statistics.median(s[k] for s in snaps[label]), 2)
+        rows.append(_shared_prefix_row(label, agg, _kv_bytes(eng)))
+    return rows
+
+
 def _run_throughput(reps: int = REPEATS) -> list[dict]:
     from repro.configs import get_config
     from repro.launch.serve import ServeConfig, build_serving_params
@@ -218,23 +352,44 @@ def _run_throughput(reps: int = REPEATS) -> list[dict]:
 
 
 def run(reps: int = REPEATS, mixed_load_only: bool = False,
-        write: bool = True) -> list[dict]:
-    """Full bench: throughput modes + mixed-load stall scenario, persisted
-    to BENCH_serve.json.  This is the entry the benchmarks.run harness
-    calls; ``mixed_load_only`` is the CI-smoke subset (which never rewrites
-    the persisted trajectory — it would drop the throughput rows)."""
-    rows = [] if mixed_load_only else _run_throughput(reps)
-    rows += run_mixed_load(reps)
-    if write and not mixed_load_only:
+        paged_only: bool = False, write: bool = True) -> list[dict]:
+    """Full bench: throughput modes + mixed-load stall scenario +
+    shared-prefix fleet, persisted to BENCH_serve.json.  This is the entry
+    the benchmarks.run harness calls; ``mixed_load_only`` /``paged_only``
+    are the CI-smoke subsets (which never rewrite the persisted trajectory
+    — they would drop the other scenarios' rows).
+
+    Every scenario that runs is logged by name, and the returned row set
+    is cross-checked against the scenario list — a scenario silently
+    dropping out of the bench is a hard failure, not a smaller report."""
+    if mixed_load_only and paged_only:
+        raise SystemExit("pick one of --mixed-load-only / --paged-only")
+    subset = mixed_load_only or paged_only
+    scenarios = []
+    if not subset:
+        scenarios.append(("throughput", _run_throughput))
+    if not paged_only:
+        scenarios.append(("mixed-load", run_mixed_load))
+    if not mixed_load_only:
+        scenarios.append(("shared-prefix", run_shared_prefix))
+    rows = []
+    for name, fn in scenarios:
+        print(f"[serve_bench] running scenario: {name}")
+        got = fn(reps)
+        assert got, f"scenario {name} produced no rows"
+        rows += got
+    print(f"[serve_bench] scenarios run: {[n for n, _ in scenarios]} "
+          f"({len(rows)} rows)")
+    if write and not subset:
         with open(OUT_JSON, "w") as f:
             json.dump({"arch": ARCH, "note": "CPU emulation of the "
                        "approximate MAC array; relative numbers are the "
                        "signal",
                        "method": f"{max(reps, 1)} round-robin repeats per "
                        "mode, warm engines (throughput rows keep the best "
-                       "gen tok/s run; mixed-load rows report the per-metric "
-                       "MEDIAN across repeats; not comparable to single-run "
-                       "measurements)",
+                       "gen tok/s run; mixed-load and shared-prefix rows "
+                       "report the per-metric MEDIAN across repeats; not "
+                       "comparable to single-run measurements)",
                        "rows": rows}, f, indent=2)
     return rows
 
@@ -243,15 +398,18 @@ def main(argv=None) -> list[dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reps", type=int, default=REPEATS,
                     help="measured traces per mode (throughput rows keep "
-                         "the best run; mixed-load rows report per-metric "
-                         "medians)")
+                         "the best run; mixed-load/shared-prefix rows "
+                         "report per-metric medians)")
     ap.add_argument("--mixed-load-only", action="store_true",
                     help="run only the mixed-load stall scenario (CI smoke)")
+    ap.add_argument("--paged-only", action="store_true",
+                    help="run only the shared-prefix fleet scenario, paged "
+                         "vs contiguous (CI paged smoke)")
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
     args = ap.parse_args(argv)
     return run(reps=args.reps, mixed_load_only=args.mixed_load_only,
-               write=not args.no_write)
+               paged_only=args.paged_only, write=not args.no_write)
 
 
 if __name__ == "__main__":

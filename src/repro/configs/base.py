@@ -34,6 +34,21 @@ class EngineConfig:
     #: running decode advances every iteration (no stall behind prefill
     #: turns); off falls back to whole-batch alternation (``interleave``)
     mixed_batches: bool = True
+    #: "contiguous": every slot owns a max_len KV stripe (the original
+    #: layout).  "paged": slots map logical positions onto refcounted
+    #: fixed-size blocks from a shared pool (repro.serving.paged) —
+    #: heterogeneous lengths stop costing max_len each, and requests
+    #: sharing a prompt prefix attach to already-filled blocks
+    #: copy-on-write instead of re-prefilling them.  Either layout keeps
+    #: the two-compiled-shapes invariant for its jitted step.
+    kv_layout: str = "contiguous"  # "contiguous" | "paged"
+    kv_block_size: int = 16  # tokens per KV block (paged layout)
+    #: usable KV blocks in the shared pool; 0 = capacity parity with the
+    #: contiguous layout (slots * ceil(max_len / kv_block_size))
+    kv_blocks: int = 0
+    #: content-hash prefix cache over full prompt blocks (paged layout):
+    #: requests sharing a cached prefix skip its prefill entirely
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

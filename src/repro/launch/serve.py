@@ -17,6 +17,11 @@ model with a mixed-length request trace:
     PYTHONPATH=src python -m repro.launch.serve --engine --requests 8 \
         --arch olmo-1b-reduced --mode perforated --m 2
 
+``--kv-layout paged`` serves through the block-granular paged KV cache
+(``--block-size``/``--kv-blocks``/``--no-prefix-cache`` knobs), and
+``--shared-prefix-pair`` prepends a warmed shared-prefix request pair that
+asserts the prefix-cache hit (the CI paged smoke).
+
 and `plan` prints the resolved per-layer assignment table without packing
 anything (shapes only, runs in milliseconds):
 
@@ -193,13 +198,42 @@ def run_engine(args) -> dict:
     params, label = _prepare_params(cfg, args)
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.chunk, cache_dtype=args.cache_dtype,
-                        mixed_batches=not args.no_mixed)
+                        mixed_batches=not args.no_mixed,
+                        kv_layout=args.kv_layout,
+                        kv_block_size=args.block_size,
+                        kv_blocks=args.kv_blocks,
+                        prefix_cache=not args.no_prefix_cache)
     eng = ServingEngine(cfg, params, ecfg, numerics=label)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
-          f"kv={ecfg.cache_dtype} mixed={ecfg.mixed_batches}")
+          f"kv={ecfg.cache_dtype} mixed={ecfg.mixed_batches} "
+          f"layout={ecfg.kv_layout}"
+          + (f" block_size={ecfg.kv_block_size} "
+             f"prefix_cache={ecfg.prefix_cache}"
+             if ecfg.kv_layout == "paged" else ""))
 
     trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
+    if args.shared_prefix_pair:
+        # one warmed shared-prefix pair: the second request must attach to
+        # the first one's cached blocks (the --paged-only CI smoke asserts
+        # the hit below)
+        rng = np.random.default_rng(17)
+        shared = rng.integers(
+            0, cfg.vocab,
+            min(4 * ecfg.prefill_chunk, ecfg.max_len // 2)).tolist()
+        warm = eng.submit(shared, 2)
+        eng.run()
+        hit = eng.submit(shared + rng.integers(0, cfg.vocab, 4).tolist(), 4)
+        eng.run()
+        print(f"  shared-prefix pair: warm gen={len(warm.generated)} "
+              f"hit prefix_hit_tokens={hit.prefix_hit_tokens}")
+        if ecfg.kv_layout == "paged" and ecfg.prefix_cache:
+            # sharing is full-block granular and capped one token early,
+            # so the guaranteed hit is the block-aligned shareable prefix
+            shareable = min(len(shared) // ecfg.kv_block_size
+                            * ecfg.kv_block_size, len(shared) - 1)
+            assert hit.prefix_hit_tokens >= shareable, (
+                hit.prefix_hit_tokens, shareable)
     for prompt, gen in trace:
         r = eng.submit(prompt, gen)
         if r.state.value == "rejected":
@@ -301,6 +335,20 @@ def main(argv=None) -> None:
     ap.add_argument("--no-mixed", action="store_true",
                     help="disable mixed prefill+decode batches (fall back "
                          "to whole-batch alternation)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV memory model: contiguous max_len stripes, or "
+                         "block-granular paged allocation with prefix reuse")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged layout)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="usable blocks in the shared pool (0 = capacity "
+                         "parity with contiguous)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the content-hash shared-prefix cache")
+    ap.add_argument("--shared-prefix-pair", action="store_true",
+                    help="prepend a warmed shared-prefix request pair and "
+                         "report/assert the prefix hit (CI paged smoke)")
     # legacy path knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

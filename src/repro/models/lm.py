@@ -586,6 +586,70 @@ def init_slot_cache(cfg: ArchConfig, slots: int, max_len: int,
     return cache
 
 
+def init_paged_slot_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
+                          slots: int, dtype=jnp.bfloat16) -> dict:
+    """Block-pool decode cache: KV leaves are indexed by PHYSICAL block id
+    on axis 1 — ``(L, num_blocks, ..., block_size, d)`` — instead of by
+    slot.  Per-slot block tables (an input to ``decode_slots``, managed by
+    ``repro.serving.paged``) map logical token positions onto pool rows;
+    ``lengths`` stays the per-slot write cursor.  Row 0 of the pool is the
+    reserved NULL block that padding table entries point at — it is never
+    allocated, so stale gathers from it are masked and stale scatters to
+    it rewrite its own unchanged content."""
+    reason = _slot_unsupported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"paged decode for {cfg.name}: {reason}")
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    cache: dict = {"lengths": jnp.zeros((slots,), jnp.int32)}
+    if cfg.attn == "mla":
+        cache["latent"] = jnp.zeros(
+            (n_scan, num_blocks, block_size, cfg.kv_lora_rank), dtype)
+        cache["rope"] = jnp.zeros(
+            (n_scan, num_blocks, block_size, cfg.qk_rope_dim), dtype)
+    elif cfg.attn == "gqa":
+        cache["k"] = jnp.zeros(
+            (n_scan, num_blocks, cfg.kv_heads, block_size, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros(
+            (n_scan, num_blocks, cfg.kv_heads, block_size, cfg.head_dim), dtype)
+    if cfg.first_dense_layers:
+        fd = cfg.first_dense_layers
+        if cfg.attn == "mla":
+            cache["dense_latent"] = jnp.zeros(
+                (fd, num_blocks, block_size, cfg.kv_lora_rank), dtype)
+            cache["dense_rope"] = jnp.zeros(
+                (fd, num_blocks, block_size, cfg.qk_rope_dim), dtype)
+        else:
+            cache["dense_k"] = jnp.zeros(
+                (fd, num_blocks, cfg.kv_heads, block_size, cfg.head_dim), dtype)
+            cache["dense_v"] = jnp.zeros(
+                (fd, num_blocks, cfg.kv_heads, block_size, cfg.head_dim), dtype)
+    return cache
+
+
+def _paged_gather(pool: jax.Array, bt: jax.Array) -> jax.Array:
+    """Assemble each slot's logically-contiguous KV view from the block
+    pool.  pool: (num_blocks, ..., block_size, d), block axis -2;
+    bt: (slots, nb) physical ids.  Returns (slots, ..., nb*block_size, d)
+    — exactly the contiguous slot-cache layout, so the attention math and
+    the clamp-aware ``_slot_update`` run unchanged on the view."""
+    g = pool[bt]  # (slots, nb, ..., bs, d)
+    g = jnp.moveaxis(g, 1, -3)  # (slots, ..., nb, bs, d)
+    return g.reshape(g.shape[:-3] + (g.shape[-3] * g.shape[-2], g.shape[-1]))
+
+
+def _paged_scatter(pool: jax.Array, bt: jax.Array, view: jax.Array) -> jax.Array:
+    """Write each slot's updated contiguous view back into its blocks.
+    Duplicate ids across rows (shared prefix blocks, NULL-block padding)
+    are safe: shared blocks are frozen — every row's cursor is past them,
+    so all duplicates carry bit-identical content and scatter order cannot
+    matter.  The serving layer guarantees writable blocks are uniquely
+    owned (copy-on-write happens host-side before the step)."""
+    nb = bt.shape[1]
+    bs = pool.shape[-2]
+    blocks = view.reshape(view.shape[:-2] + (nb, bs, view.shape[-1]))
+    return pool.at[bt].set(jnp.moveaxis(blocks, -3, 1))
+
+
 def _slot_update(cache_arr: jax.Array, update: jax.Array, starts: jax.Array,
                  n_valid: jax.Array):
     """Per-row write: row b's first ``n_valid[b]`` update columns land at
@@ -688,12 +752,21 @@ def _mla_slots(bp, h, lc: dict, lengths, n_valid, cfg: ArchConfig, positions):
 
 
 def _block_decode_slots(bp: dict, x, lc: dict, lengths, n_valid,
-                        cfg: ArchConfig, positions, mesh):
+                        cfg: ArchConfig, positions, mesh, block_tables=None):
     h = apply_norm(cfg.norm, bp["attn_norm"], x)
+    pool_lc = None
+    if block_tables is not None:
+        # paged layout: gather each slot's blocks into the contiguous view
+        # the slot attention expects, run it unchanged, scatter back
+        pool_lc = lc
+        lc = {k: _paged_gather(v, block_tables) for k, v in lc.items()}
     if cfg.attn == "mla":
         a, new = _mla_slots(bp["attn"], h, lc, lengths, n_valid, cfg, positions)
     else:
         a, new = _gqa_slots(bp["attn"], h, lc, lengths, n_valid, cfg, positions)
+    if pool_lc is not None:
+        new = {k: _paged_scatter(pool_lc[k], block_tables, v)
+               for k, v in new.items()}
     x = (x + a).astype(x.dtype)
     h = apply_norm(cfg.norm, bp["mlp_norm"], x)
     if cfg.mlp == "moe" and "router" in bp["mlp"]:
@@ -707,7 +780,7 @@ def _block_decode_slots(bp: dict, x, lc: dict, lengths, n_valid,
 
 def decode_slots(params: Params, tokens: jax.Array, cache: dict,
                  cfg: ArchConfig, n_valid: jax.Array,
-                 mesh=None) -> tuple[jax.Array, dict]:
+                 mesh=None, block_tables=None) -> tuple[jax.Array, dict]:
     """Fixed-shape continuous-batching step.
 
     tokens: (slots, C) int32 — row b's first ``n_valid[b]`` entries are real
@@ -715,6 +788,14 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     Returns (logits (slots, C, V) f32, cache with per-row cursors advanced
     by ``n_valid``).  The caller reads row b's logits at column
     ``n_valid[b] - 1``.
+
+    ``block_tables`` selects the PAGED cache layout: a (slots, nb) int32
+    map from each slot's logical block index to a physical row of the
+    block-pool cache (``init_paged_slot_cache``).  Each layer gathers the
+    slot's blocks into the contiguous view, runs the identical attention +
+    clamp-aware cursor write, and scatters the touched blocks back — so the
+    paged step is token-identical to the contiguous one by construction.
+    Table shape is fixed, so each layout keeps its own two compiled shapes.
 
     Kernel decode specialization: the packed-dense fast path keys its tile
     choice on the flattened row count slots*C, so continuous decode (C == 1,
@@ -729,6 +810,8 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     cdt = _dtype(cfg.compute_dtype)
     lengths = cache["lengths"]
     n_valid = jnp.asarray(n_valid, jnp.int32)
+    if block_tables is not None:
+        block_tables = jnp.asarray(block_tables, jnp.int32)
     positions = lengths[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
     x = embed(params["embed"], tokens).astype(cdt)
     new_cache = dict(cache)
@@ -737,7 +820,7 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     for i, bp in enumerate(params.get("dense_blocks", [])):
         lc = {k: cache[f"dense_{k}"][i] for k in dense_keys}
         x, new = _block_decode_slots(bp, x, lc, lengths, n_valid, cfg,
-                                     positions, mesh)
+                                     positions, mesh, block_tables)
         for k in dense_keys:
             new_cache[f"dense_{k}"] = new_cache[f"dense_{k}"].at[i].set(new[k])
 
@@ -747,7 +830,7 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     def body(x, inp):
         bp, lc = inp
         return _block_decode_slots(bp, x, lc, lengths, n_valid, cfg, positions,
-                                   mesh)
+                                   mesh, block_tables)
 
     x, new_layers = jax.lax.scan(body, x, (params["blocks"], lcs))
     new_cache.update(new_layers)

@@ -56,7 +56,11 @@ class ModelApi:
     # continuous-batching surface (serving engine): pooled per-slot cache +
     # fixed-shape multi-token step with per-slot cursors
     init_slot_cache: Callable = None  # (slots, max_len, dtype) -> cache
-    decode_slots: Callable = None  # (params, tokens, cache, n_valid, mesh=None)
+    # (params, tokens, cache, n_valid, mesh=None, block_tables=None);
+    # block_tables selects the paged layout (repro.serving.paged)
+    decode_slots: Callable = None
+    # paged layout: (num_blocks, block_size, slots, dtype) -> block-pool cache
+    init_paged_cache: Callable = None
 
     @property
     def supports_slots(self) -> bool:
@@ -68,6 +72,13 @@ class ModelApi:
         from repro.models.lm import _slot_unsupported
 
         return _slot_unsupported(self.cfg) is None
+
+    @property
+    def supports_paged(self) -> bool:
+        """True when the arch can serve through the paged (block) KV
+        layout.  Recurrent archs (RWKV) have per-slot state, not a KV
+        sequence, so there is nothing to page."""
+        return self.init_paged_cache is not None and self.supports_slots
 
 
 def build_model(cfg: ArchConfig) -> ModelApi:
@@ -103,8 +114,11 @@ def build_model(cfg: ArchConfig) -> ModelApi:
             cfg, batch, max_len, dtype),
         init_slot_cache=lambda slots, max_len, dtype=jnp.bfloat16:
             m.init_slot_cache(cfg, slots, max_len, dtype),
-        decode_slots=lambda p, t, c, n_valid, mesh=None:
-            m.decode_slots(p, t, c, cfg, n_valid, mesh),
+        decode_slots=lambda p, t, c, n_valid, mesh=None, block_tables=None:
+            m.decode_slots(p, t, c, cfg, n_valid, mesh, block_tables),
+        init_paged_cache=lambda num_blocks, block_size, slots,
+            dtype=jnp.bfloat16:
+            m.init_paged_slot_cache(cfg, num_blocks, block_size, slots, dtype),
     )
 
 

@@ -46,14 +46,28 @@ Design invariants:
   * **Numerics live in the parameters.**  The engine is mode-agnostic;
     ``build_serving_params`` decides float vs int8 vs approximate+CV.
 
-Follow-ons tracked in ROADMAP.md: paged/block KV allocation, ring-buffer
-and SSM slot state (hymba), mixed prefill+decode rows in one call,
-multi-host request routing.
+KV memory models (``EngineConfig.kv_layout``):
+
+  * ``"contiguous"`` — every slot owns a ``max_len`` KV stripe
+    (:class:`~repro.serving.kv_pool.SlotPool`); simple, fragmentation-free,
+    capacity-rigid.
+  * ``"paged"`` — slots map logical positions onto refcounted fixed-size
+    blocks from a shared pool (:mod:`repro.serving.paged`): heterogeneous
+    lengths stop costing ``max_len`` each, admission blocks on free
+    BLOCKS, and a content-hash prefix cache lets requests sharing a system
+    prompt attach to already-filled blocks copy-on-write and skip that
+    prefill.  Token-identical to the contiguous path by construction (the
+    step gathers blocks into the same contiguous view).
+
+Follow-ons tracked in ROADMAP.md: ring-buffer and SSM slot state (hymba),
+paged-gather Pallas kernel, multi-host request routing.
 """
 
 from repro.serving.engine import ServingEngine
 from repro.serving.kv_pool import SlotPool
 from repro.serving.metrics import EngineMetrics
+from repro.serving.paged import (BlockAllocator, BlockTable, PagedKVPool,
+                                 PrefixCache)
 from repro.serving.request import (AdmissionController, Request, RequestQueue,
                                    RequestState)
 from repro.serving.scheduler import ScheduledBatch, SlotScheduler
@@ -61,6 +75,10 @@ from repro.serving.scheduler import ScheduledBatch, SlotScheduler
 __all__ = [
     "ServingEngine",
     "SlotPool",
+    "BlockAllocator",
+    "BlockTable",
+    "PagedKVPool",
+    "PrefixCache",
     "EngineMetrics",
     "AdmissionController",
     "Request",

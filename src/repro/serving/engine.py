@@ -2,7 +2,9 @@
 
 :class:`ServingEngine` ties the pieces together: submit() runs admission
 control (with priority eviction from a full queue) and enqueues; step()
-admits into free slots, asks the scheduler for one fixed-shape batch —
+admits into free slots (``kv_layout="paged"`` additionally requires every
+block a request can need to be reservable, and may skip cached shared-
+prefix prefill entirely), asks the scheduler for one fixed-shape batch —
 chunk-shaped with mixed prefill+decode rows when both kinds pend
 (``EngineConfig.mixed_batches``), thin ``(slots, 1)`` otherwise — runs the
 jitted slot step, and advances every participating request through one
@@ -71,10 +73,28 @@ class ServingEngine:
         self.params = params
         self.api = api or build_model(cfg)
         self.numerics = numerics  # active NumericsSpec name (None = unknown)
-        self.pool = SlotPool(self.api, ecfg.slots, ecfg.max_len, ecfg.cache_dtype)
+        if ecfg.kv_layout == "paged":
+            from repro.serving.paged import PagedKVPool
+
+            self.pool = PagedKVPool(self.api, ecfg)
+        elif ecfg.kv_layout == "contiguous":
+            self.pool = SlotPool(self.api, ecfg.slots, ecfg.max_len,
+                                 ecfg.cache_dtype)
+        else:
+            raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}; "
+                             "valid choices: ['contiguous', 'paged']")
+        self._paged = ecfg.kv_layout == "paged"
+        # cumulative pool counters at the start of the metrics window
+        self._block_baseline = (self.pool.block_stats() if self._paged
+                                else None)
         self.queue = RequestQueue()
-        self.admission = AdmissionController(ecfg.max_queue, ecfg.max_len,
-                                             ecfg.prefill_chunk)
+        # paged: admission also screens out jobs whose worst-case block
+        # need exceeds the whole pool (they could never be placed and
+        # would wedge the FIFO head in an eternal capacity stall)
+        self.admission = AdmissionController(
+            ecfg.max_queue, ecfg.max_len, ecfg.prefill_chunk,
+            kv_block_size=ecfg.kv_block_size if self._paged else None,
+            kv_blocks=self.pool.blocks_total if self._paged else None)
         self.scheduler = SlotScheduler(ecfg.slots, ecfg.prefill_chunk,
                                        ecfg.interleave, ecfg.mixed_batches)
         # decode steps are (slots, 1) token blocks: a slot count within the
@@ -86,14 +106,23 @@ class ServingEngine:
 
         self.metrics = EngineMetrics(
             numerics=numerics,
+            kv_layout=ecfg.kv_layout,
             decode_specialized=(ecfg.slots <= DECODE_M_MAX
                                 and _has_blocked_packs(params)))
         self.active: dict[int, Request] = {}
         self._rid = itertools.count()
         decode_slots = self.api.decode_slots
-        # one jitted callable, two shapes ever: (slots, 1) and (slots, chunk)
-        self._step_fn = jax.jit(
-            lambda p, t, c, nv: decode_slots(p, t, c, nv, mesh=mesh))
+        # one jitted callable, two shapes ever: (slots, 1) and (slots, chunk).
+        # The paged layout adds the fixed-shape block-table argument — its
+        # CONTENT changes per admission, its shape never, so the invariant
+        # holds per layout.
+        if self._paged:
+            self._step_fn = jax.jit(
+                lambda p, t, c, nv, bt: decode_slots(p, t, c, nv, mesh=mesh,
+                                                     block_tables=bt))
+        else:
+            self._step_fn = jax.jit(
+                lambda p, t, c, nv: decode_slots(p, t, c, nv, mesh=mesh))
 
     # -- submission ----------------------------------------------------------
 
@@ -135,7 +164,12 @@ class ServingEngine:
 
     def step(self) -> list[Request]:
         """One engine iteration; returns requests that finished in it."""
-        self.scheduler.admit(self.queue, self.pool, self.active)
+        admitted = self.scheduler.admit(self.queue, self.pool, self.active,
+                                        self.metrics)
+        for r in admitted:
+            if r.prefix_hit_tokens:
+                self.metrics.prefix_hits += 1
+                self.metrics.prefix_hit_tokens += r.prefix_hit_tokens
         batch = self.scheduler.next_batch(self.active)
         if batch is None:
             return []
@@ -143,15 +177,40 @@ class ServingEngine:
         # construction and the first served batch stays excluded, but the
         # first measured step's own wall time is inside the window
         self.metrics.start_clock()
-        logits, new_cache = self._step_fn(
-            self.params, jnp.asarray(batch.tokens), self.pool.cache,
-            jnp.asarray(batch.n_valid))
+        if self._paged:
+            # copy-on-write barrier: every block this batch writes must be
+            # uniquely owned before the jitted step sees the tables
+            for slot, nv in enumerate(batch.n_valid):
+                self.pool.ensure_writable(slot, int(nv))
+            self.pool.flush_copies()
+            logits, new_cache = self._step_fn(
+                self.params, jnp.asarray(batch.tokens), self.pool.cache,
+                jnp.asarray(batch.n_valid),
+                jnp.asarray(self.pool.block_tables_array()))
+        else:
+            logits, new_cache = self._step_fn(
+                self.params, jnp.asarray(batch.tokens), self.pool.cache,
+                jnp.asarray(batch.n_valid))
         self.pool.update(new_cache)
+        if self._paged:
+            self.pool.advance(batch.n_valid)
         finished, emitted, prompt_toks = self._postprocess(batch, logits)
         self.metrics.record_step(
             batch.kind, self.pool.occupancy, len(self.queue),
-            prompt_tokens=prompt_toks, generated_tokens=emitted)
+            prompt_tokens=prompt_toks, generated_tokens=emitted,
+            block_stats=self._windowed_block_stats() if self._paged else None)
         return finished
+
+    def _windowed_block_stats(self) -> dict:
+        """Pool block stats with the cumulative counters rebased to the
+        current metrics window, so one snapshot never mixes pool-lifetime
+        numbers (cow_copies, prefix_evictions) with window-scoped ones."""
+        stats = self.pool.block_stats()
+        base = self._block_baseline
+        return {**stats,
+                "cow_copies": stats["cow_copies"] - base["cow_copies"],
+                "prefix_evictions": (stats["prefix_evictions"]
+                                     - base["prefix_evictions"])}
 
     def run(self, max_steps: int | None = None) -> list[Request]:
         """Drive until idle (or ``max_steps``); returns finished requests."""
@@ -170,10 +229,16 @@ class ServingEngine:
 
     def reset_metrics(self) -> None:
         """Fresh counters (e.g. after warmup) without losing the numerics
-        label the engine was built with."""
+        label the engine was built with.  The paged pool's cumulative
+        counters (COW copies, prefix evictions, peak blocks) are rebased
+        so the next snapshot covers one consistent window."""
         self.metrics = EngineMetrics(
             numerics=self.numerics,
+            kv_layout=self.ecfg.kv_layout,
             decode_specialized=self.metrics.decode_specialized)
+        if self._paged:
+            self.pool.reset_peak_blocks()
+            self._block_baseline = self.pool.block_stats()
 
     # -- postprocessing ------------------------------------------------------
 
@@ -206,6 +271,11 @@ class ServingEngine:
                 n = int(batch.n_valid[r.slot])
                 r.prefilled += n
                 prompt_toks += n
+                if self._paged:
+                    # publish newly FULL prompt blocks as they fill, so
+                    # concurrent requests share them before this one ends
+                    self.pool.register_prefix(r.slot, r.prompt_len,
+                                              r.prefilled)
                 if r.prefilled < r.prompt_len:
                     continue
                 # prompt complete: its last token's logits seed generation

@@ -9,8 +9,9 @@ entries; the next occupant overwrites them chunk by chunk).
 
 The pool owns the cache pytree functionally: the engine reads
 ``pool.cache``, runs the jitted step, and stores the result back with
-:meth:`update`.  Paged/block-granular allocation (vLLM-style) is a ROADMAP
-follow-on; today a slot owns a contiguous ``max_len`` stripe.
+:meth:`update`.  A slot owns a contiguous ``max_len`` stripe; the paged
+(block-granular, prefix-sharing) alternative lives in
+``repro.serving.paged`` behind ``EngineConfig.kv_layout``.
 """
 
 from __future__ import annotations
@@ -70,6 +71,12 @@ class SlotPool:
                                      jnp.asarray(slot, jnp.int32))
             self.cache.update(zeroed)
         return slot
+
+    def acquire_for(self, req) -> int | None:
+        """Request-aware acquire (the scheduler's entry point; the paged
+        pool overloads it with prefix matching and block reservation).
+        The contiguous layout needs nothing beyond a free slot."""
+        return self.acquire(req.rid)
 
     def release(self, slot: int) -> None:
         del self._owner[slot]

@@ -6,6 +6,12 @@ numbers: decode tokens/s, end-to-end tokens/s, time-to-first-token
 (mean/p50/max), inter-token stall (p50/p95/max over per-request gaps
 between consecutive generated tokens — the decode-stall signal the mixed
 scheduler exists to shrink), mean queue depth, and mean slot occupancy.
+Under the paged KV layout, block-level counters ride along: utilization
+and fragmentation (slot occupancy alone overstates utilization when
+lengths are heterogeneous), prefix-cache hits and skipped prefill
+tokens, COW copies, prefix evictions, and ``no_capacity_stalls`` —
+iterations where queued work waited on pool capacity, which queue-full
+rejection counts used to hide.
 
 The throughput clock starts lazily at the FIRST served batch (the engine
 arms it just before dispatching; ``record_step`` arms it as a fallback),
@@ -43,6 +49,9 @@ class EngineMetrics:
     #: decode steps then run thin-M, single-K-step kernel launches
     decode_specialized: bool | None = None
 
+    #: KV memory model the engine serves under ("contiguous" | "paged")
+    kv_layout: str = "contiguous"
+
     prompt_tokens: int = 0
     generated_tokens: int = 0
     prefill_steps: int = 0
@@ -54,6 +63,18 @@ class EngineMetrics:
     evicted: int = 0  # queued requests re-rejected for higher-priority work
     finished: int = 0
 
+    #: engine iterations where queued work could not be admitted because
+    #: the pool lacked capacity (free slots, or — paged — free blocks).
+    #: Distinct from queue-full REJECTION: a stall delays work, a
+    #: rejection drops it; before this counter the two were
+    #: indistinguishable in the snapshot.
+    no_capacity_stalls: int = 0
+
+    #: prefix-cache reuse (paged layout): requests admitted onto cached
+    #: blocks, and the total prompt tokens whose prefill that skipped
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+
     ttfts: list[float] = dataclasses.field(default_factory=list)
     #: per-request gaps between consecutive generated tokens (seconds)
     itls: list[float] = dataclasses.field(default_factory=list)
@@ -62,6 +83,15 @@ class EngineMetrics:
     _occupancy_sum: float = 0.0
     _queue_depth_sum: float = 0.0
     _samples: int = 0
+
+    # block-level accounting (paged layout; None-ish for contiguous).
+    # Slot occupancy OVERSTATES utilization under heterogeneous lengths —
+    # a slot holding a 16-token chat counts like one holding a 256-token
+    # document — so block utilization/fragmentation is reported alongside.
+    _block_util_sum: float = 0.0
+    _block_frag_sum: float = 0.0
+    _block_samples: int = 0
+    _last_block_stats: dict | None = None
 
     # -- recording -----------------------------------------------------------
 
@@ -74,7 +104,8 @@ class EngineMetrics:
             self.t_start = time.time()
 
     def record_step(self, kind: str, occupancy: float, queue_depth: int,
-                    prompt_tokens: int = 0, generated_tokens: int = 0) -> None:
+                    prompt_tokens: int = 0, generated_tokens: int = 0,
+                    block_stats: dict | None = None) -> None:
         self.start_clock()
         if kind == "prefill":
             self.prefill_steps += 1
@@ -87,6 +118,11 @@ class EngineMetrics:
         self._occupancy_sum += occupancy
         self._queue_depth_sum += queue_depth
         self._samples += 1
+        if block_stats is not None:
+            self._block_util_sum += block_stats["block_util"]
+            self._block_frag_sum += block_stats["block_frag"]
+            self._block_samples += 1
+            self._last_block_stats = block_stats
 
     def record_first_token(self, req) -> None:
         if req.ttft is not None:
@@ -109,13 +145,29 @@ class EngineMetrics:
         elapsed = (max(time.time() - self.t_start, 1e-9)
                    if self.t_start is not None else 0.0)
         total_tok = self.prompt_tokens + self.generated_tokens
+        blk = self._last_block_stats or {}
         return {
             "numerics": self.numerics,
             "decode_specialized": self.decode_specialized,
+            "kv_layout": self.kv_layout,
             "elapsed_s": round(elapsed, 4),
             "requests_finished": self.finished,
             "requests_rejected": self.rejected,
             "requests_evicted": self.evicted,
+            "no_capacity_stalls": self.no_capacity_stalls,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "mean_block_utilization": round(
+                self._block_util_sum / self._block_samples, 3)
+            if self._block_samples else None,
+            "mean_block_fragmentation": round(
+                self._block_frag_sum / self._block_samples, 3)
+            if self._block_samples else None,
+            "peak_blocks_in_use": blk.get("peak_blocks_in_use"),
+            "blocks_total": blk.get("blocks_total"),
+            "prefix_cache_entries": blk.get("prefix_cache_entries"),
+            "cow_copies": blk.get("cow_copies"),
+            "prefix_evictions": blk.get("prefix_evictions"),
             "prompt_tokens": self.prompt_tokens,
             "generated_tokens": self.generated_tokens,
             "gen_tok_per_s": round(self.generated_tokens / elapsed, 2)

@@ -1,0 +1,457 @@
+"""Paged KV cache: block-granular allocation with copy-on-write prefix reuse.
+
+The contiguous :class:`~repro.serving.kv_pool.SlotPool` gives every slot a
+``max_len`` KV stripe, so a 16-token chat turn costs the same HBM as a
+256-token document and identical system prompts are re-prefilled per
+request.  This module replaces that memory model with a vLLM-style paged
+one while keeping the engine's contracts (fixed-shape jitted steps,
+greedy-token identity with the sequential baseline):
+
+* :class:`BlockAllocator` — refcounted free-list over a global pool of
+  fixed-size KV blocks.  Physical block 0 is the reserved NULL block that
+  padding block-table entries point at; it is never allocated.
+* :class:`BlockTable` — one request's map from logical block index to
+  physical block id, plus a small reserve of pre-allocated ids that
+  copy-on-write draws from (so a COW can never fail mid-flight).
+* :class:`PrefixCache` — content-hash (sha256 chain over full prompt
+  blocks) -> physical block id, LRU-evicted under pool pressure.  A new
+  request attaches to every cached full block of its prompt copy-on-write
+  and skips that prefill entirely.
+* :class:`PagedKVPool` — the engine-facing manager: same surface as
+  ``SlotPool`` (``acquire_for`` / ``release`` / ``update`` / ``cache``)
+  plus block tables, host-side cursor mirrors, COW write barriers, and
+  block-level utilization stats.
+
+Copy-on-write rules
+===================
+
+Shared blocks are immutable: every sharer's cursor starts past the shared
+prefix, so steady-state decode never writes them.  The one place a write
+can target a shared block is the *matched-tokens cap*: at least one prompt
+token must be recomputed to produce first-token logits, so a prompt that
+is FULLY cached attaches all its blocks but starts its cursor one token
+early — the re-prefill of that last token writes into the final shared
+block.  ``ensure_writable`` (called host-side for every row before each
+dispatch) detects the refcount > 1 write, swaps in a block from the
+request's reserve, and records a (src, dst) pair that ``flush_copies``
+materializes with one fixed-shape jitted copy before the step.  The
+original block stays live for the cache and any other sharers.
+
+Capacity is reserved UP FRONT: ``acquire_for`` allocates every block the
+request could need over its lifetime (``ceil((prompt+gen)/block) -
+shared + cow_reserve``), so an admitted request can never deadlock the
+engine waiting for blocks; the cost — generation-budget blocks sit
+allocated-but-unwritten — is exactly what the fragmentation metric
+reports.  Admission therefore blocks on free BLOCKS, not free slots.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EngineConfig
+from repro.models.registry import ModelApi
+
+_CACHE_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                 "int8": jnp.int8}
+
+#: physical block id the padding entries of every block table point at;
+#: never allocated, so stale gathers from it are masked and stale
+#: scatters to it rewrite its own unchanged (zero) content
+NULL_BLOCK = 0
+
+
+def block_hashes(tokens, block_size: int) -> list[bytes]:
+    """Chain hash over the FULL blocks of a token sequence.
+
+    ``out[i]`` commits to tokens ``[0, (i+1)*block_size)`` — a block's
+    hash depends on its whole prefix, so equal hashes mean equal prefill
+    state.  sha256 keeps collisions out of the correctness budget (a
+    python-hash chain would make cache hits probabilistic)."""
+    out: list[bytes] = []
+    h = hashlib.sha256(b"kv-prefix-v1:%d" % block_size).digest()
+    for i in range(len(tokens) // block_size):
+        blk = np.asarray(tokens[i * block_size:(i + 1) * block_size],
+                         np.int64).tobytes()
+        h = hashlib.sha256(h + blk).digest()
+        out.append(h)
+    return out
+
+
+class BlockAllocator:
+    """Refcounted free-list over physical KV blocks ``1..num_blocks-1``."""
+
+    def __init__(self, num_blocks: int) -> None:
+        if num_blocks < 2:
+            raise ValueError("need at least 1 usable block + the NULL block")
+        self.num_blocks = num_blocks
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))  # pop -> 1
+        self._ref: dict[int, int] = {}
+        self.peak_used = 0
+
+    def alloc(self) -> int:
+        """Claim a free block (refcount 1).  Callers check ``n_free``."""
+        if not self._free:
+            raise RuntimeError("block pool exhausted (caller must reserve)")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        self.peak_used = max(self.peak_used, self.n_used)
+        return bid
+
+    def incref(self, bid: int) -> None:
+        self._ref[bid] += 1
+
+    def decref(self, bid: int) -> bool:
+        """Drop one reference; returns True when the block was freed."""
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            del self._ref[bid]
+            self._free.append(bid)
+            return True
+        return False
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._ref)
+
+
+class BlockTable:
+    """One request's logical-block -> physical-block map.
+
+    ``blocks[i]`` backs logical token positions ``[i*bs, (i+1)*bs)``.
+    ``reserve`` holds pre-allocated ids for copy-on-write swaps; both are
+    owned (one refcount each) until :meth:`PagedKVPool.release`."""
+
+    def __init__(self, blocks: list[int], reserve: list[int]) -> None:
+        self.blocks = blocks
+        self.reserve = reserve
+
+    def owned(self) -> list[int]:
+        return self.blocks + self.reserve
+
+
+class PrefixCache:
+    """Content-hash -> physical block id for FULL, frozen prompt blocks.
+
+    Holds one refcount per entry so cached blocks survive their writer's
+    release; LRU order is refreshed on every hit and eviction walks from
+    the cold end.  Entries are keyed by the chain hash, so a hit at block
+    ``i`` guarantees the whole prefix ``[0, (i+1)*bs)`` matches."""
+
+    def __init__(self) -> None:
+        self._entries: OrderedDict[bytes, int] = OrderedDict()
+
+    def match(self, hashes: list[bytes]) -> list[int]:
+        """Longest cached prefix of ``hashes``.  Pure lookup — recency is
+        refreshed by :meth:`touch` only when the caller actually attaches
+        (a capacity-stalled admission retrying every engine step must not
+        skew the LRU order with its failed attempts)."""
+        bids: list[int] = []
+        for h in hashes:
+            bid = self._entries.get(h)
+            if bid is None:
+                break
+            bids.append(bid)
+        return bids
+
+    def touch(self, hashes: list[bytes]) -> None:
+        """Refresh recency of the entries a request attached to."""
+        for h in hashes:
+            if h in self._entries:
+                self._entries.move_to_end(h)
+
+    def register(self, h: bytes, bid: int, allocator: BlockAllocator) -> bool:
+        """Publish a frozen full block; the cache takes its own reference.
+        Re-registering a known hash only refreshes its LRU position."""
+        if h in self._entries:
+            self._entries.move_to_end(h)
+            return False
+        allocator.incref(bid)
+        self._entries[h] = bid
+        return True
+
+    def evict_lru(self, allocator: BlockAllocator) -> bool:
+        """Reclaim one block by dropping the coldest FREEABLE entry — one
+        whose block only the cache still references.  Entries whose blocks
+        live requests hold are skipped: evicting them frees nothing and
+        would only destroy reuse (a transient capacity stall must not
+        drain the whole cache).  Returns False when nothing is freeable."""
+        victim = next((h for h, bid in self._entries.items()  # LRU -> MRU
+                       if allocator.refcount(bid) == 1), None)
+        if victim is None:
+            return False
+        allocator.decref(self._entries.pop(victim))
+        return True
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class PagedKVPool:
+    """Engine-facing paged KV manager (drop-in for ``SlotPool``).
+
+    The jitted step reads ``pool.cache`` (block-pool pytree) together with
+    ``block_tables_array()``; the engine calls, per iteration:
+    ``ensure_writable`` for every scheduled row, ``flush_copies``, the
+    step, then ``advance`` with the batch's ``n_valid``.
+    """
+
+    def __init__(self, api: ModelApi, ecfg: EngineConfig) -> None:
+        if not api.supports_paged:
+            raise NotImplementedError(
+                f"{api.cfg.name}: paged KV layout needs an attention-style "
+                "KV sequence (recurrent per-slot state has nothing to page)")
+        self.slots = ecfg.slots
+        self.max_len = ecfg.max_len
+        self.block_size = ecfg.kv_block_size
+        if self.block_size < 1:
+            raise ValueError("kv_block_size must be >= 1")
+        self.blocks_per_slot = -(-ecfg.max_len // self.block_size)
+        usable = ecfg.kv_blocks or ecfg.slots * self.blocks_per_slot
+        self.cache = api.init_paged_cache(usable + 1, self.block_size,
+                                          ecfg.slots,
+                                          _CACHE_DTYPES[ecfg.cache_dtype])
+        self.allocator = BlockAllocator(usable + 1)
+        self.prefix = PrefixCache() if ecfg.prefix_cache else None
+        self._block_keys = [k for k in self.cache if k != "lengths"]
+        self._free_slots: list[int] = list(range(ecfg.slots - 1, -1, -1))
+        self._owner: dict[int, int] = {}
+        self._tables: dict[int, BlockTable] = {}
+        self._cursors = np.zeros(ecfg.slots, np.int64)  # host mirror
+        self._hashes: dict[int, list[bytes]] = {}  # slot -> prompt chain
+        self._registered: dict[int, int] = {}  # slot -> full blocks published
+        self._pending_copies: list[tuple[int, int]] = []
+        # one fixed-shape jitted COW copy: scalar src/dst are traced, so
+        # every copy reuses the single compiled executable
+        self._copy_fn = jax.jit(self._copy_block)
+        # cumulative observability counters (engine snapshots them)
+        self.cow_copies = 0
+        self.prefix_evictions = 0
+
+    def _copy_block(self, cache: dict, src, dst) -> dict:
+        out = dict(cache)
+        for k in self._block_keys:
+            out[k] = cache[k].at[:, dst].set(cache[k][:, src])
+        return out
+
+    # -- allocation ----------------------------------------------------------
+
+    def _make_room(self, n: int) -> bool:
+        """Free-list pressure valve: evict cold prefix-cache entries until
+        ``n`` blocks are free (or nothing evictable remains)."""
+        while self.allocator.n_free < n:
+            if self.prefix is None or not self.prefix.evict_lru(self.allocator):
+                break
+            self.prefix_evictions += 1
+        return self.allocator.n_free >= n
+
+    def acquire_for(self, req) -> int | None:
+        """Admit one request: match its prompt against the prefix cache,
+        then reserve EVERY block its lifetime can need.  Returns the slot,
+        or None when slots or blocks are exhausted (the request stays
+        queued — a "no capacity" stall, not a rejection).
+
+        Side effects on success: ``req.prefix_hit_tokens`` records how
+        much prefill is skipped, and the device cursor starts there.  The
+        match is capped at ``prompt_len - 1`` so at least one prompt token
+        is recomputed for its logits; when the cap lands mid-block the
+        shared tail block is attached anyway and one reserve block is
+        added for the copy-on-write its re-prefill will trigger."""
+        if not self._free_slots:
+            return None
+        bs = self.block_size
+        plen, gen = len(req.prompt), req.max_new_tokens
+        need_total = -(-(plen + gen) // bs)
+        if need_total > self.blocks_total:
+            # can NEVER be placed; the admission controller screens this
+            # out, but a direct caller must not be able to wedge the pool
+            raise ValueError(
+                f"request {req.rid} needs {need_total} blocks; the pool "
+                f"holds {self.blocks_total}")
+        # the chain hash is a pure function of the prompt — memoized on the
+        # request so a capacity-stalled admission retrying every engine
+        # step does not rehash the whole prompt each time
+        hashes = [] if self.prefix is None else req.block_hashes
+        if hashes is None:
+            hashes = req.block_hashes = block_hashes(req.prompt, bs)
+        matched = self.prefix.match(hashes) if self.prefix is not None else []
+        matched_tokens = min(len(matched) * bs, plen - 1)
+        cow_reserve = 1 if matched_tokens < len(matched) * bs else 0
+        fresh_needed = need_total - len(matched) + cow_reserve
+        # hold the shared blocks BEFORE making room: eviction under
+        # pressure must not free what we are about to attach to
+        for bid in matched:
+            self.allocator.incref(bid)
+        if not self._make_room(fresh_needed):
+            for bid in matched:
+                self.allocator.decref(bid)
+            return None
+        fresh = [self.allocator.alloc() for _ in range(fresh_needed)]
+        n_tail = need_total - len(matched)
+        table = BlockTable(matched + fresh[:n_tail], fresh[n_tail:])
+        slot = self._free_slots.pop()
+        if self.prefix is not None and matched:
+            self.prefix.touch(hashes[:len(matched)])  # recency on attach
+        self._owner[slot] = req.rid
+        self._tables[slot] = table
+        self._cursors[slot] = matched_tokens
+        self._hashes[slot] = hashes  # [] when the prefix cache is disabled
+        self._registered[slot] = len(matched)
+        self.cache["lengths"] = (
+            self.cache["lengths"].at[slot].set(matched_tokens))
+        req.prefix_hit_tokens = matched_tokens
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Drop the request's references; blocks survive while the prefix
+        cache (or another sharer) still holds them."""
+        for bid in self._tables[slot].owned():
+            self.allocator.decref(bid)
+        del self._tables[slot], self._owner[slot]
+        self._hashes.pop(slot, None)
+        self._registered.pop(slot, None)
+        self._free_slots.append(slot)
+
+    # -- per-step write barrier (copy-on-write) ------------------------------
+
+    def ensure_writable(self, slot: int, n_tokens: int) -> None:
+        """Host-side COW barrier: every block the next ``n_tokens``-token
+        write for ``slot`` touches must be uniquely owned before dispatch."""
+        if n_tokens <= 0:
+            return
+        bs = self.block_size
+        cur = int(self._cursors[slot])
+        table = self._tables[slot]
+        for lb in range(cur // bs, (cur + n_tokens - 1) // bs + 1):
+            bid = table.blocks[lb]
+            if self.allocator.refcount(bid) > 1:
+                assert table.reserve, (
+                    "COW without a reserve block: acquire_for accounting bug")
+                dst = table.reserve.pop()
+                self._pending_copies.append((bid, dst))
+                self.allocator.decref(bid)
+                table.blocks[lb] = dst
+                self.cow_copies += 1
+
+    def flush_copies(self) -> None:
+        """Materialize pending COW copies (one fixed-shape jitted call per
+        pair) so the step sees uniquely-owned, content-identical blocks."""
+        for src, dst in self._pending_copies:
+            self.cache = self._copy_fn(self.cache, jnp.int32(src),
+                                       jnp.int32(dst))
+        self._pending_copies.clear()
+
+    def advance(self, n_valid: np.ndarray) -> None:
+        """Mirror the device cursor advance after a dispatched step."""
+        self._cursors += np.asarray(n_valid, np.int64)
+
+    # -- prefix publication --------------------------------------------------
+
+    def register_prefix(self, slot: int, prompt_len: int,
+                        prefilled: int) -> int:
+        """Publish every newly FULL prompt block of ``slot`` to the prefix
+        cache (called as chunked prefill advances, so concurrent requests
+        hit blocks while their writer is still prefilling).  Only blocks
+        entirely covered by the prompt are published — the tail block also
+        receives generated tokens and is never shareable."""
+        if self.prefix is None:
+            return 0
+        n_full = min(prefilled, prompt_len) // self.block_size
+        table, hashes = self._tables[slot], self._hashes[slot]
+        published = 0
+        for lb in range(self._registered.get(slot, 0), n_full):
+            published += self.prefix.register(hashes[lb], table.blocks[lb],
+                                              self.allocator)
+        self._registered[slot] = max(self._registered.get(slot, 0), n_full)
+        return published
+
+    # -- state ---------------------------------------------------------------
+
+    def update(self, new_cache: dict) -> None:
+        self.cache = new_cache
+
+    def lengths(self) -> np.ndarray:
+        return np.asarray(self.cache["lengths"])
+
+    def block_tables_array(self) -> np.ndarray:
+        """(slots, blocks_per_slot) int32 for the jitted step; idle slots
+        and the unallocated tail of short tables point at NULL_BLOCK."""
+        bt = np.full((self.slots, self.blocks_per_slot), NULL_BLOCK, np.int32)
+        for slot, table in self._tables.items():
+            bt[slot, :len(table.blocks)] = table.blocks
+        return bt
+
+    # -- observability -------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_active(self) -> int:
+        return self.slots - len(self._free_slots)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_active / self.slots
+
+    def owner(self, slot: int) -> int | None:
+        return self._owner.get(slot)
+
+    @property
+    def blocks_total(self) -> int:
+        return self.allocator.num_blocks - 1
+
+    def reset_peak_blocks(self) -> None:
+        """Re-arm the peak-blocks watermark at the current usage (called by
+        ``ServingEngine.reset_metrics`` so ``peak_blocks_in_use`` covers
+        the same measurement window as the other snapshot counters)."""
+        self.allocator.peak_used = self.allocator.n_used
+
+    def per_block_bytes(self) -> int:
+        """HBM cost of one block across every layer's KV leaves."""
+        return sum(int(v.size) * v.dtype.itemsize // self.allocator.num_blocks
+                   for k, v in self.cache.items() if k != "lengths")
+
+    def block_stats(self) -> dict:
+        """Block-level utilization and fragmentation, exactly.
+
+        ``block_util`` is in-use blocks (active tables + reserves + prefix
+        cache) over the usable pool.  ``block_frag`` is the
+        allocated-but-unwritten fraction of ACTIVE requests' blocks —
+        up-front generation-budget reservation made visible; shared blocks
+        are counted once at their fullest view."""
+        filled: dict[int, int] = {}
+        bs = self.block_size
+        for slot, table in self._tables.items():
+            cur = int(self._cursors[slot])
+            for lb, bid in enumerate(table.blocks):
+                f = min(max(cur - lb * bs, 0), bs)
+                filled[bid] = max(filled.get(bid, 0), f)
+            for bid in table.reserve:
+                filled.setdefault(bid, 0)
+        active_blocks = len(filled)
+        written = sum(filled.values())
+        return {
+            "blocks_total": self.blocks_total,
+            "blocks_in_use": self.allocator.n_used,
+            "peak_blocks_in_use": self.allocator.peak_used,
+            "block_util": self.allocator.n_used / self.blocks_total,
+            "block_frag": (1.0 - written / (active_blocks * bs)
+                           if active_blocks else 0.0),
+            "prefix_cache_entries": len(self.prefix) if self.prefix else 0,
+            "cow_copies": self.cow_copies,
+            "prefix_evictions": self.prefix_evictions,
+        }

@@ -43,6 +43,13 @@ class Request:
 
     state: RequestState = RequestState.QUEUED
     reject_reason: str | None = None
+    #: prompt tokens whose prefill was skipped by attaching to prefix-cache
+    #: blocks at admission (paged KV layout); the cursor starts here
+    prefix_hit_tokens: int = 0
+    #: memoized sha256 block-hash chain of the prompt (paged layout) — a
+    #: capacity-stalled admission retries every engine step and must not
+    #: rehash the prompt each time; filled lazily by PagedKVPool
+    block_hashes: list | None = dataclasses.field(default=None, repr=False)
     #: recorded by the engine at the moment the stop condition fires
     #: ("length" | "eos"); None while running.  Recorded — not re-derived
     #: from the token tail — because a length-stopped generation whose last
@@ -132,12 +139,20 @@ class AdmissionController:
     ``max_len`` is the per-slot KV capacity; a prompt must fit when rounded
     up to whole prefill chunks (chunk writes are fixed-shape) AND leave room
     for its generation budget, otherwise the job would stall a slot forever.
+    Under the paged KV layout (``kv_block_size``/``kv_blocks`` set) the
+    job's worst-case block need must also fit the WHOLE pool — a request
+    needing more blocks than exist could never be placed, and leaving it
+    queued would wedge the engine behind an eternal capacity stall.
     """
 
-    def __init__(self, max_queue: int, max_len: int, prefill_chunk: int) -> None:
+    def __init__(self, max_queue: int, max_len: int, prefill_chunk: int,
+                 kv_block_size: int | None = None,
+                 kv_blocks: int | None = None) -> None:
         self.max_queue = max_queue
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
+        self.kv_block_size = kv_block_size
+        self.kv_blocks = kv_blocks
 
     def check(self, queue: RequestQueue, req: Request) -> tuple[bool, str | None]:
         """Pure admission predicate (no queue mutation).
@@ -164,6 +179,12 @@ class AdmissionController:
             return False, (f"prompt+generation {req.prompt_len}+"
                            f"{req.max_new_tokens} exceeds slot capacity "
                            f"{self.max_len}")
+        if self.kv_blocks is not None:
+            bs = self.kv_block_size
+            need = (req.prompt_len + req.max_new_tokens + bs - 1) // bs
+            if need > self.kv_blocks:
+                return False, (f"needs {need} KV blocks; the pool holds "
+                               f"{self.kv_blocks}")
         return True, None
 
     def admit(self, queue: RequestQueue,

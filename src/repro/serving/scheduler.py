@@ -61,17 +61,40 @@ class SlotScheduler:
     # -- admission -----------------------------------------------------------
 
     def admit(self, queue: RequestQueue, pool: SlotPool,
-              active: dict[int, Request]) -> list[Request]:
-        """Move queued requests into free slots (priority, then FIFO)."""
+              active: dict[int, Request], metrics=None) -> list[Request]:
+        """Move queued requests into free slots (priority, then FIFO).
+
+        Placement can fail on CAPACITY, not just on slots: the paged pool
+        admits only when every block the request can need is reservable.
+        The head request is therefore peeked, placed, and only then popped
+        — on failure it keeps its queue position and the iteration is
+        counted as a ``no_capacity_stalls`` sample (distinct from
+        queue-full rejection, which drops work; a stall only delays it).
+
+        A prefix-cache hit comes back with ``req.prefix_hit_tokens`` set
+        and the slot cursor pre-advanced; the request enters chunked
+        prefill with that much of its prompt already marked done (at least
+        one token always remains, to produce its first-token logits).
+        """
         admitted = []
-        while len(queue) and pool.n_free:
-            req = queue.pop()
-            slot = pool.acquire(req.rid)
-            assert slot is not None
+        stalled = False
+        while len(queue):
+            if not pool.n_free:
+                stalled = True
+                break
+            req = queue.peek()
+            slot = pool.acquire_for(req)
+            if slot is None:
+                stalled = True
+                break
+            queue.pop()
             req.slot = slot
+            req.prefilled = req.prefix_hit_tokens
             req.state = RequestState.PREFILL
             active[slot] = req
             admitted.append(req)
+        if stalled and metrics is not None:
+            metrics.no_capacity_stalls += 1
         return admitted
 
     # -- batch construction --------------------------------------------------

@@ -1,0 +1,472 @@
+"""Paged KV subsystem: allocator/prefix-cache units, copy-on-write rules,
+and the core contract — the paged engine is greedy-token-identical to the
+contiguous engine and the sequential baseline, across block sizes
+(including ones that do not divide the prefill chunk), cursor-at-boundary
+writes, shared-prefix attachment, and release-while-shared refcounts."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import EngineConfig
+from repro.models import build_model
+from repro.serving import RequestState, ServingEngine
+from repro.serving.paged import (BlockAllocator, PagedKVPool, PrefixCache,
+                                 block_hashes)
+
+# ---------------------------------------------------------------------------
+# units (no model)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_refcounts_and_null_block():
+    a = BlockAllocator(5)  # ids 1..4 usable; 0 reserved NULL
+    got = [a.alloc() for _ in range(4)]
+    assert sorted(got) == [1, 2, 3, 4] and 0 not in got
+    assert a.n_free == 0 and a.n_used == 4 and a.peak_used == 4
+    with pytest.raises(RuntimeError):
+        a.alloc()
+    a.incref(got[0])
+    assert not a.decref(got[0])  # still shared
+    assert a.decref(got[0])  # now freed
+    assert a.n_free == 1 and a.refcount(got[0]) == 0
+    assert a.alloc() == got[0]  # recycled
+
+
+def test_block_hashes_chain_commits_to_prefix():
+    h1 = block_hashes([1, 2, 3, 4, 5, 6, 7], 4)
+    assert len(h1) == 1  # only FULL blocks are hashed
+    h2 = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], 4)
+    assert h1[0] == h2[0]  # same first block
+    h3 = block_hashes([0, 2, 3, 4, 9, 9, 9, 9], 4)
+    # a differing token in block 0 changes EVERY downstream hash
+    assert h3[0] != h2[0] and h3[1] != h2[1]
+    assert block_hashes([1, 2, 3], 4) == []
+
+
+def test_prefix_cache_match_register_lru():
+    a = BlockAllocator(8)
+    c = PrefixCache()
+    hs = block_hashes(list(range(12)), 4)  # 3 full blocks
+    bids = [a.alloc() for _ in range(3)]
+    for h, b in zip(hs, bids):
+        assert c.register(h, b, a)
+        assert not c.register(h, b, a)  # idempotent, refresh only
+    assert a.refcount(bids[0]) == 2  # cache holds its own ref
+    assert c.match(hs) == bids
+    # a diverging prompt matches only the shared full-block prefix
+    other = block_hashes(list(range(8)) + [99, 99, 99, 99], 4)
+    assert c.match(other) == bids[:2]
+    # entries whose blocks live requests still hold are NOT evictable —
+    # freeing them reclaims nothing and would only destroy reuse
+    assert not c.evict_lru(a)
+    # drop our "request" refs: blocks 0-1 become cache-only, hence
+    # freeable; match() must not have skewed recency, so with touch()
+    # refreshing blocks 0-1 the eviction order starts at block 2
+    for b in bids:
+        a.decref(b)
+    c.touch(hs[:2])
+    assert c.evict_lru(a)
+    assert c.match(hs) == bids[:2]  # chain now stops before block 2
+    assert a.refcount(bids[2]) == 0  # freed: only the cache held it
+    assert c.evict_lru(a) and c.evict_lru(a)
+    assert c.match(hs) == [] and not c.evict_lru(a)
+    assert a.refcount(bids[0]) == 0 and a.n_free == 7
+
+
+def _engine(cfg, params, layout, bs=8, blocks=0, prefix=True, slots=3,
+            max_len=64, chunk=16, mixed=True):
+    return ServingEngine(cfg, params, EngineConfig(
+        slots=slots, max_len=max_len, prefill_chunk=chunk,
+        cache_dtype="float32", mixed_batches=mixed, kv_layout=layout,
+        kv_block_size=bs, kv_blocks=blocks, prefix_cache=prefix))
+
+
+@pytest.fixture(scope="module")
+def olmo():
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    return cfg, api, api.init(jax.random.PRNGKey(0))
+
+
+def _baseline(api, params, prompt, gen, max_len, decode=None):
+    decode = decode or jax.jit(api.decode_step)
+    logits, cache = api.prefill(params, {"tokens": jnp.asarray([prompt])},
+                                max_len=max_len, cache_dtype=jnp.float32)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    for _ in range(gen - 1):
+        logits, cache = decode(params, jnp.asarray([[tok]]), cache)
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pool-level behavior
+# ---------------------------------------------------------------------------
+
+
+class _Req:
+    def __init__(self, rid, prompt, gen):
+        self.rid, self.prompt, self.max_new_tokens = rid, prompt, gen
+        self.prefix_hit_tokens = 0
+        self.block_hashes = None
+
+
+def test_pool_reserves_upfront_and_stalls_on_block_exhaustion(olmo):
+    cfg, api, _ = olmo
+    ecfg = EngineConfig(slots=4, max_len=64, prefill_chunk=16,
+                        cache_dtype="float32", kv_layout="paged",
+                        kv_block_size=8, kv_blocks=10)  # 10 usable blocks
+    pool = PagedKVPool(api, ecfg)
+    # 40 prompt + 8 gen = 6 blocks reserved up front
+    s0 = pool.acquire_for(_Req(0, list(range(1, 41)), 8))
+    assert s0 is not None and pool.allocator.n_used == 6
+    # second request needs 6 more but only 4 remain -> capacity stall,
+    # even though 3 slots are still free
+    assert pool.n_free == 3
+    assert pool.acquire_for(_Req(1, list(range(1, 41)), 8)) is None
+    pool.release(s0)
+    assert pool.allocator.n_used == 0  # no prefix published: all freed
+    assert pool.acquire_for(_Req(2, list(range(1, 41)), 8)) is not None
+
+
+def test_pool_cow_swaps_shared_block_and_keeps_original(olmo):
+    cfg, api, _ = olmo
+    ecfg = EngineConfig(slots=2, max_len=64, prefill_chunk=16,
+                        cache_dtype="float32", kv_layout="paged",
+                        kv_block_size=8)
+    pool = PagedKVPool(api, ecfg)
+    prompt = list(range(1, 17))  # exactly 2 full blocks
+    r0 = _Req(0, prompt, 4)
+    s0 = pool.acquire_for(r0)
+    pool.advance(np.asarray([16, 0]))  # pretend the prefill ran
+    pool.register_prefix(s0, len(prompt), 16)
+    # identical prompt: full match, capped one token early -> attaches both
+    # blocks plus one COW reserve
+    r1 = _Req(1, prompt, 4)
+    s1 = pool.acquire_for(r1)
+    assert r1.prefix_hit_tokens == 15
+    shared = pool._tables[s1].blocks[1]
+    assert shared == pool._tables[s0].blocks[1]
+    assert pool.allocator.refcount(shared) == 3  # owner + cache + sharer
+    # the re-prefill of token 15 writes block 1 -> COW must swap it
+    pool.ensure_writable(s1, 1)
+    assert pool.cow_copies == 1
+    assert pool._tables[s1].blocks[1] != shared  # diverged physically
+    assert pool._tables[s0].blocks[1] == shared  # original untouched
+    assert pool.allocator.refcount(shared) == 2
+    assert pool._pending_copies and pool._pending_copies[0][0] == shared
+    pool.flush_copies()
+    assert not pool._pending_copies
+    # owned blocks (including the unused reserve) all return on release
+    used_before = pool.allocator.n_used
+    pool.release(s1)
+    assert pool.allocator.n_used < used_before
+
+
+def test_pool_release_while_shared_keeps_blocks_alive(olmo):
+    cfg, api, _ = olmo
+    ecfg = EngineConfig(slots=2, max_len=64, prefill_chunk=16,
+                        cache_dtype="float32", kv_layout="paged",
+                        kv_block_size=8)
+    pool = PagedKVPool(api, ecfg)
+    prompt = list(range(1, 25))  # 3 full blocks
+    r0 = _Req(0, prompt, 2)
+    s0 = pool.acquire_for(r0)
+    pool.advance(np.asarray([24, 0]))
+    pool.register_prefix(s0, 24, 24)
+    r1 = _Req(1, prompt + [99] * 8, 2)
+    s1 = pool.acquire_for(r1)
+    assert r1.prefix_hit_tokens == 24
+    shared = list(pool._tables[s0].blocks[:3])
+    assert pool._tables[s1].blocks[:3] == shared
+    pool.release(s0)  # writer leaves first
+    # cache ref + sharer ref keep every shared block alive
+    assert all(pool.allocator.refcount(b) == 2 for b in shared)
+    pool.release(s1)
+    assert all(pool.allocator.refcount(b) == 1 for b in shared)  # cache only
+    # evicting the cache entries finally frees them
+    while pool.prefix.evict_lru(pool.allocator):
+        pass
+    assert all(pool.allocator.refcount(b) == 0 for b in shared)
+    assert pool.allocator.n_used == 0
+
+
+def test_paged_pool_rejects_recurrent_arch():
+    rcfg = get_config("rwkv6-1.6b-reduced")
+    rapi = build_model(rcfg)
+    with pytest.raises(NotImplementedError):
+        PagedKVPool(rapi, EngineConfig(slots=2, max_len=32,
+                                       kv_layout="paged"))
+
+
+def test_engine_rejects_unknown_layout(olmo):
+    cfg, api, params = olmo
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, EngineConfig(kv_layout="interleaved"))
+
+
+# ---------------------------------------------------------------------------
+# token identity: paged vs contiguous vs sequential
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_size", [8, 12, 16],
+                         ids=["bs8", "bs12-undivides-chunk", "bs16"])
+def test_paged_token_identical_across_block_sizes(olmo, block_size):
+    """The mixed-length trace (multi-chunk prompts, heterogeneous gens)
+    must come out token-identical from the paged engine for any block
+    size — including 12, which divides neither the chunk (16) nor
+    max_len (64), so chunk writes straddle block boundaries."""
+    cfg, api, params = olmo
+    rng = np.random.default_rng(3)
+    trace = [(rng.integers(0, cfg.vocab, p).tolist(), g)
+             for p, g in [(3, 4), (17, 6), (33, 5), (9, 8), (40, 3)]]
+    eng = _engine(cfg, params, "paged", bs=block_size)
+    reqs = [eng.submit(p, g) for p, g in trace]
+    assert len(eng.run()) == len(trace)
+    assert eng.compile_count() <= 2
+    decode = jax.jit(api.decode_step)
+    for r, (prompt, gen) in zip(reqs, trace):
+        assert r.generated == _baseline(api, params, prompt, gen, 64, decode), \
+            (block_size, r.rid)
+
+
+def test_paged_mixed_batches_token_identical(olmo):
+    """Decode rows riding chunk calls (mixed batches) while other slots
+    prefill — the PR 4 scenario — must hold under the paged layout too,
+    in both scheduler modes."""
+    cfg, api, params = olmo
+    rng = np.random.default_rng(23)
+    prompt_a = rng.integers(0, cfg.vocab, 6).tolist()
+    prompt_b = rng.integers(0, cfg.vocab, 35).tolist()
+    outs = {}
+    for mixed in (True, False):
+        eng = _engine(cfg, params, "paged", bs=8, slots=2, mixed=mixed)
+        ra = eng.submit(prompt_a, 12)
+        eng.step()  # A decodes while B's multi-chunk prefill arrives
+        assert ra.state == RequestState.DECODE
+        rb = eng.submit(prompt_b, 5)
+        eng.run()
+        assert eng.compile_count() <= 2
+        outs[mixed] = [ra.generated, rb.generated]
+    assert outs[True] == outs[False]
+    decode = jax.jit(api.decode_step)
+    assert outs[True][0] == _baseline(api, params, prompt_a, 12, 64, decode)
+    assert outs[True][1] == _baseline(api, params, prompt_b, 5, 64, decode)
+
+
+def test_paged_cursor_at_block_boundary_writes(olmo):
+    """Direct decode_slots check: a chunk that ends exactly on a block
+    boundary, then single-token decode writes that start a fresh block.
+    The paged cache must agree with the contiguous cache bit for bit on
+    the logical view."""
+    cfg, api, params = olmo
+    BS, S = 8, 32
+    nb = S // BS
+    cont = api.init_slot_cache(2, S, jnp.float32)
+    paged = api.init_paged_cache(2 * nb + 1, BS, 2, jnp.float32)
+    bt = np.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+    rng = np.random.default_rng(0)
+    # chunk of 16 = exactly 2 blocks, cursor lands on boundary 16
+    toks = np.zeros((2, 16), np.int32)
+    toks[0] = rng.integers(0, cfg.vocab, 16)
+    lg_c, cont = api.decode_slots(params, jnp.asarray(toks), cont,
+                                  jnp.asarray([16, 0], np.int32))
+    lg_p, paged = api.decode_slots(params, jnp.asarray(toks), paged,
+                                   jnp.asarray([16, 0], np.int32),
+                                   block_tables=jnp.asarray(bt))
+    np.testing.assert_allclose(np.asarray(lg_c[0]), np.asarray(lg_p[0]),
+                               rtol=1e-5, atol=1e-5)
+    # two decode tokens: positions 16 (first col of block 3) and 17
+    for _ in range(2):
+        t = np.zeros((2, 1), np.int32)
+        t[0] = rng.integers(0, cfg.vocab)
+        _, cont = api.decode_slots(params, jnp.asarray(t), cont,
+                                   jnp.asarray([1, 0], np.int32))
+        _, paged = api.decode_slots(params, jnp.asarray(t), paged,
+                                    jnp.asarray([1, 0], np.int32),
+                                    block_tables=jnp.asarray(bt))
+    assert int(paged["lengths"][0]) == 18
+    # reassemble slot 0's logical K/V from its blocks and compare
+    for key in ("k", "v"):
+        pool = np.asarray(paged[key])  # (L, NB, H, BS, d)
+        view = np.concatenate([pool[:, b] for b in bt[0]], axis=2)
+        np.testing.assert_array_equal(view, np.asarray(cont[key])[:, 0])
+
+
+def test_paged_mla_arch_token_identical():
+    """MLA latent/rope paging plus unscanned first-dense-layer leaves
+    (deepseek-v2-lite) go through the same gather/scatter path."""
+    cfg = dataclasses.replace(get_config("deepseek-v2-lite-16b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    trace = [(rng.integers(0, cfg.vocab, p).tolist(), g)
+             for p, g in [(7, 4), (21, 5), (12, 3)]]
+    outs = {}
+    for layout in ("contiguous", "paged"):
+        eng = _engine(cfg, params, layout, bs=12, slots=2, max_len=48)
+        reqs = [eng.submit(p, g) for p, g in trace]
+        assert len(eng.run()) == len(trace)
+        outs[layout] = [r.generated for r in reqs]
+    assert outs["contiguous"] == outs["paged"]
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write + prefix reuse through the engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_prefix_hit_skips_prefill_and_cow_diverges(olmo):
+    """Warmed shared prompt: a suffix request attaches block-aligned (no
+    COW); a FULL-prompt request attaches everything, re-prefills one
+    capped token into a shared block, and must trigger exactly the COW
+    path — all token-identical to the sequential baseline, with the
+    original cached blocks still matchable afterwards."""
+    cfg, api, params = olmo
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, 32).tolist()  # 4 blocks of 8
+    eng = _engine(cfg, params, "paged", bs=8)
+    warm = eng.submit(shared, 2)
+    eng.run()
+    assert warm.prefix_hit_tokens == 0
+    base_shared = _baseline(api, params, shared, 4, 64)
+    assert warm.generated == base_shared[:2]
+
+    full = eng.submit(shared, 4)  # identical prompt
+    suffixed = eng.submit(shared + rng.integers(0, cfg.vocab, 5).tolist(), 4)
+    eng.run()
+    assert full.prefix_hit_tokens == 31  # capped one token early
+    assert suffixed.prefix_hit_tokens == 32  # whole shared prefix
+    assert eng.pool.cow_copies == 1  # only the capped re-prefill copies
+    assert full.generated == base_shared
+    assert suffixed.generated == _baseline(api, params, suffixed.prompt, 4, 64)
+    snap = eng.metrics.snapshot()
+    assert snap["prefix_hits"] == 2 and snap["prefix_hit_tokens"] == 63
+    assert snap["cow_copies"] == 1
+    assert snap["kv_layout"] == "paged"
+    assert snap["mean_block_utilization"] is not None
+    assert 0 <= snap["mean_block_fragmentation"] <= 1
+    # cache survived the COW: a third full-prompt request still hits
+    again = eng.submit(shared, 3)
+    eng.run()
+    assert again.prefix_hit_tokens == 31
+    assert again.generated == base_shared[:3]
+
+
+def test_engine_concurrent_sharers_decode_correctly(olmo):
+    """Two requests sharing a warmed prefix decode SIMULTANEOUSLY: their
+    batch rows gather the same physical blocks, write only their own
+    fresh blocks, and both match the baseline (the duplicate-scatter
+    safety argument, exercised)."""
+    cfg, api, params = olmo
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, cfg.vocab, 16).tolist()
+    eng = _engine(cfg, params, "paged", bs=8)
+    eng.submit(shared, 2)
+    eng.run()
+    sufs = [rng.integers(0, cfg.vocab, 3).tolist() for _ in range(2)]
+    rs = [eng.submit(shared + s, 6) for s in sufs]
+    eng.run()
+    assert all(r.prefix_hit_tokens == 16 for r in rs)
+    for r in rs:
+        assert r.generated == _baseline(api, params, r.prompt, 6, 64)
+
+
+def test_engine_no_capacity_stall_metric(olmo):
+    """A block pool too small for two concurrent residents: the second
+    request waits (stall counter, NOT a rejection) and completes once the
+    first releases its blocks."""
+    cfg, api, params = olmo
+    # 40+8 -> 6 blocks each; 8 usable blocks hold one resident at a time
+    eng = _engine(cfg, params, "paged", bs=8, blocks=8, prefix=False,
+                  slots=2)
+    rng = np.random.default_rng(5)
+    ra = eng.submit(rng.integers(0, cfg.vocab, 40).tolist(), 8)
+    rb = eng.submit(rng.integers(0, cfg.vocab, 40).tolist(), 8)
+    fin = eng.run()
+    assert {r.rid for r in fin} == {ra.rid, rb.rid}
+    snap = eng.metrics.snapshot()
+    assert snap["no_capacity_stalls"] > 0
+    assert snap["requests_rejected"] == 0
+    decode = jax.jit(api.decode_step)
+    for r in (ra, rb):
+        assert r.generated == _baseline(api, params, r.prompt, 8, 64, decode)
+
+
+def test_engine_rejects_request_larger_than_block_pool(olmo):
+    """A request whose worst-case block need exceeds the WHOLE pool can
+    never be placed; it must be REJECTED at submit (leaving it queued
+    would wedge the FIFO head in an eternal capacity stall and hang
+    run())."""
+    cfg, api, params = olmo
+    eng = _engine(cfg, params, "paged", bs=8, blocks=5, prefix=False,
+                  slots=2)
+    rng = np.random.default_rng(4)
+    # 40 + 8 = 6 blocks > 5 in the pool
+    r = eng.submit(rng.integers(0, cfg.vocab, 40).tolist(), 8)
+    assert r.state == RequestState.REJECTED
+    assert "KV blocks" in r.reject_reason
+    # a fitting request still serves normally
+    ok = eng.submit(rng.integers(0, cfg.vocab, 24).tolist(), 8)
+    assert len(eng.run()) == 1 and ok.finished
+    # the pool itself also refuses a direct oversized placement
+    with pytest.raises(ValueError):
+        eng.pool.acquire_for(_Req(99, list(range(1, 41)), 8))
+
+
+def test_eviction_skips_entries_still_referenced(olmo):
+    """_make_room under pressure must not drain the prefix cache: entries
+    whose blocks live requests hold free nothing when evicted, so they
+    are skipped and stay matchable."""
+    cfg, api, _ = olmo
+    ecfg = EngineConfig(slots=3, max_len=64, prefill_chunk=16,
+                        cache_dtype="float32", kv_layout="paged",
+                        kv_block_size=8, kv_blocks=10)
+    pool = PagedKVPool(api, ecfg)
+    # resident publishes 2 blocks and KEEPS them (still active)
+    resident = _Req(0, list(range(1, 17)), 8)  # 3 blocks
+    s0 = pool.acquire_for(resident)
+    pool.advance(np.asarray([16, 0, 0]))
+    pool.register_prefix(s0, 16, 16)
+    assert len(pool.prefix) == 2
+    # released request publishes 2 freeable blocks
+    other = _Req(1, [7] * 16, 8)  # 3 blocks
+    s1 = pool.acquire_for(other)
+    pool.advance(np.asarray([0, 16, 0]))
+    pool.register_prefix(s1, 16, 16)
+    pool.release(s1)
+    assert len(pool.prefix) == 4 and pool.allocator.n_used == 5
+    # 5 in use, 5 free; this needs 6 -> evicts ONLY the freeable entries
+    big = _Req(2, list(range(100, 140)), 8)
+    assert pool.acquire_for(big) is not None
+    assert pool.prefix_evictions == 1
+    # the resident's entries survived and still match
+    assert pool.prefix.match(resident.block_hashes) == \
+        pool._tables[s0].blocks[:2]
+
+
+def test_prefix_cache_eviction_under_pressure(olmo):
+    """When fresh allocation cannot be satisfied, cold prefix-cache
+    entries are evicted (counted) to make room — and the engine keeps
+    serving correctly."""
+    cfg, api, params = olmo
+    eng = _engine(cfg, params, "paged", bs=8, blocks=10, slots=2)
+    rng = np.random.default_rng(19)
+    # distinct prompts, each publishing 3 blocks, overflowing 10 blocks
+    prompts = [rng.integers(0, cfg.vocab, 24).tolist() for _ in range(4)]
+    for p in prompts:
+        r = eng.submit(p, 2)
+        eng.run()
+        assert r.finished
+    assert eng.pool.prefix_evictions > 0
+    assert eng.metrics.snapshot()["prefix_evictions"] > 0

@@ -30,6 +30,9 @@ class FakePool:
     def acquire(self, rid):
         return self._free.pop() if self._free else None
 
+    def acquire_for(self, req):
+        return self.acquire(req.rid)
+
     def release(self, slot):
         self._free.append(slot)
 

@@ -30,4 +30,13 @@ python -m repro.launch.serve --engine --requests 8 \
 echo "== mixed-load serve bench (decode stall p95, mixed on/off, 1 rep) =="
 python -m benchmarks.serve_bench --mixed-load-only --reps 1 --no-write
 
+echo "== paged KV smoke (block_size=8, shared-prefix pair, prefix hit asserted) =="
+python -m repro.launch.serve --engine --requests 6 \
+    --arch olmo-1b-reduced --mode perforated --m 2 \
+    --slots 4 --max-len 64 --chunk 16 \
+    --kv-layout paged --block-size 8 --shared-prefix-pair
+
+echo "== shared-prefix fleet bench (paged vs contiguous, 1 rep) =="
+python -m benchmarks.serve_bench --paged-only --reps 1 --no-write
+
 echo "CI smoke OK"
