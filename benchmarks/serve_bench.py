@@ -117,18 +117,20 @@ INJECT_PROMPT = 96  # 3 chunks of 32
 INJECT_GEN = 6
 
 
-def _run_mixed_load(cfg, eng, label: str) -> dict:
+def _run_mixed_load(cfg, eng, label: str,
+                    resident_gen: int = RESIDENT_GEN,
+                    inject_gen: int = INJECT_GEN) -> dict:
     import numpy as np
 
     rng = np.random.default_rng(5)
     eng.reset_metrics()
     residents = [eng.submit(rng.integers(1, cfg.vocab, 4).tolist(),
-                            RESIDENT_GEN) for _ in range(N_RESIDENTS)]
+                            resident_gen) for _ in range(N_RESIDENTS)]
     while not all(len(r.generated) >= 2 for r in residents):
         eng.step()
     for _ in range(N_INJECT):  # staggered arrivals mid-decode
         eng.submit(rng.integers(1, cfg.vocab, INJECT_PROMPT).tolist(),
-                   INJECT_GEN)
+                   inject_gen)
         for _ in range(4):
             eng.step()
     eng.run()
@@ -316,6 +318,115 @@ def run_shared_prefix(reps: int = REPEATS) -> list[dict]:
     return rows
 
 
+# -- telemetry overhead: the observability layer must be ~free ---------------
+#
+# The same mixed-load workload with span tracing + windowed metrics ON vs
+# OFF.  Tracing sits on the engine's hot step loop (span records per row,
+# window rolls per step), so its cost shows up directly in gen tok/s; the
+# acceptance bar is <= ~2% on this scenario.  The error probe is NOT part
+# of this budget — it is an opt-in diagnostic that re-runs rows eagerly
+# and is priced separately in docs/serving.md.
+
+#: short enough that the mixed-load run (a few hundred ms) rolls real
+#: window samples, so the roller's cost is actually inside the measurement
+TRACE_WINDOW_S = 0.05
+#: interleaved traced/untraced pass-pairs per rep — the pooled ratio
+#: integrates reps x TRACE_PASSES pairs (a null experiment with two
+#: identical engines shows single-pass deltas of +-5%, so the estimator
+#: must average ~30s+ of interleaved passes to resolve a 2% bar)
+TRACE_PASSES = 6
+#: longer generations than the stall scenario (still the same mixed-load
+#: shape): a single pass must be ~1s+ to resolve a ~2% throughput ratio
+#: on a noisy shared box.  4 + 120 and 96 + 24 both fit max_len=128.
+TRACE_RESIDENT_GEN = 120
+TRACE_INJECT_GEN = 24
+
+
+def run_telemetry_overhead(reps: int = REPEATS) -> list[dict]:
+    from repro.configs import get_config
+    from repro.launch.serve import ServeConfig, build_serving_params
+    from repro.models import build_model
+    from repro.numerics import get_preset
+
+    cfg = get_config(ARCH)
+    api = build_model(cfg)
+    spec = get_preset("serve-default")
+    params = build_serving_params(api.init(jax.random.PRNGKey(0)), cfg,
+                                  ServeConfig(spec=spec))
+    engines = [
+        ("traced", _make_engine(cfg, params, spec.name, trace=True,
+                                metrics_window_s=TRACE_WINDOW_S)),
+        ("untraced", _make_engine(cfg, params, spec.name)),
+    ]
+    def one_pass(label, eng):
+        return _run_mixed_load(cfg, eng, label,
+                               resident_gen=TRACE_RESIDENT_GEN,
+                               inject_gen=TRACE_INJECT_GEN)
+
+    # overhead is a RATIO of two noisy timings on a box whose throughput
+    # swings +-20% with co-tenant load (a null experiment with two
+    # identical engines shows single-pass pair deltas of +-5..10%), and
+    # the noise is ONE-SIDED — spikes only ever slow a pass down.  The
+    # robust estimator under one-sided noise is BEST-OF-N per mode: with
+    # enough interleaved passes, each mode's best pass converges to its
+    # quiet-window ceiling, and the deterministic instrumentation cost is
+    # exactly the gap between the two ceilings.  Pass order flips every
+    # pair (cancels first-position bias); one unrecorded warmup pair
+    # absorbs first-touch effects; the pooled rate (total tokens over
+    # total seconds) is kept as a secondary, drift-sensitive view.
+    for label, eng in engines:
+        one_pass(label, eng)  # warmup pair
+    best: dict[str, dict] = {}
+    gen = {label: 0.0 for label, _ in engines}
+    elapsed = {label: 0.0 for label, _ in engines}
+    for i in range(max(reps, 1) * TRACE_PASSES):
+        order = engines if i % 2 == 0 else engines[::-1]
+        for label, eng in order:
+            snap = one_pass(label, eng)
+            gen[label] += snap["generated_tokens"]
+            elapsed[label] += snap["elapsed_s"]
+            if (label not in best
+                    or snap["gen_tok_per_s"] > best[label]["gen_tok_per_s"]):
+                best[label] = snap
+    rate = {label: gen[label] / elapsed[label] for label, _ in engines}
+    traced_eng = engines[0][1]
+    overhead = round(
+        (best["untraced"]["gen_tok_per_s"] - best["traced"]["gen_tok_per_s"])
+        / best["untraced"]["gen_tok_per_s"] * 100, 2)
+    rows = []
+    for label, _ in engines:
+        snap = best[label]
+        rows.append({
+            "name": f"serve/telemetry/{label}",
+            "arch": ARCH,
+            "numerics": snap["numerics"],
+            "telemetry": label == "traced",
+            "scenario": ("mixed-load workload, span tracing + "
+                         f"{TRACE_WINDOW_S}s windowed metrics "
+                         + ("ON" if label == "traced" else "OFF")),
+            "slots": SLOTS,
+            "max_len": MAX_LEN,
+            "prefill_chunk": CHUNK,
+            # best pass = quiet-window ceiling, the number the overhead
+            # ratio is computed from; pooled is the drift-sensitive mean
+            "gen_tok_per_s": snap["gen_tok_per_s"],
+            "pooled_gen_tok_per_s": round(rate[label], 2),
+            "total_tok_per_s": snap["total_tok_per_s"],
+            "itl_p50_s": snap["itl_p50_s"],
+            "itl_p95_s": snap["itl_p95_s"],
+            **({"trace_spans": len(traced_eng.tracer),
+                "trace_dropped": traced_eng.tracer.dropped,
+                "timeseries_samples": snap["timeseries_samples"],
+                "overhead_pct_vs_untraced": overhead}
+               if label == "traced" else {}),
+        })
+    print(f"[serve_bench] telemetry overhead: {overhead}% gen tok/s "
+          f"(best traced {best['traced']['gen_tok_per_s']:.1f} vs untraced "
+          f"{best['untraced']['gen_tok_per_s']:.1f}; pooled "
+          f"{rate['traced']:.1f} vs {rate['untraced']:.1f})")
+    return rows
+
+
 def _run_throughput(reps: int = REPEATS) -> list[dict]:
     from repro.configs import get_config
     from repro.launch.serve import ServeConfig, build_serving_params
@@ -352,7 +463,8 @@ def _run_throughput(reps: int = REPEATS) -> list[dict]:
 
 
 def run(reps: int = REPEATS, mixed_load_only: bool = False,
-        paged_only: bool = False, write: bool = True) -> list[dict]:
+        paged_only: bool = False, telemetry_only: bool = False,
+        write: bool = True) -> list[dict]:
     """Full bench: throughput modes + mixed-load stall scenario +
     shared-prefix fleet, persisted to BENCH_serve.json.  This is the entry
     the benchmarks.run harness calls; ``mixed_load_only`` /``paged_only``
@@ -362,16 +474,19 @@ def run(reps: int = REPEATS, mixed_load_only: bool = False,
     Every scenario that runs is logged by name, and the returned row set
     is cross-checked against the scenario list — a scenario silently
     dropping out of the bench is a hard failure, not a smaller report."""
-    if mixed_load_only and paged_only:
-        raise SystemExit("pick one of --mixed-load-only / --paged-only")
-    subset = mixed_load_only or paged_only
+    if sum([mixed_load_only, paged_only, telemetry_only]) > 1:
+        raise SystemExit("pick one of --mixed-load-only / --paged-only / "
+                         "--telemetry-only")
+    subset = mixed_load_only or paged_only or telemetry_only
     scenarios = []
     if not subset:
         scenarios.append(("throughput", _run_throughput))
-    if not paged_only:
+    if mixed_load_only or not subset:
         scenarios.append(("mixed-load", run_mixed_load))
-    if not mixed_load_only:
+    if paged_only or not subset:
         scenarios.append(("shared-prefix", run_shared_prefix))
+    if telemetry_only or not subset:
+        scenarios.append(("telemetry-overhead", run_telemetry_overhead))
     rows = []
     for name, fn in scenarios:
         print(f"[serve_bench] running scenario: {name}")
@@ -405,11 +520,15 @@ def main(argv=None) -> list[dict]:
     ap.add_argument("--paged-only", action="store_true",
                     help="run only the shared-prefix fleet scenario, paged "
                          "vs contiguous (CI paged smoke)")
+    ap.add_argument("--telemetry-only", action="store_true",
+                    help="run only the telemetry-overhead scenario "
+                         "(tracing + windowed metrics on vs off)")
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
     args = ap.parse_args(argv)
     return run(reps=args.reps, mixed_load_only=args.mixed_load_only,
-               paged_only=args.paged_only, write=not args.no_write)
+               paged_only=args.paged_only, telemetry_only=args.telemetry_only,
+               write=not args.no_write)
 
 
 if __name__ == "__main__":

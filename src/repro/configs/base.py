@@ -49,6 +49,19 @@ class EngineConfig:
     #: content-hash prefix cache over full prompt blocks (paged layout):
     #: requests sharing a cached prefix skip its prefill entirely
     prefix_cache: bool = True
+    #: request-span tracing (repro.serving.telemetry): record typed span
+    #: events (queued/admitted/prefill_chunk/decode_step/...) into a
+    #: per-engine ring buffer, exportable as JSONL or Chrome trace JSON
+    trace: bool = False
+    trace_buffer: int = 65536  # span ring capacity; oldest events dropped
+    #: windowed time-series: every ``metrics_window_s`` seconds the
+    #: metrics emit one sample of rates/depths/utilization (0 disables)
+    metrics_window_s: float = 0.0
+    #: approximation-error probe: every N engine steps re-run one
+    #: scheduled batch row through the exact-int8 path and record
+    #: per-layer + logits error moments (repro.quant.error_probe);
+    #: 0 disables (the default — two extra eager forwards per probe)
+    error_probe_every: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,10 +17,12 @@ onto a different MAC array.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import control_variate as cv
 from repro.core import multipliers as am
@@ -69,6 +71,15 @@ class QuantizedDenseGroup:
     every fused output column — they are per-row, column-independent, so the
     fused outputs are bit-identical to the separate member calls.
     ``names``/``splits`` recover the member outputs by column range.
+
+    ``members`` carries the individually packed member layers for the
+    decode-shape fallback: at small flattened row counts (M <=
+    repro.kernels.ops.DECODE_M_MAX) the wide fused call measured SLOWER
+    than separate member calls (BENCH_kernels.json decode_m4/qkv_fused,
+    0.67x), so :func:`dense_group` gates the fusion on M.  Both
+    representations produce bit-identical outputs by construction; the
+    cost is carrying the member codes alongside the fused pack (~2x pack
+    memory on fused layers), the classic compute-for-memory serving trade.
     """
 
     pack: PackedLinear
@@ -78,11 +89,40 @@ class QuantizedDenseGroup:
     splits: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
     blocked: BlockedPack | None = None
     fold: dict | None = None
+    members: tuple[QuantizedDense, ...] | None = None
 
 
 def is_linear_params(p: Any) -> bool:
     """Float linear leaf: 2D weights, or 3D = (layers, k, n) scanned stack."""
     return isinstance(p, dict) and "w" in p and getattr(p["w"], "ndim", 0) in (2, 3)
+
+
+def _packed_forward(p: QuantizedDense | QuantizedDenseGroup,
+                    x: jax.Array) -> jax.Array:
+    """Forward dispatch for one packed leaf (or fused group's wide call)."""
+    pol = p.policy
+    if pol.backend == "pallas" and pol.is_approx and pol.groups == 1:
+        from repro.kernels import ops as kops
+
+        if not isinstance(p, QuantizedDenseGroup):
+            return kops.quantized_dense_pallas(x, p).astype(x.dtype)
+        if p.blocked is not None:
+            return kops.quantized_dense_fused_op(
+                x, p.blocked, mode=pol.mode, m=pol.m, use_cv=pol.use_cv)
+    if p.fold is not None:  # serving fast path: folded float GEMMs
+        return folded_linear(x, p.fold, pol.mode, pol.m,
+                             pol.use_cv).astype(x.dtype)
+    # grouped CV has no Pallas kernel yet: backend="pallas" with
+    # groups > 1 falls back to the jnp grouped path instead of crashing
+    return quantized_linear(
+        x,
+        p.pack,
+        p.a_qp,
+        pol.mode,
+        pol.m,
+        use_cv=pol.use_cv,
+        groups=pol.groups,
+    ).astype(x.dtype)
 
 
 def dense(p: Any, x: jax.Array, name: str | None = None) -> jax.Array:
@@ -91,29 +131,28 @@ def dense(p: Any, x: jax.Array, name: str | None = None) -> jax.Array:
     x: (..., k).  ``name`` (optional) scopes calibration recording so the
     recorded activation-range path matches the parameter-tree path used by
     :func:`pack_params`.
+
+    When a :class:`repro.quant.error_probe.ProbeRecorder` is active (eager
+    probe forwards only — tracers are ignored, so jitted serving steps pay
+    one thread-local ``None`` check at TRACE time and nothing at runtime),
+    packed layers additionally compute the exact-int8 reference on the
+    same codes: mode "observe" records the elementwise approx-vs-exact
+    delta moments, mode "exact" returns the reference instead.
     """
-    from repro.quant import observers
+    from repro.quant import error_probe, observers
 
     if isinstance(p, QuantizedDense):
-        pol = p.policy
-        if pol.backend == "pallas" and pol.is_approx and pol.groups == 1:
-            from repro.kernels import ops as kops
-
-            return kops.quantized_dense_pallas(x, p).astype(x.dtype)
-        if p.fold is not None:  # serving fast path: folded float GEMMs
-            return folded_linear(x, p.fold, pol.mode, pol.m,
-                                 pol.use_cv).astype(x.dtype)
-        # grouped CV has no Pallas kernel yet: backend="pallas" with
-        # groups > 1 falls back to the jnp grouped path instead of crashing
-        return quantized_linear(
-            x,
-            p.pack,
-            p.a_qp,
-            pol.mode,
-            pol.m,
-            use_cv=pol.use_cv,
-            groups=pol.groups,
-        ).astype(x.dtype)
+        probe = error_probe.active()
+        if probe is not None and not isinstance(x, jax.core.Tracer):
+            if probe.mode == "exact":
+                return error_probe.exact_dense(p, x).astype(x.dtype)
+            y = _packed_forward(p, x)
+            probe.observe(observers.current_path(), name or "dense",
+                          np.asarray(y, np.float64)
+                          - np.asarray(error_probe.exact_dense(p, x),
+                                       np.float64))
+            return y
+        return _packed_forward(p, x)
     # float path (+ calibration recording when a recorder is active)
     if name is not None:
         with observers.scope(name):
@@ -233,34 +272,70 @@ def pack_dense_group(
     leaves = [leaf for _, leaf in members]
     w0 = leaves[0]["w"]
     splits = tuple(int(leaf["w"].shape[-1]) for leaf in leaves)
-    pack = concat_packs([_pack_leaf(leaf, policy) for leaf in leaves])
+    member_packs = [_pack_leaf(leaf, policy) for leaf in leaves]
+    pack = concat_packs(member_packs)
     a_qp = _act_qp(act_range, w0)
+    # the individually packed members ride along for the decode-shape
+    # fallback (dense_group gates the wide fused call on M); per-column
+    # quant params make both representations bit-identical, so which one
+    # runs is purely a latency choice
+    member_qd = tuple(
+        QuantizedDense(pack=mp, a_qp=a_qp, policy=policy,
+                       blocked=_maybe_blocked(mp, a_qp, policy, w0.ndim),
+                       fold=_maybe_fold(mp, a_qp, policy) if fold else None)
+        for mp in member_packs)
     return QuantizedDenseGroup(
         pack=pack, a_qp=a_qp, policy=policy, names=names, splits=splits,
         blocked=_maybe_blocked(pack, a_qp, policy, w0.ndim),
-        fold=_maybe_fold(pack, a_qp, policy) if fold else None)
+        fold=_maybe_fold(pack, a_qp, policy) if fold else None,
+        members=member_qd)
+
+
+def _fuse_m_min() -> int:
+    """Smallest flattened row count that runs the wide fused group call.
+
+    BENCH_kernels.json measured the fused wide-N call SLOWER than separate
+    member calls at decode shapes (decode_m4/qkv_fused 0.67x): at thin M
+    the wide GEMM's fixed cost dominates and the shared-quantize win
+    vanishes.  The threshold is the kernel block picker's decode window —
+    below/at DECODE_M_MAX the decode-specialized tiles fire anyway, so the
+    same boundary splits the two regimes.
+    """
+    from repro.kernels import ops as kops
+
+    return kops.DECODE_M_MAX + 1
 
 
 def dense_group(g: QuantizedDenseGroup, x: jax.Array) -> dict[str, jax.Array]:
     """Run a fused fan-out group: one wide-N call, outputs split per member.
 
     Returns ``{name: (..., n_name)}`` in the group's member order.
-    """
-    pol = g.policy
-    if (pol.backend == "pallas" and pol.is_approx and pol.groups == 1
-            and g.blocked is not None):
-        from repro.kernels import ops as kops
 
-        y = kops.quantized_dense_fused_op(
-            x, g.blocked, mode=pol.mode, m=pol.m, use_cv=pol.use_cv)
-    elif g.fold is not None:  # serving fast path: folded float GEMMs
-        y = folded_linear(x, g.fold, pol.mode, pol.m,
-                          pol.use_cv).astype(x.dtype)
+    Decode-shape M-gate: when the flattened row count is inside the
+    kernel decode window (M < :func:`_fuse_m_min`) and the group carries
+    its packed ``members``, the members run as separate :func:`dense`
+    calls instead of the wide fused GEMM — bit-identical outputs, faster
+    thin-M latency.  The branch is on a STATIC shape, so each jitted
+    batch shape compiles exactly one of the two paths.
+    """
+    rows = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    if g.members is not None and rows < _fuse_m_min():
+        return {name: dense(member, x, name=name)
+                for name, member in zip(g.names, g.members)}
+    from repro.quant import error_probe, observers
+
+    probe = error_probe.active()
+    if probe is not None and not isinstance(x, jax.core.Tracer):
+        if probe.mode == "exact":
+            y = error_probe.exact_dense(g, x).astype(x.dtype)
+        else:
+            y = _packed_forward(g, x)
+            probe.observe(observers.current_path(), "|".join(g.names),
+                          np.asarray(y, np.float64)
+                          - np.asarray(error_probe.exact_dense(g, x),
+                                       np.float64))
     else:
-        y = quantized_linear(
-            x, g.pack, g.a_qp, pol.mode, pol.m,
-            use_cv=pol.use_cv, groups=pol.groups,
-        ).astype(x.dtype)
+        y = _packed_forward(g, x)
     out: dict[str, jax.Array] = {}
     off = 0
     for name, n in zip(g.names, g.splits):

@@ -202,7 +202,10 @@ def run_engine(args) -> dict:
                         kv_layout=args.kv_layout,
                         kv_block_size=args.block_size,
                         kv_blocks=args.kv_blocks,
-                        prefix_cache=not args.no_prefix_cache)
+                        prefix_cache=not args.no_prefix_cache,
+                        trace=bool(args.trace_out),
+                        metrics_window_s=args.metrics_window,
+                        error_probe_every=args.error_probe_every)
     eng = ServingEngine(cfg, params, ecfg, numerics=label)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
@@ -243,6 +246,10 @@ def run_engine(args) -> dict:
     print(f"finished {len(finished)}/{len(trace)} requests, "
           f"{eng.compile_count()} compiled shapes")
     print(json.dumps(snap, indent=2))
+    if args.trace_out:
+        eng.tracer.write(args.trace_out)
+        print(f"trace: {len(eng.tracer)} spans "
+              f"({eng.tracer.dropped} dropped) -> {args.trace_out}")
     for r in finished[:4]:
         print(f"  req {r.rid}: prompt {r.prompt_len:4d} -> gen "
               f"{len(r.generated):3d} [{r.finish_reason}] "
@@ -349,6 +356,19 @@ def main(argv=None) -> None:
     ap.add_argument("--shared-prefix-pair", action="store_true",
                     help="prepend a warmed shared-prefix request pair and "
                          "report/assert the prefix hit (CI paged smoke)")
+    # observability (repro.serving.telemetry / repro.quant.error_probe)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the request-span trace here: *.jsonl for "
+                         "JSONL, anything else for Chrome trace_event JSON "
+                         "(opens in Perfetto); enables tracing")
+    ap.add_argument("--metrics-window", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="windowed time-series sample interval "
+                         "(0 disables; samples ride the trace as counters)")
+    ap.add_argument("--error-probe-every", type=int, default=0, metavar="N",
+                    help="every N engine steps re-run one scheduled batch "
+                         "row through the exact-int8 path and record "
+                         "approx-vs-exact error moments (0 disables)")
     # legacy path knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

@@ -780,7 +780,8 @@ def _block_decode_slots(bp: dict, x, lc: dict, lengths, n_valid,
 
 def decode_slots(params: Params, tokens: jax.Array, cache: dict,
                  cfg: ArchConfig, n_valid: jax.Array,
-                 mesh=None, block_tables=None) -> tuple[jax.Array, dict]:
+                 mesh=None, block_tables=None,
+                 unroll_layers: bool = False) -> tuple[jax.Array, dict]:
     """Fixed-shape continuous-batching step.
 
     tokens: (slots, C) int32 — row b's first ``n_valid[b]`` entries are real
@@ -802,6 +803,13 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     slots <= repro.kernels.ops.DECODE_M_MAX) runs thin-M single-K-step
     launches while prefill chunks (C == prefill_chunk) keep prefill tiles —
     both from the same jitted step, one compiled shape each.
+
+    ``unroll_layers`` replaces the layer ``lax.scan`` with a python loop
+    (per-layer ``observers.scope``d) — ``lax.scan`` traces its body even
+    when run eagerly, so concrete per-layer values only exist unrolled.
+    The approximation-error probe (:mod:`repro.quant.error_probe`) runs
+    its eager single-row forwards this way; the jitted serving step never
+    sets it (the scan keeps HLO size O(1) in depth).
     """
     reason = _slot_unsupported(cfg)
     if reason is not None:
@@ -819,20 +827,35 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     dense_keys = ("latent", "rope") if cfg.attn == "mla" else ("k", "v")
     for i, bp in enumerate(params.get("dense_blocks", [])):
         lc = {k: cache[f"dense_{k}"][i] for k in dense_keys}
-        x, new = _block_decode_slots(bp, x, lc, lengths, n_valid, cfg,
-                                     positions, mesh, block_tables)
+        with observers.scope("dense_blocks", i):
+            x, new = _block_decode_slots(bp, x, lc, lengths, n_valid, cfg,
+                                         positions, mesh, block_tables)
         for k in dense_keys:
             new_cache[f"dense_{k}"] = new_cache[f"dense_{k}"].at[i].set(new[k])
 
     layer_keys = [k for k in ("latent", "rope", "k", "v") if k in cache]
     lcs = {k: cache[k] for k in layer_keys}
 
-    def body(x, inp):
-        bp, lc = inp
-        return _block_decode_slots(bp, x, lc, lengths, n_valid, cfg, positions,
-                                   mesh, block_tables)
+    if unroll_layers:
+        n_layers = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        acc: dict[str, list] = {k: [] for k in layer_keys}
+        for i in range(n_layers):
+            bp = jax.tree.map(lambda a: a[i], params["blocks"])
+            lc = {k: lcs[k][i] for k in layer_keys}
+            with observers.scope("blocks", i):
+                x, new = _block_decode_slots(bp, x, lc, lengths, n_valid,
+                                             cfg, positions, mesh,
+                                             block_tables)
+            for k in layer_keys:
+                acc[k].append(new[k])
+        new_layers = {k: jnp.stack(acc[k]) for k in layer_keys}
+    else:
+        def body(x, inp):
+            bp, lc = inp
+            return _block_decode_slots(bp, x, lc, lengths, n_valid, cfg,
+                                       positions, mesh, block_tables)
 
-    x, new_layers = jax.lax.scan(body, x, (params["blocks"], lcs))
+        x, new_layers = jax.lax.scan(body, x, (params["blocks"], lcs))
     new_cache.update(new_layers)
     new_cache["lengths"] = lengths + n_valid
 

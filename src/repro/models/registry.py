@@ -114,8 +114,12 @@ def build_model(cfg: ArchConfig) -> ModelApi:
             cfg, batch, max_len, dtype),
         init_slot_cache=lambda slots, max_len, dtype=jnp.bfloat16:
             m.init_slot_cache(cfg, slots, max_len, dtype),
-        decode_slots=lambda p, t, c, n_valid, mesh=None, block_tables=None:
-            m.decode_slots(p, t, c, cfg, n_valid, mesh, block_tables),
+        # unroll_layers: eager python-loop layer stack for the error probe
+        # (repro.quant.error_probe); jitted serving keeps the lax.scan
+        decode_slots=lambda p, t, c, n_valid, mesh=None, block_tables=None,
+            unroll_layers=False:
+            m.decode_slots(p, t, c, cfg, n_valid, mesh, block_tables,
+                           unroll_layers),
         init_paged_cache=lambda num_blocks, block_size, slots,
             dtype=jnp.bfloat16:
             m.init_paged_slot_cache(cfg, num_blocks, block_size, slots, dtype),

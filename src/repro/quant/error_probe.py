@@ -1,0 +1,186 @@
+"""Online approximation-error probe: approximate-vs-exact output deltas.
+
+The paper's headline claim is a *bounded* accuracy cost: the perforated
+multiplier plus the control-variate correction keeps the output error
+small.  This module makes that quantity observable in a RUNNING engine
+instead of an offline eval: every N steps the engine re-runs one
+already-scheduled batch row through the model twice —
+
+  1. the normal approximate path, with a thread-local recorder active
+     that, at every packed dense layer, also computes the **exact-int8
+     reference on the same quantized codes**
+     (:func:`repro.quant.quantize.quantized_linear` with ``mode="exact"``)
+     and accumulates elementwise error moments of ``y_approx - y_exact``
+     per layer path;
+  2. the exact-override path, where every packed dense *returns* the
+     exact reference, so the final logits are the exact-int8 logits.
+
+The deltas isolate APPROXIMATION error from quantization error (both
+passes share the uint8 codes and quant params), which is exactly the CV
+residual of Zervakis et al.: under ``exact`` numerics the per-layer error
+variance is ~0 (float-ulp disagreement between the folded fast path and
+the integer reference), under ``perforated`` without CV it is strictly
+larger than with CV.
+
+Mechanics:
+
+  * The hooks live in :func:`repro.core.approx_linear.dense` /
+    ``dense_group`` and are a thread-local ``None`` check that ignores
+    tracers — so the jitted serving step records nothing and pays nothing.
+  * Probe forwards run EAGERLY with ``unroll_layers=True``
+    (:func:`repro.models.lm.decode_slots`): ``lax.scan`` traces its body
+    even outside jit, so the scanned layer stack must be unrolled into a
+    python loop for the recorder to see concrete values.
+  * The probed row is sliced out of the batch (contiguous layout: slot
+    axis of every cache leaf; paged: the row's lengths + block-table row
+    against the whole pool), so the probe re-runs ONE row, not the batch.
+  * Cost: two eager single-row forwards per probe (amortized by
+    ``error_probe_every``); the serving path itself is untouched.
+
+Results aggregate into :class:`~repro.serving.metrics.EngineMetrics`
+(``record_probe``) and a ``probe`` span event per run.
+"""
+
+from __future__ import annotations
+
+import inspect
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.quantize import quantized_linear
+
+_STATE = threading.local()
+
+
+def active():
+    """The thread-local :class:`ProbeRecorder`, or None (the common case —
+    this is the only check on the serving hot path)."""
+    return getattr(_STATE, "probe", None)
+
+
+def exact_dense(p, x: jax.Array) -> jax.Array:
+    """Exact-int8 reference output for a packed layer (or fused group):
+    the same quantized codes through the exact multiplier, no CV."""
+    return quantized_linear(x, p.pack, p.a_qp, "exact", 0, use_cv=False)
+
+
+class ProbeRecorder:
+    """Thread-local probe context for ONE eager forward.
+
+    mode ``"observe"``: packed dense layers run normally; each also
+    computes the exact reference and accumulates elementwise moments of
+    the delta under its layer path.  mode ``"exact"``: packed dense
+    layers RETURN the exact reference (the forward produces exact-int8
+    logits).  Nested recorders are a bug, not a feature.
+    """
+
+    def __init__(self, mode: str) -> None:
+        if mode not in ("observe", "exact"):
+            raise ValueError(f"probe mode must be observe|exact, got {mode!r}")
+        self.mode = mode
+        #: layer path -> (n, mean, var) over elementwise deltas
+        self.layers: dict[str, tuple[int, float, float]] = {}
+
+    def observe(self, path: str, name: str, delta) -> None:
+        d = np.asarray(delta, np.float64).ravel()
+        if d.size == 0:
+            return
+        key = f"{path}/{name}" if path else name
+        from repro.serving.metrics import _merge_moments
+
+        self.layers[key] = _merge_moments(
+            self.layers.get(key, (0, 0.0, 0.0)),
+            (int(d.size), float(d.mean()), float(d.var())))
+
+    def __enter__(self) -> "ProbeRecorder":
+        if active() is not None:
+            raise RuntimeError("nested ProbeRecorder")
+        _STATE.probe = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _STATE.probe = None
+
+
+def _slice_contiguous(cache: dict, row: int) -> dict:
+    """One slot's view of a contiguous slot cache: ``lengths`` is (slots,),
+    every other leaf carries the slot axis at position 1 (leading axis is
+    the stacked layer axis)."""
+    return {k: (v[row:row + 1] if k == "lengths" else v[:, row:row + 1])
+            for k, v in cache.items()}
+
+
+def _slice_paged(cache: dict, row: int) -> dict:
+    """Paged layout: block-pool leaves are SHARED across slots (the sliced
+    block-table row selects the probe slot's blocks); only ``lengths`` is
+    per-slot."""
+    return {k: (v[row:row + 1] if k == "lengths" else v)
+            for k, v in cache.items()}
+
+
+class ErrorProbe:
+    """Engine-side driver: slice one scheduled row, run the two probe
+    forwards, return ``{layers, logits, row}`` moment report."""
+
+    def __init__(self, decode_slots, mesh=None, paged: bool = False) -> None:
+        if not self.supports(decode_slots):
+            raise ValueError(
+                "error probe requires a decode_slots that accepts "
+                "unroll_layers (the scanned layer stack must unroll for "
+                "the recorder to see concrete per-layer values); this "
+                "model's serving step does not")
+        self._decode = decode_slots
+        self._mesh = mesh
+        self._paged = paged
+
+    @staticmethod
+    def supports(decode_slots) -> bool:
+        try:
+            return "unroll_layers" in inspect.signature(
+                decode_slots).parameters
+        except (TypeError, ValueError):
+            return False
+
+    def run(self, params, tokens, n_valid, cache, block_tables=None,
+            row: int | None = None) -> dict | None:
+        """Probe one row of a scheduled batch against its PRE-STEP cache.
+
+        ``tokens``/``n_valid`` are the batch arrays, ``cache`` the cache
+        the jitted step consumed (JAX arrays are immutable, so holding the
+        pre-update reference is free).  Returns None when no row is
+        active.
+        """
+        nv = np.asarray(n_valid)
+        if row is None:
+            live = np.nonzero(nv > 0)[0]
+            if live.size == 0:
+                return None
+            row = int(live[0])
+        elif nv[row] <= 0:
+            return None
+        toks = jnp.asarray(np.asarray(tokens)[row:row + 1])
+        nv_row = jnp.asarray(nv[row:row + 1])
+        sliced = (_slice_paged if self._paged else _slice_contiguous)(
+            cache, row)
+        kw = {"mesh": self._mesh, "unroll_layers": True}
+        if block_tables is not None:
+            kw["block_tables"] = jnp.asarray(
+                np.asarray(block_tables)[row:row + 1])
+        with ProbeRecorder("observe") as rec:
+            logits_a, _ = self._decode(params, toks, sliced, nv_row, **kw)
+        with ProbeRecorder("exact"):
+            logits_e, _ = self._decode(params, toks, sliced, nv_row, **kw)
+        col = int(nv[row]) - 1
+        d = (np.asarray(logits_a, np.float64)[0, col]
+             - np.asarray(logits_e, np.float64)[0, col])
+        return {
+            "row": row,
+            "layers": {path: {"n": n, "mean": mean, "var": var}
+                       for path, (n, mean, var) in rec.layers.items()},
+            "logits": {"n": int(d.size), "mean": float(d.mean()),
+                       "var": float(d.var()),
+                       "max_abs": float(np.abs(d).max())},
+        }

@@ -71,8 +71,12 @@ from repro.serving.paged import (BlockAllocator, BlockTable, PagedKVPool,
 from repro.serving.request import (AdmissionController, Request, RequestQueue,
                                    RequestState)
 from repro.serving.scheduler import ScheduledBatch, SlotScheduler
+from repro.serving.telemetry import SPAN_KINDS, SpanEvent, SpanTracer
 
 __all__ = [
+    "SPAN_KINDS",
+    "SpanEvent",
+    "SpanTracer",
     "ServingEngine",
     "SlotPool",
     "BlockAllocator",

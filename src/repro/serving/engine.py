@@ -25,6 +25,7 @@ contract tested by tests/test_serving_engine.py.
 from __future__ import annotations
 
 import itertools
+import time
 from typing import Callable
 
 import jax
@@ -38,6 +39,7 @@ from repro.serving.metrics import EngineMetrics
 from repro.serving.request import (AdmissionController, Request, RequestQueue,
                                    RequestState)
 from repro.serving.scheduler import ScheduledBatch, SlotScheduler
+from repro.serving.telemetry import SpanTracer
 
 
 def _has_blocked_packs(params) -> bool:
@@ -108,7 +110,23 @@ class ServingEngine:
             numerics=numerics,
             kv_layout=ecfg.kv_layout,
             decode_specialized=(ecfg.slots <= DECODE_M_MAX
-                                and _has_blocked_packs(params)))
+                                and _has_blocked_packs(params)),
+            window_s=ecfg.metrics_window_s)
+        # request-span tracing: a bounded per-engine ring of typed events,
+        # recorded at points the engine already touches each request
+        self.tracer = (SpanTracer(capacity=ecfg.trace_buffer,
+                                  engine=numerics or "engine")
+                       if ecfg.trace else None)
+        self._bridge_window_samples()
+        # approximation-error probe: every N steps, one scheduled row is
+        # re-run eagerly through the exact-int8 path (repro.quant.error_probe)
+        self._probe = None
+        self._steps = 0
+        if ecfg.error_probe_every > 0:
+            from repro.quant.error_probe import ErrorProbe
+
+            self._probe = ErrorProbe(self.api.decode_slots, mesh=mesh,
+                                     paged=self._paged)
         self.active: dict[int, Request] = {}
         self._rid = itertools.count()
         decode_slots = self.api.decode_slots
@@ -123,6 +141,18 @@ class ServingEngine:
         else:
             self._step_fn = jax.jit(
                 lambda p, t, c, nv: decode_slots(p, t, c, nv, mesh=mesh))
+
+    def _bridge_window_samples(self) -> None:
+        """Forward windowed metrics samples into the span trace as Chrome
+        counter events (Perfetto renders them as time-series tracks)."""
+        if self.tracer is not None and self.metrics.window_s > 0:
+            # the sample's own "t" (wall-clock window stamp) must not shadow
+            # record()'s monotonic t parameter — keep it as arg "window_t"
+            self.metrics.on_window_sample = (
+                lambda s: self.tracer.record(
+                    "metrics_window",
+                    **{("window_t" if k == "t" else k): v
+                       for k, v in s.items()}))
 
     # -- submission ----------------------------------------------------------
 
@@ -139,11 +169,14 @@ class ServingEngine:
                       max_new_tokens=int(max_new_tokens), priority=priority,
                       eos_id=eos_id, on_token=on_token)
         self.metrics.submitted += 1
+        tr = self.tracer
         ok, reason, evicted = self.admission.admit(self.queue, req)
         if not ok:
             req.state = RequestState.REJECTED
             req.reject_reason = reason
             self.metrics.rejected += 1
+            if tr is not None:
+                tr.record("rejected", rid=req.rid, reason=reason)
             return req
         if evicted is not None:
             # queue was full of strictly lower-priority work: the worst
@@ -153,7 +186,12 @@ class ServingEngine:
                                      f"higher-priority request {req.rid}")
             self.metrics.rejected += 1
             self.metrics.evicted += 1
+            if tr is not None:
+                tr.record("evicted", rid=evicted.rid, by=req.rid)
         self.queue.push(req)
+        if tr is not None:
+            tr.record("queued", rid=req.rid, t=req.t_queued_mono,
+                      prompt_len=req.prompt_len, priority=req.priority)
         return req
 
     # -- engine loop ---------------------------------------------------------
@@ -164,12 +202,16 @@ class ServingEngine:
 
     def step(self) -> list[Request]:
         """One engine iteration; returns requests that finished in it."""
+        tr = self.tracer
         admitted = self.scheduler.admit(self.queue, self.pool, self.active,
-                                        self.metrics)
+                                        self.metrics, tracer=tr)
         for r in admitted:
             if r.prefix_hit_tokens:
                 self.metrics.prefix_hits += 1
                 self.metrics.prefix_hit_tokens += r.prefix_hit_tokens
+                if tr is not None:
+                    tr.record("prefix_hit", rid=r.rid,
+                              hit_tokens=r.prefix_hit_tokens)
         batch = self.scheduler.next_batch(self.active)
         if batch is None:
             return []
@@ -177,29 +219,70 @@ class ServingEngine:
         # construction and the first served batch stays excluded, but the
         # first measured step's own wall time is inside the window
         self.metrics.start_clock()
+        t0 = time.perf_counter() if tr is not None else 0.0
+        tables = None
         if self._paged:
             # copy-on-write barrier: every block this batch writes must be
             # uniquely owned before the jitted step sees the tables
+            cow0 = self.pool.cow_copies if tr is not None else 0
             for slot, nv in enumerate(batch.n_valid):
                 self.pool.ensure_writable(slot, int(nv))
             self.pool.flush_copies()
+            if tr is not None and self.pool.cow_copies > cow0:
+                tr.record("cow_copy", copies=self.pool.cow_copies - cow0)
+            tables = self.pool.block_tables_array()
+            cache_before = self.pool.cache
             logits, new_cache = self._step_fn(
-                self.params, jnp.asarray(batch.tokens), self.pool.cache,
-                jnp.asarray(batch.n_valid),
-                jnp.asarray(self.pool.block_tables_array()))
+                self.params, jnp.asarray(batch.tokens), cache_before,
+                jnp.asarray(batch.n_valid), jnp.asarray(tables))
         else:
+            cache_before = self.pool.cache
             logits, new_cache = self._step_fn(
-                self.params, jnp.asarray(batch.tokens), self.pool.cache,
+                self.params, jnp.asarray(batch.tokens), cache_before,
                 jnp.asarray(batch.n_valid))
         self.pool.update(new_cache)
         if self._paged:
             self.pool.advance(batch.n_valid)
         finished, emitted, prompt_toks = self._postprocess(batch, logits)
+        if tr is not None:
+            t1 = time.perf_counter()
+            for r, kind in zip(batch.rows, batch.row_kinds):
+                tr.record("prefill_chunk" if kind == "prefill"
+                          else "decode_step", rid=r.rid, t=t0, dur=t1 - t0,
+                          slot=r.slot, n_valid=int(batch.n_valid[r.slot]))
+            for r in finished:
+                tr.record("finished", rid=r.rid, reason=r.finish_reason,
+                          generated=len(r.generated))
         self.metrics.record_step(
             batch.kind, self.pool.occupancy, len(self.queue),
             prompt_tokens=prompt_toks, generated_tokens=emitted,
             block_stats=self._windowed_block_stats() if self._paged else None)
+        self._steps += 1
+        if (self._probe is not None
+                and self._steps % self.ecfg.error_probe_every == 0):
+            self._run_probe(batch, cache_before, tables)
         return finished
+
+    def _run_probe(self, batch: ScheduledBatch, cache_before,
+                   tables) -> None:
+        """One approximation-error probe against the batch the engine just
+        served: the pre-step cache reference reproduces the row's forward
+        (JAX arrays are immutable, so holding it is free)."""
+        report = self._probe.run(self.params, batch.tokens, batch.n_valid,
+                                 cache_before, block_tables=tables)
+        if report is None:
+            return
+        rid = next((r.rid for r in batch.rows if r.slot == report["row"]),
+                   None)
+        self.metrics.record_probe(report)
+        if self.tracer is not None:
+            lvars = [st["var"] for st in report["layers"].values()]
+            self.tracer.record(
+                "probe", rid=rid,
+                logits_err_var=report["logits"]["var"],
+                logits_err_max_abs=report["logits"]["max_abs"],
+                mean_layer_err_var=(sum(lvars) / len(lvars)
+                                    if lvars else 0.0))
 
     def _windowed_block_stats(self) -> dict:
         """Pool block stats with the cumulative counters rebased to the
@@ -235,7 +318,9 @@ class ServingEngine:
         self.metrics = EngineMetrics(
             numerics=self.numerics,
             kv_layout=self.ecfg.kv_layout,
-            decode_specialized=self.metrics.decode_specialized)
+            decode_specialized=self.metrics.decode_specialized,
+            window_s=self.ecfg.metrics_window_s)
+        self._bridge_window_samples()
         if self._paged:
             self.pool.reset_peak_blocks()
             self._block_baseline = self.pool.block_stats()
@@ -309,8 +394,6 @@ class ServingEngine:
         return False
 
     def _finish(self, r: Request) -> Request:
-        import time
-
         r.state = RequestState.FINISHED
         r.t_finish = time.time()
         self.pool.release(r.slot)

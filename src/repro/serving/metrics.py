@@ -13,6 +13,27 @@ tokens, COW copies, prefix evictions, and ``no_capacity_stalls`` —
 iterations where queued work waited on pool capacity, which queue-full
 rejection counts used to hide.
 
+Three observability surfaces beyond the end-of-run aggregate:
+
+  * **Bounded latency samples.**  Per-request ttft/itl/latency samples go
+    through reservoir sampling (:class:`Reservoir`, cap 4096): counts,
+    sums, and maxima stay exact forever, percentiles come from a uniform
+    sample, and host memory stops growing with trace length.  The
+    snapshot surfaces ``*_samples`` (total observed) and
+    ``*_samples_capped`` (observed minus retained).
+  * **Windowed time-series.**  With ``window_s > 0`` every
+    ``record_step`` rolls an interval accumulator; once a window elapses
+    a sample dict (window gen tok/s, mean queue depth/occupancy, stall
+    and step deltas, block util/frag) is appended to ``timeseries`` (a
+    bounded ring) and handed to ``on_window_sample`` (the engine bridges
+    it into the span tracer as Chrome counter events).
+  * **Fleet merge.**  :meth:`EngineMetrics.merge` combines snapshot
+    dicts across engines using sufficient statistics — counters sum,
+    rates recompute as (summed tokens / max elapsed), means weight by
+    their carried sample counts, error-probe moments combine with Chan's
+    parallel variance formula — so ``merge`` is associative and a merged
+    snapshot can itself be merged again (the fleet-metrics primitive).
+
 The throughput clock starts lazily at the FIRST served batch (the engine
 arms it just before dispatching; ``record_step`` arms it as a fallback),
 not at construction: engines compile and warm up between being built and
@@ -23,16 +44,109 @@ instance) therefore re-arms the lazy clock too.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
+import random
 import time
+from typing import Callable
+
+#: default reservoir capacity for per-request latency samples
+RESERVOIR_CAP = 4096
+#: windowed time-series ring capacity (samples); oldest dropped
+TIMESERIES_CAP = 4096
 
 
-def _percentile(xs: list[float], q: float) -> float:
+def _percentile(xs, q: float) -> float:
+    """Linear-interpolation percentile (numpy's default method).
+
+    Nearest-rank rounding misreports tail percentiles on small samples —
+    e.g. p95 of 10 samples rounds to the 9th order statistic, identical
+    to p89 — so interpolate between the two bracketing order statistics
+    instead.
+    """
+    xs = list(xs)
     if not xs:
         return 0.0
     ys = sorted(xs)
-    i = min(len(ys) - 1, max(0, int(round(q * (len(ys) - 1)))))
-    return ys[i]
+    pos = q * (len(ys) - 1)
+    lo = min(int(math.floor(pos)), len(ys) - 1)
+    hi = min(lo + 1, len(ys) - 1)
+    frac = pos - lo
+    return ys[lo] + (ys[hi] - ys[lo]) * frac
+
+
+class Reservoir:
+    """Bounded uniform sample of a stream with exact n/sum/max.
+
+    Algorithm R with a deterministic per-instance RNG (reproducible
+    snapshots).  Means and maxima are computed from exact running
+    aggregates — only percentiles read the (uniform) reservoir — so
+    capping never biases the headline numbers.
+    """
+
+    __slots__ = ("cap", "n", "total", "_max", "samples", "_rng")
+
+    def __init__(self, cap: int = RESERVOIR_CAP, seed: int = 0x5EED) -> None:
+        if cap < 1:
+            raise ValueError(f"reservoir cap must be >= 1, got {cap}")
+        self.cap = cap
+        self.n = 0  # total observed (exact)
+        self.total = 0.0  # running sum (exact)
+        self._max = float("-inf")
+        self.samples: list[float] = []
+        self._rng = random.Random(seed)
+
+    def push(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        self.total += x
+        if x > self._max:
+            self._max = x
+        if len(self.samples) < self.cap:
+            self.samples.append(x)
+        else:
+            j = self._rng.randrange(self.n)
+            if j < self.cap:
+                self.samples[j] = x
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __bool__(self) -> bool:
+        return self.n > 0
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    @property
+    def max(self) -> float:
+        return self._max if self.n else 0.0
+
+    @property
+    def capped(self) -> int:
+        """Observations not retained in the reservoir."""
+        return self.n - len(self.samples)
+
+    def percentile(self, q: float) -> float:
+        return _percentile(self.samples, q)
+
+
+def _merge_moments(a: tuple[int, float, float],
+                   b: tuple[int, float, float]) -> tuple[int, float, float]:
+    """Chan's parallel combine of (n, mean, variance) aggregates."""
+    na, ma, va = a
+    nb, mb, vb = b
+    if na == 0:
+        return b
+    if nb == 0:
+        return a
+    n = na + nb
+    d = mb - ma
+    mean = ma + d * nb / n
+    m2 = va * na + vb * nb + d * d * na * nb / n
+    return n, mean, m2 / n
 
 
 @dataclasses.dataclass
@@ -51,6 +165,13 @@ class EngineMetrics:
 
     #: KV memory model the engine serves under ("contiguous" | "paged")
     kv_layout: str = "contiguous"
+
+    #: windowed time-series interval in seconds (0 disables the roller)
+    window_s: float = 0.0
+    #: called with each emitted window sample (the engine bridges samples
+    #: into the span tracer); excluded from repr/compare
+    on_window_sample: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     prompt_tokens: int = 0
     generated_tokens: int = 0
@@ -75,10 +196,10 @@ class EngineMetrics:
     prefix_hits: int = 0
     prefix_hit_tokens: int = 0
 
-    ttfts: list[float] = dataclasses.field(default_factory=list)
+    ttfts: Reservoir = dataclasses.field(default_factory=Reservoir)
     #: per-request gaps between consecutive generated tokens (seconds)
-    itls: list[float] = dataclasses.field(default_factory=list)
-    latencies: list[float] = dataclasses.field(default_factory=list)
+    itls: Reservoir = dataclasses.field(default_factory=Reservoir)
+    latencies: Reservoir = dataclasses.field(default_factory=Reservoir)
 
     _occupancy_sum: float = 0.0
     _queue_depth_sum: float = 0.0
@@ -92,6 +213,20 @@ class EngineMetrics:
     _block_frag_sum: float = 0.0
     _block_samples: int = 0
     _last_block_stats: dict | None = None
+
+    # windowed time-series state (window_s > 0)
+    timeseries: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=TIMESERIES_CAP))
+    timeseries_dropped: int = 0
+    _win_t0: float | None = None
+    _win_base: dict | None = None
+
+    # approximation-error probe aggregation (repro.quant.error_probe):
+    # per-layer and logits-level (n, mean, var) of approximate-vs-exact
+    # output deltas, combined across probe runs with Chan's formula
+    probe_runs: int = 0
+    _probe_layers: dict = dataclasses.field(default_factory=dict)
+    _probe_logits: tuple = (0, 0.0, 0.0)
 
     # -- recording -----------------------------------------------------------
 
@@ -123,21 +258,113 @@ class EngineMetrics:
             self._block_frag_sum += block_stats["block_frag"]
             self._block_samples += 1
             self._last_block_stats = block_stats
+        if self.window_s > 0:
+            self._maybe_roll()
 
     def record_first_token(self, req) -> None:
         if req.ttft is not None:
-            self.ttfts.append(req.ttft)
+            self.ttfts.push(req.ttft)
 
     def record_itl(self, gap: float | None) -> None:
         """One inter-token gap (``Request.emit``'s return; None = first
         token of a request, which has no gap)."""
         if gap is not None:
-            self.itls.append(gap)
+            self.itls.push(gap)
 
     def record_finish(self, req) -> None:
         self.finished += 1
         if req.t_finish is not None:
-            self.latencies.append(req.t_finish - req.t_submit)
+            self.latencies.push(req.t_finish - req.t_submit)
+
+    # -- windowed time-series ------------------------------------------------
+
+    def _window_counters(self) -> dict:
+        return {"generated_tokens": self.generated_tokens,
+                "prompt_tokens": self.prompt_tokens,
+                "no_capacity_stalls": self.no_capacity_stalls,
+                "prefill_steps": self.prefill_steps,
+                "decode_steps": self.decode_steps,
+                "mixed_steps": self.mixed_steps,
+                "_occupancy_sum": self._occupancy_sum,
+                "_queue_depth_sum": self._queue_depth_sum,
+                "_samples": self._samples,
+                "_block_util_sum": self._block_util_sum,
+                "_block_frag_sum": self._block_frag_sum,
+                "_block_samples": self._block_samples}
+
+    def _maybe_roll(self) -> None:
+        now = time.time()
+        if self._win_t0 is None:
+            self._win_t0 = now
+            self._win_base = self._window_counters()
+            return
+        dur = now - self._win_t0
+        if dur < self.window_s:
+            return
+        cur, base = self._window_counters(), self._win_base
+        d = {k: cur[k] - base[k] for k in cur}
+        steps = d["_samples"]
+        sample = {
+            "t": round(now - (self.t_start or now), 4),
+            "dur_s": round(dur, 4),
+            "gen_tok_per_s": round(d["generated_tokens"] / dur, 2),
+            "prompt_tok_per_s": round(d["prompt_tokens"] / dur, 2),
+            "steps": steps,
+            "prefill_steps": d["prefill_steps"],
+            "decode_steps": d["decode_steps"],
+            "mixed_steps": d["mixed_steps"],
+            "no_capacity_stalls": d["no_capacity_stalls"],
+            "mean_queue_depth": round(d["_queue_depth_sum"] / steps, 2)
+            if steps else 0.0,
+            "mean_slot_occupancy": round(d["_occupancy_sum"] / steps, 3)
+            if steps else 0.0,
+        }
+        if d["_block_samples"]:
+            sample["mean_block_utilization"] = round(
+                d["_block_util_sum"] / d["_block_samples"], 3)
+            sample["mean_block_fragmentation"] = round(
+                d["_block_frag_sum"] / d["_block_samples"], 3)
+        if len(self.timeseries) == self.timeseries.maxlen:
+            self.timeseries_dropped += 1
+        self.timeseries.append(sample)
+        self._win_t0 = now
+        self._win_base = cur
+        if self.on_window_sample is not None:
+            self.on_window_sample(sample)
+
+    # -- approximation-error probe -------------------------------------------
+
+    def record_probe(self, report: dict) -> None:
+        """Fold one :class:`~repro.quant.error_probe.ErrorProbe` report
+        (per-layer + logits ``{n, mean, var}`` of approx-vs-exact output
+        deltas) into the running per-layer moments."""
+        self.probe_runs += 1
+        for path, st in report.get("layers", {}).items():
+            prev = self._probe_layers.get(path, (0, 0.0, 0.0))
+            self._probe_layers[path] = _merge_moments(
+                prev, (st["n"], st["mean"], st["var"]))
+        lg = report.get("logits")
+        if lg is not None:
+            self._probe_logits = _merge_moments(
+                self._probe_logits, (lg["n"], lg["mean"], lg["var"]))
+
+    def _probe_snapshot(self) -> dict | None:
+        if not self.probe_runs and not self._probe_layers:
+            return None
+        layers = {path: {"n": n, "err_mean": mean, "err_var": var}
+                  for path, (n, mean, var) in sorted(self._probe_layers.items())}
+        lvars = [st["err_var"] for st in layers.values()]
+        ln, lmean, lvar = self._probe_logits
+        return {
+            "runs": self.probe_runs,
+            "numerics": self.numerics,
+            "logits_err_n": ln,
+            "logits_err_mean": lmean,
+            "logits_err_var": lvar,
+            "mean_layer_err_var": sum(lvars) / len(lvars) if lvars else None,
+            "max_layer_err_var": max(lvars) if lvars else None,
+            "layers": layers,
+        }
 
     # -- derived -------------------------------------------------------------
 
@@ -147,6 +374,7 @@ class EngineMetrics:
         total_tok = self.prompt_tokens + self.generated_tokens
         blk = self._last_block_stats or {}
         return {
+            "engines": 1,
             "numerics": self.numerics,
             "decode_specialized": self.decode_specialized,
             "kv_layout": self.kv_layout,
@@ -163,6 +391,7 @@ class EngineMetrics:
             "mean_block_fragmentation": round(
                 self._block_frag_sum / self._block_samples, 3)
             if self._block_samples else None,
+            "block_step_samples": self._block_samples,
             "peak_blocks_in_use": blk.get("peak_blocks_in_use"),
             "blocks_total": blk.get("blocks_total"),
             "prefix_cache_entries": blk.get("prefix_cache_entries"),
@@ -177,20 +406,133 @@ class EngineMetrics:
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
             "mixed_steps": self.mixed_steps,
-            "ttft_mean_s": round(sum(self.ttfts) / len(self.ttfts), 4)
+            "step_samples": self._samples,
+            "ttft_mean_s": round(self.ttfts.mean, 4) if self.ttfts else None,
+            "ttft_p50_s": round(self.ttfts.percentile(0.5), 4)
             if self.ttfts else None,
-            "ttft_p50_s": round(_percentile(self.ttfts, 0.5), 4)
-            if self.ttfts else None,
-            "ttft_max_s": round(max(self.ttfts), 4) if self.ttfts else None,
-            "itl_p50_s": round(_percentile(self.itls, 0.5), 4)
+            "ttft_max_s": round(self.ttfts.max, 4) if self.ttfts else None,
+            "ttft_samples": len(self.ttfts),
+            "ttft_samples_capped": self.ttfts.capped,
+            "itl_p50_s": round(self.itls.percentile(0.5), 4)
             if self.itls else None,
-            "itl_p95_s": round(_percentile(self.itls, 0.95), 4)
+            "itl_p95_s": round(self.itls.percentile(0.95), 4)
             if self.itls else None,
-            "itl_max_s": round(max(self.itls), 4) if self.itls else None,
-            "latency_mean_s": round(sum(self.latencies) / len(self.latencies), 4)
+            "itl_max_s": round(self.itls.max, 4) if self.itls else None,
+            "itl_samples": len(self.itls),
+            "itl_samples_capped": self.itls.capped,
+            "latency_mean_s": round(self.latencies.mean, 4)
             if self.latencies else None,
+            "latency_samples": len(self.latencies),
+            "latency_samples_capped": self.latencies.capped,
             "mean_slot_occupancy": round(self._occupancy_sum / self._samples, 3)
             if self._samples else 0.0,
             "mean_queue_depth": round(self._queue_depth_sum / self._samples, 2)
             if self._samples else 0.0,
+            "metrics_window_s": self.window_s if self.window_s > 0 else None,
+            "timeseries_samples": len(self.timeseries),
+            "timeseries_dropped": self.timeseries_dropped,
+            "error_probe": self._probe_snapshot(),
         }
+
+    # -- fleet merge ---------------------------------------------------------
+
+    _SUM_KEYS = (
+        "engines", "requests_finished", "requests_rejected",
+        "requests_evicted", "no_capacity_stalls", "prefix_hits",
+        "prefix_hit_tokens", "prompt_tokens", "generated_tokens",
+        "prefill_steps", "decode_steps", "mixed_steps", "step_samples",
+        "block_step_samples", "ttft_samples", "ttft_samples_capped",
+        "itl_samples", "itl_samples_capped", "latency_samples",
+        "latency_samples_capped", "timeseries_samples", "timeseries_dropped",
+        "peak_blocks_in_use", "blocks_total", "prefix_cache_entries",
+        "cow_copies", "prefix_evictions",
+    )
+    _MAX_KEYS = ("elapsed_s", "ttft_max_s", "itl_max_s")
+    #: value key -> its weight key (count-weighted means; percentiles are
+    #: APPROXIMATED by the same weighting — exact fleet percentiles would
+    #: need the raw reservoirs, which snapshots deliberately do not carry)
+    _WEIGHTED_KEYS = (
+        ("ttft_mean_s", "ttft_samples"),
+        ("ttft_p50_s", "ttft_samples"),
+        ("itl_p50_s", "itl_samples"),
+        ("itl_p95_s", "itl_samples"),
+        ("latency_mean_s", "latency_samples"),
+        ("mean_slot_occupancy", "step_samples"),
+        ("mean_queue_depth", "step_samples"),
+        ("mean_block_utilization", "block_step_samples"),
+        ("mean_block_fragmentation", "block_step_samples"),
+    )
+    _EQUAL_OR_MIXED = ("numerics", "kv_layout")
+
+    @staticmethod
+    def merge(snaps: list[dict]) -> dict:
+        """Combine snapshot dicts across engines (associative).
+
+        Counters sum; throughput recomputes as summed tokens over the
+        MAX elapsed window (engines run concurrently — summing rates
+        would double-count shared wall time only when windows coincide,
+        and max is the conservative fleet denominator either way); means
+        weight by their carried sample counts; error-probe moments merge
+        with Chan's parallel formula.  A merged dict is itself a valid
+        ``merge`` input, so pairwise and flat merges agree (up to float
+        association)."""
+        snaps = list(snaps)
+        if not snaps:
+            return {}
+        out: dict = {}
+        for k in EngineMetrics._SUM_KEYS:
+            vals = [s.get(k) for s in snaps if s.get(k) is not None]
+            out[k] = sum(vals) if vals else None
+        for k in EngineMetrics._MAX_KEYS:
+            vals = [s.get(k) for s in snaps if s.get(k) is not None]
+            out[k] = max(vals) if vals else None
+        for k, wk in EngineMetrics._WEIGHTED_KEYS:
+            num = den = 0.0
+            for s in snaps:
+                v, w = s.get(k), s.get(wk)
+                if v is not None and w:
+                    num += v * w
+                    den += w
+            out[k] = num / den if den else None
+        for k in EngineMetrics._EQUAL_OR_MIXED:
+            vals = {s.get(k) for s in snaps}
+            out[k] = vals.pop() if len(vals) == 1 else "mixed"
+        for k in ("decode_specialized", "metrics_window_s"):
+            vals = {s.get(k) for s in snaps}
+            out[k] = vals.pop() if len(vals) == 1 else None
+        elapsed = out.get("elapsed_s") or 0.0
+        gen = out.get("generated_tokens") or 0
+        total = gen + (out.get("prompt_tokens") or 0)
+        out["gen_tok_per_s"] = round(gen / elapsed, 2) if elapsed else 0.0
+        out["total_tok_per_s"] = round(total / elapsed, 2) if elapsed else 0.0
+        # error-probe moments: dict-union layers, Chan-merge shared paths
+        probes = [s["error_probe"] for s in snaps if s.get("error_probe")]
+        if probes:
+            layers: dict = {}
+            logits = (0, 0.0, 0.0)
+            for p in probes:
+                for path, st in p.get("layers", {}).items():
+                    layers[path] = _merge_moments(
+                        layers.get(path, (0, 0.0, 0.0)),
+                        (st["n"], st["err_mean"], st["err_var"]))
+                logits = _merge_moments(
+                    logits, (p["logits_err_n"], p["logits_err_mean"],
+                             p["logits_err_var"]))
+            lvars = [v for _, _, v in layers.values()]
+            pnum = {s["error_probe"].get("numerics") for s in snaps
+                    if s.get("error_probe")}
+            out["error_probe"] = {
+                "runs": sum(p["runs"] for p in probes),
+                "numerics": pnum.pop() if len(pnum) == 1 else "mixed",
+                "logits_err_n": logits[0],
+                "logits_err_mean": logits[1],
+                "logits_err_var": logits[2],
+                "mean_layer_err_var": (sum(lvars) / len(lvars)
+                                       if lvars else None),
+                "max_layer_err_var": max(lvars) if lvars else None,
+                "layers": {path: {"n": n, "err_mean": m, "err_var": v}
+                           for path, (n, m, v) in sorted(layers.items())},
+            }
+        else:
+            out["error_probe"] = None
+        return out

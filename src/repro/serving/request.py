@@ -60,6 +60,10 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
 
     t_submit: float = dataclasses.field(default_factory=time.time)
+    #: monotonic (perf_counter) submission stamp for span tracing — queue
+    #: waits and step durations must not jump with wall-clock adjustments
+    t_queued_mono: float = dataclasses.field(
+        default_factory=time.perf_counter, repr=False)
     t_first_token: float | None = None
     t_last_token: float | None = None
     t_finish: float | None = None

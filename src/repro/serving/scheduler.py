@@ -61,7 +61,8 @@ class SlotScheduler:
     # -- admission -----------------------------------------------------------
 
     def admit(self, queue: RequestQueue, pool: SlotPool,
-              active: dict[int, Request], metrics=None) -> list[Request]:
+              active: dict[int, Request], metrics=None,
+              tracer=None) -> list[Request]:
         """Move queued requests into free slots (priority, then FIFO).
 
         Placement can fail on CAPACITY, not just on slots: the paged pool
@@ -75,7 +76,13 @@ class SlotScheduler:
         and the slot cursor pre-advanced; the request enters chunked
         prefill with that much of its prompt already marked done (at least
         one token always remains, to produce its first-token logits).
+
+        ``tracer`` (a :class:`repro.serving.telemetry.SpanTracer`) gets an
+        ``admitted`` span per placement (with the request's queue wait) and
+        a ``capacity_stall`` span per stalled iteration.
         """
+        import time
+
         admitted = []
         stalled = False
         while len(queue):
@@ -93,8 +100,19 @@ class SlotScheduler:
             req.state = RequestState.PREFILL
             active[slot] = req
             admitted.append(req)
-        if stalled and metrics is not None:
-            metrics.no_capacity_stalls += 1
+            if tracer is not None:
+                tracer.record(
+                    "admitted", rid=req.rid, slot=slot,
+                    queue_wait_s=round(
+                        time.perf_counter() - req.t_queued_mono, 6))
+        if stalled:
+            if metrics is not None:
+                metrics.no_capacity_stalls += 1
+            if tracer is not None:
+                head = queue.peek()
+                tracer.record("capacity_stall",
+                              rid=head.rid if head else None,
+                              queued=len(queue))
         return admitted
 
     # -- batch construction --------------------------------------------------

@@ -39,4 +39,15 @@ python -m repro.launch.serve --engine --requests 6 \
 echo "== shared-prefix fleet bench (paged vs contiguous, 1 rep) =="
 python -m benchmarks.serve_bench --paged-only --reps 1 --no-write
 
+echo "== traced serve smoke (span trace + windowed metrics + error probe) =="
+TRACE_OUT="$(mktemp -t repro_trace_XXXX.json)"
+trap 'rm -f "$TRACE_OUT"' EXIT
+python -m repro.launch.serve --engine --requests 8 \
+    --arch olmo-1b-reduced --mode perforated --m 2 \
+    --slots 4 --max-len 64 --chunk 16 \
+    --trace-out "$TRACE_OUT" --metrics-window 0.2 --error-probe-every 2
+
+echo "== trace report (>=1 span per lifecycle stage asserted) =="
+python tools/trace_report.py "$TRACE_OUT" --assert-lifecycle
+
 echo "CI smoke OK"

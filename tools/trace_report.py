@@ -1,0 +1,237 @@
+#!/usr/bin/env python
+"""Summarize a serving span trace (JSONL or Chrome trace_event JSON).
+
+    python tools/trace_report.py /tmp/trace.json
+    python tools/trace_report.py /tmp/trace.jsonl --json
+    python tools/trace_report.py /tmp/trace.json --assert-lifecycle
+
+Reads either export format of ``repro.serving.telemetry.SpanTracer`` and
+prints:
+
+  * per-request timelines — queue wait, prefill chunks, decode steps,
+    end-to-end span, finish reason;
+  * stall attribution — the largest inter-decode-step gaps per request,
+    attributed to prefill interference (another request's chunk ran in
+    the gap), capacity stalls, or scheduler idle time;
+  * probe error trend — the approximation-error probe's logits/layer
+    error variance over time (first vs last, min/max);
+  * windowed counters — min/median/max of the windowed gen tok/s series.
+
+``--assert-lifecycle`` exits non-zero unless the trace holds at least one
+span of every request-lifecycle stage (queued, admitted, prefill_chunk,
+decode_step, finished) — the CI smoke's trace-integrity gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+
+LIFECYCLE = ("queued", "admitted", "prefill_chunk", "decode_step", "finished")
+
+
+def load_events(path: str) -> list[dict]:
+    """Normalize either export format to
+    ``{kind, rid, t (s), dur (s), data}`` sorted by time."""
+    with open(path) as f:
+        text = f.read()
+    events: list[dict] = []
+    try:
+        doc = json.loads(text)  # Chrome trace is one JSON document
+    except json.JSONDecodeError:
+        doc = None  # JSONL: one object per line
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        for e in doc["traceEvents"]:
+            if e.get("ph") == "M":  # metadata (process/thread names)
+                continue
+            data = dict(e.get("args") or {})
+            rid = data.pop("rid", None)
+            events.append({"kind": e["name"], "rid": rid,
+                           "t": e.get("ts", 0.0) / 1e6,
+                           "dur": e.get("dur", 0.0) / 1e6, "data": data})
+    else:
+        for line in text.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            data = {k: v for k, v in d.items()
+                    if k not in ("engine", "kind", "rid", "t", "dur")}
+            events.append({"kind": d["kind"], "rid": d.get("rid"),
+                           "t": d["t"], "dur": d.get("dur", 0.0),
+                           "data": data})
+    events.sort(key=lambda e: e["t"])
+    return events
+
+
+def _request_timelines(events: list[dict]) -> dict:
+    reqs: dict[int, dict] = {}
+    for e in events:
+        rid = e["rid"]
+        if rid is None:
+            continue
+        r = reqs.setdefault(rid, {
+            "queued_t": None, "queue_wait_s": None, "prefill_chunks": 0,
+            "decode_steps": 0, "prefill_s": 0.0, "decode_s": 0.0,
+            "prefix_hit_tokens": 0, "finish_reason": None, "generated": None,
+            "t_first": e["t"], "t_last": e["t"] + e["dur"]})
+        r["t_first"] = min(r["t_first"], e["t"])
+        r["t_last"] = max(r["t_last"], e["t"] + e["dur"])
+        k = e["kind"]
+        if k == "queued":
+            r["queued_t"] = e["t"]
+        elif k == "admitted":
+            r["queue_wait_s"] = e["data"].get("queue_wait_s")
+        elif k == "prefill_chunk":
+            r["prefill_chunks"] += 1
+            r["prefill_s"] += e["dur"]
+        elif k == "decode_step":
+            r["decode_steps"] += 1
+            r["decode_s"] += e["dur"]
+        elif k == "prefix_hit":
+            r["prefix_hit_tokens"] = e["data"].get("hit_tokens", 0)
+        elif k == "finished":
+            r["finish_reason"] = e["data"].get("reason")
+            r["generated"] = e["data"].get("generated")
+        elif k in ("rejected", "evicted"):
+            r["finish_reason"] = k
+    for r in reqs.values():
+        r["span_s"] = round(r["t_last"] - r["t_first"], 6)
+        del r["t_first"], r["t_last"]
+    return reqs
+
+
+def _stall_attribution(events: list[dict], top: int = 5) -> list[dict]:
+    """Largest gaps between a request's consecutive decode steps, with a
+    cause guess: prefill interference (another rid's chunk ran inside the
+    gap), a recorded capacity stall, or scheduler idle."""
+    per_rid: dict[int, list[dict]] = collections.defaultdict(list)
+    for e in events:
+        if e["kind"] == "decode_step":
+            per_rid[e["rid"]].append(e)
+    gaps = []
+    for rid, evs in per_rid.items():
+        for a, b in zip(evs, evs[1:]):
+            gap = b["t"] - (a["t"] + a["dur"])
+            if gap <= 0:
+                continue
+            t0, t1 = a["t"] + a["dur"], b["t"]
+            interference = sum(
+                1 for e in events
+                if e["kind"] == "prefill_chunk" and e["rid"] != rid
+                and e["t"] < t1 and e["t"] + e["dur"] > t0)
+            stalls = sum(1 for e in events
+                         if e["kind"] == "capacity_stall"
+                         and t0 <= e["t"] <= t1)
+            cause = ("prefill_interference" if interference
+                     else "capacity_stall" if stalls else "scheduler_idle")
+            gaps.append({"rid": rid, "gap_s": round(gap, 6),
+                         "t": round(t0, 6), "cause": cause,
+                         "interfering_chunks": interference})
+    gaps.sort(key=lambda g: -g["gap_s"])
+    return gaps[:top]
+
+
+def _probe_trend(events: list[dict]) -> dict | None:
+    probes = [e for e in events if e["kind"] == "probe"]
+    if not probes:
+        return None
+    series = [{"t": round(e["t"], 4),
+               "logits_err_var": e["data"].get("logits_err_var"),
+               "mean_layer_err_var": e["data"].get("mean_layer_err_var")}
+              for e in probes]
+    lv = [s["logits_err_var"] for s in series
+          if s["logits_err_var"] is not None]
+    return {"runs": len(series), "first": series[0], "last": series[-1],
+            "logits_err_var_min": min(lv) if lv else None,
+            "logits_err_var_max": max(lv) if lv else None}
+
+
+def _window_summary(events: list[dict]) -> dict | None:
+    xs = sorted(e["data"]["gen_tok_per_s"] for e in events
+                if e["kind"] == "metrics_window"
+                and "gen_tok_per_s" in e["data"])
+    if not xs:
+        return None
+    return {"samples": len(xs), "gen_tok_per_s_min": xs[0],
+            "gen_tok_per_s_p50": xs[len(xs) // 2],
+            "gen_tok_per_s_max": xs[-1]}
+
+
+def report(events: list[dict]) -> dict:
+    kinds = collections.Counter(e["kind"] for e in events)
+    return {"events": len(events), "kinds": dict(sorted(kinds.items())),
+            "requests": _request_timelines(events),
+            "top_decode_gaps": _stall_attribution(events),
+            "probe": _probe_trend(events),
+            "windows": _window_summary(events)}
+
+
+def _print_human(rep: dict) -> None:
+    print(f"{rep['events']} events: "
+          + ", ".join(f"{k}={v}" for k, v in rep["kinds"].items()))
+    print("\nper-request timelines:")
+    for rid, r in sorted(rep["requests"].items()):
+        wait = (f"{r['queue_wait_s']*1e3:8.2f}ms"
+                if r["queue_wait_s"] is not None else "       ?")
+        print(f"  req {rid:4d}  wait {wait}  "
+              f"prefill {r['prefill_chunks']:3d} chunks "
+              f"({r['prefill_s']*1e3:8.2f}ms)  "
+              f"decode {r['decode_steps']:3d} steps "
+              f"({r['decode_s']*1e3:8.2f}ms)  "
+              f"span {r['span_s']*1e3:8.2f}ms  "
+              f"[{r['finish_reason'] or 'running'}]"
+              + (f"  prefix_hit={r['prefix_hit_tokens']}"
+                 if r["prefix_hit_tokens"] else ""))
+    if rep["top_decode_gaps"]:
+        print("\nlargest inter-decode gaps:")
+        for g in rep["top_decode_gaps"]:
+            print(f"  req {g['rid']:4d}  {g['gap_s']*1e3:8.2f}ms at "
+                  f"t={g['t']:.3f}s  cause={g['cause']}"
+                  + (f" ({g['interfering_chunks']} chunks)"
+                     if g["interfering_chunks"] else ""))
+    if rep["probe"]:
+        p = rep["probe"]
+        print(f"\nerror probe: {p['runs']} runs, logits_err_var "
+              f"{p['first']['logits_err_var']:.3e} (first) -> "
+              f"{p['last']['logits_err_var']:.3e} (last), "
+              f"range [{p['logits_err_var_min']:.3e}, "
+              f"{p['logits_err_var_max']:.3e}]")
+    if rep["windows"]:
+        w = rep["windows"]
+        print(f"\nwindowed gen tok/s: {w['samples']} samples, "
+              f"min {w['gen_tok_per_s_min']} / p50 {w['gen_tok_per_s_p50']} "
+              f"/ max {w['gen_tok_per_s_max']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize a serving span trace (JSONL or Chrome JSON)")
+    ap.add_argument("trace", help="trace file written by --trace-out")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON")
+    ap.add_argument("--assert-lifecycle", action="store_true",
+                    help="fail unless >= 1 span of every lifecycle stage "
+                         f"{list(LIFECYCLE)} is present")
+    args = ap.parse_args(argv)
+    events = load_events(args.trace)
+    rep = report(events)
+    if args.json:
+        print(json.dumps(rep, indent=2))
+    else:
+        _print_human(rep)
+    if args.assert_lifecycle:
+        missing = [k for k in LIFECYCLE if not rep["kinds"].get(k)]
+        if missing:
+            print(f"\nFAIL: lifecycle stages missing from trace: {missing}",
+                  file=sys.stderr)
+            return 2
+        print("\nlifecycle OK: "
+              + ", ".join(f"{k}={rep['kinds'][k]}" for k in LIFECYCLE))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
