@@ -10,7 +10,11 @@ shrink (alternating stall ~ chunk + decode call; mixed ~ one shared chunk
 call).  A third SHARED-PREFIX FLEET scenario serves N requests over one
 long warmed system prompt, paged vs contiguous KV layout, and reports
 TTFT, gen tok/s, prefix-hit tokens, and peak KV bytes — the prefix-cache
-payoff the paged subsystem exists for.  Results are also written to
+payoff the paged subsystem exists for.  A SPECULATIVE scenario serves a
+decode-heavy trace twice — plain exact-int8 decode vs self-verifying
+speculative decode (perforated-m2-cv drafts, exact-int8 verify) — asserts
+the outputs token-identical, and records the measured draft acceptance
+rate alongside gen tok/s.  Results are also written to
 BENCH_serve.json at the repo root so later PRs have a perf trajectory to
 beat.
 
@@ -427,6 +431,113 @@ def run_telemetry_overhead(reps: int = REPEATS) -> list[dict]:
     return rows
 
 
+# -- speculative decode: approximate drafts, exact verify --------------------
+#
+# A decode-heavy trace (short prompts, long generations) served twice:
+# plain exact-int8 decode, and self-verifying speculative decode with
+# perforated-m2-cv drafts over the same int8 verifier.  Outputs must be
+# token-identical (the subsystem's contract — asserted here, not just in
+# tests); the rows record the measured acceptance rate and gen tok/s for
+# both.  Honesty note: on this CPU emulation a chunk-shaped verify call
+# costs roughly as much as a thin decode step, so speculation is NOT
+# expected to win wall-clock here — the rows exist to track acceptance and
+# the speculative-vs-plain trajectory that pays off where a k+1-token
+# verify costs ~one step (real accelerators).
+
+SPEC_K = 4
+SPEC_PROMPT = 8  # short prompts, long generations: the speculative regime
+SPEC_GEN = 48
+N_SPEC_REQUESTS = 8
+
+
+def run_speculative(reps: int = REPEATS) -> list[dict]:
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import EngineConfig
+    from repro.launch.serve import ServeConfig, build_serving_params
+    from repro.models import build_model
+    from repro.numerics import get_preset
+    from repro.serving import ServingEngine
+
+    cfg = get_config(ARCH)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    verify_spec = get_preset("int8")
+    draft_spec = get_preset("serve-default")
+    # the one-checkpoint pair: the SAME float init packed twice
+    verify = build_serving_params(params, cfg, ServeConfig(spec=verify_spec))
+    draft = build_serving_params(params, cfg, ServeConfig(spec=draft_spec))
+
+    ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                        cache_dtype="bfloat16", speculative_k=SPEC_K)
+    spec_eng = ServingEngine(cfg, verify, ecfg, numerics=verify_spec.name,
+                             draft_params=draft,
+                             draft_numerics=draft_spec.name)
+    spec_eng.submit(list(range(1, 9)), 2)  # warm both compiled shapes
+    spec_eng.run()
+    engines = [
+        (f"speculative-k{SPEC_K}", spec_eng),
+        ("plain-int8", _make_engine(cfg, verify, verify_spec.name)),
+    ]
+
+    rng = np.random.default_rng(11)
+    trace = [(rng.integers(1, cfg.vocab, SPEC_PROMPT).tolist(), SPEC_GEN)
+             for _ in range(N_SPEC_REQUESTS)]
+    snaps: dict[str, list[dict]] = {label: [] for label, _ in engines}
+    outs: dict[str, list[list[int]]] = {}
+    for rep in range(max(reps, 1)):
+        for label, eng in engines:
+            print(f"[serve_bench] scenario=speculative mode={label} "
+                  f"rep={rep + 1}/{max(reps, 1)}")
+            eng.reset_metrics()
+            reqs = [eng.submit(p, g) for p, g in trace]
+            eng.run()
+            snap = eng.metrics.snapshot()
+            assert all(r.finished for r in reqs), label
+            assert eng.compile_count() <= 2, eng.compile_count()
+            snaps[label].append(snap)
+            toks = [r.generated for r in reqs]
+            outs.setdefault(label, toks)
+            assert outs[label] == toks, f"{label}: nondeterministic repeat"
+    # the subsystem's contract: speculative output == plain exact output
+    assert outs[f"speculative-k{SPEC_K}"] == outs["plain-int8"], \
+        "speculative/plain token divergence"
+    acc = snaps[f"speculative-k{SPEC_K}"][0]["acceptance_rate"]
+    assert acc is not None and acc > 0, acc
+    rows = []
+    for label, _ in engines:
+        agg = dict(snaps[label][0])
+        for k in ("gen_tok_per_s", "total_tok_per_s"):
+            agg[k] = round(statistics.median(s[k] for s in snaps[label]), 2)
+        rows.append({
+            "name": f"serve/speculative/{label}",
+            "arch": ARCH,
+            "numerics": agg["numerics"],
+            "speculative_k": agg.get("speculative_k"),
+            "draft_numerics": agg.get("draft_numerics"),
+            "scenario": (f"{N_SPEC_REQUESTS} decode-heavy requests "
+                         f"({SPEC_PROMPT}-tok prompts, {SPEC_GEN} gen); "
+                         "token-identical to plain exact decode (asserted)"),
+            "slots": SLOTS,
+            "max_len": MAX_LEN,
+            "prefill_chunk": CHUNK,
+            "gen_tok_per_s": agg["gen_tok_per_s"],
+            "total_tok_per_s": agg["total_tok_per_s"],
+            "itl_p50_s": agg["itl_p50_s"],
+            "spec_rounds": agg["spec_rounds"],
+            "draft_calls": agg["draft_calls"],
+            "drafted_tokens": agg["drafted_tokens"],
+            "accepted_draft_tokens": agg["accepted_draft_tokens"],
+            "acceptance_rate": agg["acceptance_rate"],
+        })
+    print(f"[serve_bench] speculative: acceptance_rate={acc} "
+          f"(drafted={snaps[f'speculative-k{SPEC_K}'][0]['drafted_tokens']}, "
+          f"accepted="
+          f"{snaps[f'speculative-k{SPEC_K}'][0]['accepted_draft_tokens']})")
+    return rows
+
+
 def _run_throughput(reps: int = REPEATS) -> list[dict]:
     from repro.configs import get_config
     from repro.launch.serve import ServeConfig, build_serving_params
@@ -464,20 +575,23 @@ def _run_throughput(reps: int = REPEATS) -> list[dict]:
 
 def run(reps: int = REPEATS, mixed_load_only: bool = False,
         paged_only: bool = False, telemetry_only: bool = False,
-        write: bool = True) -> list[dict]:
+        speculative_only: bool = False, write: bool = True) -> list[dict]:
     """Full bench: throughput modes + mixed-load stall scenario +
-    shared-prefix fleet, persisted to BENCH_serve.json.  This is the entry
-    the benchmarks.run harness calls; ``mixed_load_only`` /``paged_only``
-    are the CI-smoke subsets (which never rewrite the persisted trajectory
-    — they would drop the other scenarios' rows).
+    shared-prefix fleet + speculative decode, persisted to
+    BENCH_serve.json.  This is the entry the benchmarks.run harness calls;
+    ``mixed_load_only``/``paged_only``/``telemetry_only``/
+    ``speculative_only`` are the CI-smoke subsets (which never rewrite the
+    persisted trajectory — they would drop the other scenarios' rows).
 
     Every scenario that runs is logged by name, and the returned row set
     is cross-checked against the scenario list — a scenario silently
     dropping out of the bench is a hard failure, not a smaller report."""
-    if sum([mixed_load_only, paged_only, telemetry_only]) > 1:
+    if sum([mixed_load_only, paged_only, telemetry_only,
+            speculative_only]) > 1:
         raise SystemExit("pick one of --mixed-load-only / --paged-only / "
-                         "--telemetry-only")
-    subset = mixed_load_only or paged_only or telemetry_only
+                         "--telemetry-only / --speculative-only")
+    subset = (mixed_load_only or paged_only or telemetry_only
+              or speculative_only)
     scenarios = []
     if not subset:
         scenarios.append(("throughput", _run_throughput))
@@ -487,6 +601,8 @@ def run(reps: int = REPEATS, mixed_load_only: bool = False,
         scenarios.append(("shared-prefix", run_shared_prefix))
     if telemetry_only or not subset:
         scenarios.append(("telemetry-overhead", run_telemetry_overhead))
+    if speculative_only or not subset:
+        scenarios.append(("speculative", run_speculative))
     rows = []
     for name, fn in scenarios:
         print(f"[serve_bench] running scenario: {name}")
@@ -523,11 +639,16 @@ def main(argv=None) -> list[dict]:
     ap.add_argument("--telemetry-only", action="store_true",
                     help="run only the telemetry-overhead scenario "
                          "(tracing + windowed metrics on vs off)")
+    ap.add_argument("--speculative-only", action="store_true",
+                    help="run only the speculative-decode scenario "
+                         "(approximate drafts vs plain exact decode; "
+                         "CI speculative smoke)")
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
     args = ap.parse_args(argv)
     return run(reps=args.reps, mixed_load_only=args.mixed_load_only,
                paged_only=args.paged_only, telemetry_only=args.telemetry_only,
+               speculative_only=args.speculative_only,
                write=not args.no_write)
 
 

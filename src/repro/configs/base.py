@@ -62,6 +62,14 @@ class EngineConfig:
     #: per-layer + logits error moments (repro.quant.error_probe);
     #: 0 disables (the default — two extra eager forwards per probe)
     error_probe_every: int = 0
+    #: self-verifying speculative decode (repro.serving.speculative):
+    #: each decoding slot drafts up to k greedy tokens through the
+    #: APPROXIMATE draft parameters on the thin (slots, 1) step, then one
+    #: chunk-shaped EXACT call verifies all of them at once; the longest
+    #: agreeing prefix plus the verifier's correction token is emitted,
+    #: so outputs stay bit-identical to plain exact decode.  0 disables.
+    #: Requires ``ServingEngine(..., draft_params=...)``.
+    speculative_k: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -22,11 +22,25 @@ model with a mixed-length request trace:
 ``--shared-prefix-pair`` prepends a warmed shared-prefix request pair that
 asserts the prefix-cache hit (the CI paged smoke).
 
+``--speculative-k K`` turns on self-verifying speculative decode
+(repro.serving.speculative): the SAME float init is packed twice — the
+numerics flags (or ``--draft-spec``, a preset name or spec-JSON path)
+describe the APPROXIMATE draft parameters, the verifier is always exact
+int8 — and the engine emits bit-identical exact output while the cheap
+path proposes.  ``--assert-acceptance`` fails the run unless the verifier
+accepted at least one draft (the CI speculative smoke).
+
 and `plan` prints the resolved per-layer assignment table without packing
 anything (shapes only, runs in milliseconds):
 
     PYTHONPATH=src python -m repro.launch.serve plan --arch olmo-1b-reduced
     PYTHONPATH=src python -m repro.launch.serve plan --preset int8 --json
+
+``plan --diff-checkpoint PATH`` additionally resolves the NumericsSpec
+persisted in that checkpoint's metadata against the same abstract
+parameters and exits nonzero if any layer's assignment drifted from the
+CLI spec — the deploy-time guard against serving a checkpoint under
+different numerics than it was saved with.
 
 ``--legacy`` keeps the old lock-step rectangular-batch loop for comparison;
 ``--spec-json FILE`` serves under a spec shipped as JSON (the same payload
@@ -174,6 +188,42 @@ def _prepare_params(cfg: ArchConfig, args):
     return build_serving_params(params, cfg, scfg), spec.name
 
 
+def _draft_spec_from_args(args) -> NumericsSpec:
+    """The draft spec under speculation.  ``--draft-spec`` names a preset
+    or a spec-JSON file; otherwise the regular numerics flags
+    (--mode/--m/--preset/--spec-json) describe the draft — the verifier
+    is always exact int8, so under speculation those flags stop choosing
+    the serving numerics and start choosing the proposer's."""
+    from repro.numerics.presets import PRESETS
+
+    ds = getattr(args, "draft_spec", None)
+    if ds:
+        if ds in PRESETS:
+            return get_preset(ds)
+        with open(ds) as f:
+            return NumericsSpec.from_json(f.read())
+    spec = _spec_from_args(args)
+    if spec is None:
+        raise SystemExit(
+            "--speculative-k needs an approximate draft spec: float "
+            "drafting buys nothing (pass --draft-spec, or --mode/--m)")
+    return spec
+
+
+def _prepare_speculative_params(cfg: ArchConfig, args):
+    """Pack the SAME float init twice: exact int8 for verification (and
+    prefill), the draft spec for proposing — the one-checkpoint
+    speculative pair (zero extra parameter memory at rest; both packs
+    derive from one set of weights)."""
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    verify_spec = get_preset("int8")
+    draft_spec = _draft_spec_from_args(args)
+    verify = build_serving_params(params, cfg, ServeConfig(spec=verify_spec))
+    draft = build_serving_params(params, cfg, ServeConfig(spec=draft_spec))
+    return verify, verify_spec.name, draft, draft_spec.name
+
+
 def mixed_trace(cfg: ArchConfig, n_requests: int, max_len: int,
                 prefill_chunk: int, seed: int = 0):
     """A heterogeneous request trace: short chat turns + long documents."""
@@ -195,7 +245,13 @@ def run_engine(args) -> dict:
     from repro.serving import ServingEngine
 
     cfg = get_config(args.arch)
-    params, label = _prepare_params(cfg, args)
+    spec_k = getattr(args, "speculative_k", 0)
+    if spec_k:
+        params, label, draft_params, draft_label = (
+            _prepare_speculative_params(cfg, args))
+    else:
+        params, label = _prepare_params(cfg, args)
+        draft_params = draft_label = None
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.chunk, cache_dtype=args.cache_dtype,
                         mixed_batches=not args.no_mixed,
@@ -205,15 +261,19 @@ def run_engine(args) -> dict:
                         prefix_cache=not args.no_prefix_cache,
                         trace=bool(args.trace_out),
                         metrics_window_s=args.metrics_window,
-                        error_probe_every=args.error_probe_every)
-    eng = ServingEngine(cfg, params, ecfg, numerics=label)
+                        error_probe_every=args.error_probe_every,
+                        speculative_k=spec_k)
+    eng = ServingEngine(cfg, params, ecfg, numerics=label,
+                        draft_params=draft_params, draft_numerics=draft_label)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
           f"kv={ecfg.cache_dtype} mixed={ecfg.mixed_batches} "
           f"layout={ecfg.kv_layout}"
           + (f" block_size={ecfg.kv_block_size} "
              f"prefix_cache={ecfg.prefix_cache}"
-             if ecfg.kv_layout == "paged" else ""))
+             if ecfg.kv_layout == "paged" else "")
+          + (f" speculative_k={spec_k} draft={draft_label}"
+             if spec_k else ""))
 
     trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
     if args.shared_prefix_pair:
@@ -245,6 +305,16 @@ def run_engine(args) -> dict:
     snap = eng.metrics.snapshot()
     print(f"finished {len(finished)}/{len(trace)} requests, "
           f"{eng.compile_count()} compiled shapes")
+    if getattr(args, "assert_acceptance", False):
+        # the CI speculative smoke: the verifier must have accepted at
+        # least one draft (acceptance_rate None means nothing was drafted)
+        acc = snap.get("acceptance_rate")
+        assert acc is not None and acc > 0, (
+            f"speculative smoke expected acceptance > 0, got {acc!r} "
+            f"(drafted={snap.get('drafted_tokens')})")
+        print(f"  speculative: acceptance_rate={acc} "
+              f"drafted={snap['drafted_tokens']} "
+              f"accepted={snap['accepted_draft_tokens']}")
     print(json.dumps(snap, indent=2))
     if args.trace_out:
         eng.tracer.write(args.trace_out)
@@ -283,6 +353,37 @@ def run_legacy(args) -> None:
     print("sample:", np.asarray(gen[0])[:16].tolist())
 
 
+def _plan_diff(plan: PackPlan, params, ckpt_path: str) -> int:
+    """Compare a resolved plan against the NumericsSpec a checkpoint was
+    saved with (its ``numerics`` metadata), re-resolved over the same
+    abstract parameters.  Prints per-layer drift rows; returns the number
+    of drifted layers (the plan subcommand's exit code), so 0 == the
+    checkpoint really will serve under the numerics the CLI describes."""
+    from repro.checkpoint.manager import read_meta
+
+    meta = read_meta(ckpt_path)
+    nd = (meta or {}).get("numerics")
+    if nd is None:
+        raise SystemExit(f"{ckpt_path}: checkpoint metadata carries no "
+                         "numerics spec (saved before numerics persistence, "
+                         "or not via save_pytree/CheckpointManager?)")
+    ck_spec = NumericsSpec.from_dict(nd)
+    ck_plan = ck_spec.resolve(params)
+    mine = {e.path: e.label for e in plan.entries}
+    theirs = {e.path: e.label for e in ck_plan.entries}
+    drift = [(p, mine.get(p), theirs.get(p))
+             for p in sorted(set(mine) | set(theirs))
+             if mine.get(p) != theirs.get(p)]
+    print(f"checkpoint spec: {ck_spec.name!r} ({ckpt_path})")
+    if not drift:
+        print(f"plan matches checkpoint: {len(mine)} layers, no drift")
+        return 0
+    print(f"PLAN DRIFT: {len(drift)} layer(s) differ (cli vs checkpoint)")
+    for path, a, b in drift:
+        print(f"  {path}: {a or '<absent>'} != {b or '<absent>'}")
+    return len(drift)
+
+
 def run_plan(args) -> PackPlan:
     """`plan` subcommand: resolve and print the per-layer assignment table
     without packing — parameters are abstract (eval_shape), so this is
@@ -300,6 +401,10 @@ def run_plan(args) -> PackPlan:
     else:
         print(f"arch={cfg.name} spec={spec.name}")
         print(plan.table())
+    if getattr(args, "diff_checkpoint", None):
+        drifted = _plan_diff(plan, params, args.diff_checkpoint)
+        if drifted:
+            raise SystemExit(drifted)
     return plan
 
 
@@ -323,6 +428,11 @@ def main(argv=None) -> None:
         _add_numerics_flags(ap)
         ap.add_argument("--json", action="store_true",
                         help="emit the PackPlan as JSON instead of a table")
+        ap.add_argument("--diff-checkpoint", default=None, metavar="PATH",
+                        help="also resolve the NumericsSpec persisted in "
+                             "this checkpoint's metadata and exit nonzero "
+                             "if any layer's assignment drifted from the "
+                             "CLI spec")
         run_plan(ap.parse_args(argv[1:]))
         return
 
@@ -356,6 +466,20 @@ def main(argv=None) -> None:
     ap.add_argument("--shared-prefix-pair", action="store_true",
                     help="prepend a warmed shared-prefix request pair and "
                          "report/assert the prefix hit (CI paged smoke)")
+    # speculative decode (repro.serving.speculative)
+    ap.add_argument("--speculative-k", type=int, default=0, metavar="K",
+                    help="self-verifying speculative decode: draft up to K "
+                         "greedy tokens per slot through the approximate "
+                         "parameters, verify them in one exact-int8 chunk "
+                         "call (0 disables); the numerics flags then "
+                         "describe the DRAFT spec")
+    ap.add_argument("--draft-spec", default=None, metavar="NAME_OR_FILE",
+                    help="draft NumericsSpec: a preset name or a spec-JSON "
+                         "file path (default: whatever --mode/--m/--preset "
+                         "resolve to)")
+    ap.add_argument("--assert-acceptance", action="store_true",
+                    help="fail unless the verifier accepted at least one "
+                         "draft token (CI speculative smoke)")
     # observability (repro.serving.telemetry / repro.quant.error_probe)
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="write the request-span trace here: *.jsonl for "

@@ -626,6 +626,23 @@ def init_paged_slot_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
     return cache
 
 
+def rollback_slots(cache: dict, new_lengths) -> dict:
+    """Retreat per-slot write cursors (speculative-decode rollback).
+
+    Moving ``lengths`` back is a complete rollback for every cache layout
+    this module builds: the attention mask hides entries at positions
+    ``>= lengths[b]``, and ``_slot_update`` writes a slot's next tokens
+    over those positions BEFORE attention reads the cache — so stale
+    K/V from rejected speculative tokens is never attended and is
+    overwritten before it can be.  Works identically for the contiguous
+    and paged layouts (``lengths`` is slot-indexed in both; the paged
+    block tables are position-stable so no block bookkeeping changes).
+    """
+    out = dict(cache)
+    out["lengths"] = jnp.asarray(new_lengths, jnp.int32)
+    return out
+
+
 def _paged_gather(pool: jax.Array, bt: jax.Array) -> jax.Array:
     """Assemble each slot's logically-contiguous KV view from the block
     pool.  pool: (num_blocks, ..., block_size, d), block axis -2;
@@ -797,6 +814,18 @@ def decode_slots(params: Params, tokens: jax.Array, cache: dict,
     clamp-aware cursor write, and scatters the touched blocks back — so the
     paged step is token-identical to the contiguous one by construction.
     Table shape is fixed, so each layout keeps its own two compiled shapes.
+
+    Speculative decode (:mod:`repro.serving.speculative`) runs this same
+    step twice per round with two parameter sets over ONE cache: k thin
+    ``(slots, 1)`` calls with the approximate draft params (writing draft
+    K/V at [L, L+k)), then one chunk-shaped call with the exact params
+    whose verify rows carry ``n_valid = k+1`` and overwrite [L, L+k] with
+    exact K/V.  Rollback between and after the phases is
+    :func:`rollback_slots` — a pure cursor move, sound because writes land
+    before attention and positions past the cursor are masked.  The C == 1
+    fast path in ``_slot_update`` asserts no clamping, so draft cursors
+    must stay ``<= max_len - 1``; the serving layer guarantees it by
+    capping k at the request's remaining generation budget minus one.
 
     Kernel decode specialization: the packed-dense fast path keys its tile
     choice on the flattened row count slots*C, so continuous decode (C == 1,

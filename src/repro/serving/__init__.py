@@ -46,6 +46,14 @@ Design invariants:
   * **Numerics live in the parameters.**  The engine is mode-agnostic;
     ``build_serving_params`` decides float vs int8 vs approximate+CV.
 
+Speculative decode (``EngineConfig.speculative_k``,
+:mod:`repro.serving.speculative`) exploits the numerics-in-parameters
+design directly: the SAME weights packed under an approximate spec draft
+k greedy tokens per slot on the thin shape, one chunk-shaped exact call
+verifies them, and only verifier tokens are emitted — bit-identical
+output, zero extra parameter memory, and the acceptance rate doubles as
+a live draft-quality readout for the CV knob.
+
 KV memory models (``EngineConfig.kv_layout``):
 
   * ``"contiguous"`` — every slot owns a ``max_len`` KV stripe
@@ -71,6 +79,7 @@ from repro.serving.paged import (BlockAllocator, BlockTable, PagedKVPool,
 from repro.serving.request import (AdmissionController, Request, RequestQueue,
                                    RequestState)
 from repro.serving.scheduler import ScheduledBatch, SlotScheduler
+from repro.serving.speculative import SpecRound, SpecRow, plan_round
 from repro.serving.telemetry import SPAN_KINDS, SpanEvent, SpanTracer
 
 __all__ = [
@@ -90,4 +99,7 @@ __all__ = [
     "RequestState",
     "ScheduledBatch",
     "SlotScheduler",
+    "SpecRound",
+    "SpecRow",
+    "plan_round",
 ]

@@ -20,6 +20,13 @@ a fleet's per-engine numerics are auditable from monitoring alone.
 Generation is greedy (argmax), matching the sequential
 ``prefill``/``decode_step`` baseline token for token — the equivalence
 contract tested by tests/test_serving_engine.py.
+
+With ``EngineConfig.speculative_k > 0`` and a second, APPROXIMATE
+parameter set (``draft_params=``) the engine runs self-verifying
+speculative decode (``repro.serving.speculative``): the approximate
+parameters draft k greedy tokens per slot on the thin step, one
+chunk-shaped exact call verifies them all, and only verifier tokens are
+emitted — same bit-exact contract, fewer exact dispatches per token.
 """
 
 from __future__ import annotations
@@ -40,6 +47,7 @@ from repro.serving.request import (AdmissionController, Request, RequestQueue,
                                    RequestState)
 from repro.serving.scheduler import ScheduledBatch, SlotScheduler
 from repro.serving.telemetry import SpanTracer
+from repro.serving import speculative
 
 
 def _has_blocked_packs(params) -> bool:
@@ -69,12 +77,34 @@ def _has_blocked_packs(params) -> bool:
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = EngineConfig(),
                  mesh=None, api: ModelApi | None = None,
-                 numerics: str | None = None) -> None:
+                 numerics: str | None = None,
+                 draft_params=None, draft_numerics: str | None = None) -> None:
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
         self.api = api or build_model(cfg)
         self.numerics = numerics  # active NumericsSpec name (None = unknown)
+        # speculative decode: ``params`` verifies (and serves prefill),
+        # ``draft_params`` — the same weights packed under an approximate
+        # spec — proposes.  Kept fully optional: without speculative_k the
+        # engine never touches them.
+        self.draft_params = draft_params
+        self.draft_numerics = draft_numerics
+        self._spec_k = int(ecfg.speculative_k)
+        if self._spec_k:
+            if draft_params is None:
+                raise ValueError(
+                    "speculative_k > 0 needs draft_params: the approximate-"
+                    "spec packed parameters that draft for this engine "
+                    "(same weights, different numerics — see "
+                    "repro.launch.serve.build_serving_params)")
+            if cfg.rwkv:
+                # rollback is a cursor move over position-indexed K/V;
+                # recurrent per-slot state cannot rewind a rejected draft
+                raise NotImplementedError(
+                    f"{cfg.name}: speculative decode needs a position-"
+                    "indexed KV cache to roll back rejected drafts "
+                    "(recurrent RWKV state cannot rewind)")
         if ecfg.kv_layout == "paged":
             from repro.serving.paged import PagedKVPool
 
@@ -111,7 +141,9 @@ class ServingEngine:
             kv_layout=ecfg.kv_layout,
             decode_specialized=(ecfg.slots <= DECODE_M_MAX
                                 and _has_blocked_packs(params)),
-            window_s=ecfg.metrics_window_s)
+            window_s=ecfg.metrics_window_s,
+            speculative_k=self._spec_k,
+            draft_numerics=draft_numerics if self._spec_k else None)
         # request-span tracing: a bounded per-engine ring of typed events,
         # recorded at points the engine already touches each request
         self.tracer = (SpanTracer(capacity=ecfg.trace_buffer,
@@ -212,6 +244,17 @@ class ServingEngine:
                 if tr is not None:
                     tr.record("prefix_hit", rid=r.rid,
                               hit_tokens=r.prefix_hit_tokens)
+        if self._spec_k:
+            # every turn goes through the speculative round — including
+            # turns with zero spec rows — so plain decode rows always ride
+            # chunk-shaped exact calls and the exact parameters never meet
+            # the thin shape (two compiled shapes total, same as plain
+            # serving: draft structure x thin + exact structure x chunk)
+            rnd = speculative.plan_round(self.active, self._spec_k,
+                                         self.ecfg.prefill_chunk)
+            if rnd is None:
+                return []
+            return self._speculative_step(rnd)
         batch = self.scheduler.next_batch(self.active)
         if batch is None:
             return []
@@ -231,15 +274,8 @@ class ServingEngine:
             if tr is not None and self.pool.cow_copies > cow0:
                 tr.record("cow_copy", copies=self.pool.cow_copies - cow0)
             tables = self.pool.block_tables_array()
-            cache_before = self.pool.cache
-            logits, new_cache = self._step_fn(
-                self.params, jnp.asarray(batch.tokens), cache_before,
-                jnp.asarray(batch.n_valid), jnp.asarray(tables))
-        else:
-            cache_before = self.pool.cache
-            logits, new_cache = self._step_fn(
-                self.params, jnp.asarray(batch.tokens), cache_before,
-                jnp.asarray(batch.n_valid))
+        cache_before = self.pool.cache
+        logits, new_cache = self._dispatch(self.params, batch, tables)
         self.pool.update(new_cache)
         if self._paged:
             self.pool.advance(batch.n_valid)
@@ -262,6 +298,184 @@ class ServingEngine:
                 and self._steps % self.ecfg.error_probe_every == 0):
             self._run_probe(batch, cache_before, tables)
         return finished
+
+    def _dispatch(self, params, batch: ScheduledBatch, tables):
+        """Run the jitted slot step under the given parameter set.
+
+        The parameters are a traced argument, so draft and exact packs
+        share one callable and the jit cache keys on
+        (parameter structure, token shape)."""
+        if self._paged:
+            return self._step_fn(params, jnp.asarray(batch.tokens),
+                                 self.pool.cache, jnp.asarray(batch.n_valid),
+                                 jnp.asarray(tables))
+        return self._step_fn(params, jnp.asarray(batch.tokens),
+                             self.pool.cache, jnp.asarray(batch.n_valid))
+
+    # -- speculative rounds (repro.serving.speculative) ----------------------
+
+    def _speculative_step(self, rnd) -> list[Request]:
+        """One draft-and-verify round.
+
+        Draft: up to ``rnd.max_k`` thin calls with the APPROXIMATE
+        parameters, each feeding the previous argmax; rollback to the
+        pre-draft cursors (pure cursor move — the draft K/V is masked and
+        then overwritten).  Verify: ONE chunk-shaped call with the exact
+        parameters whose verify rows re-run ``[last-token, drafts]`` with
+        ``n_valid = k_eff + 1``; prefill chunks and budget-exhausted
+        decode rows ride the same call.  Emission takes each row's longest
+        agreeing prefix plus the verifier's correction token — every
+        emitted token is an exact-model output, so the stream stays
+        bit-identical to plain exact decode — and the final cursors land
+        on exactly the accepted history."""
+        tr = self.tracer
+        self.metrics.start_clock()
+        ch = self.ecfg.prefill_chunk
+        tables = None
+        if self._paged:
+            # ONE copy-on-write barrier covers the whole round: prompt
+            # chunks, draft writes [L, L+k) and verify writes [L, L+k] all
+            # land in blocks made uniquely owned here, so the tables stay
+            # valid across every dispatch below (rollback is a cursor move
+            # — it never frees or remaps a block)
+            cow0 = self.pool.cow_copies if tr is not None else 0
+            for r in rnd.prefilling:
+                self.pool.ensure_writable(
+                    r.slot, min(ch, r.prompt_len - r.prefilled))
+            for row in rnd.spec_rows:
+                self.pool.ensure_writable(row.req.slot, row.k_eff + 1)
+            for r in rnd.plain:
+                self.pool.ensure_writable(r.slot, 1)
+            self.pool.flush_copies()
+            if tr is not None and self.pool.cow_copies > cow0:
+                tr.record("cow_copy", copies=self.pool.cow_copies - cow0)
+            tables = self.pool.block_tables_array()
+        base = self.pool.lengths()
+
+        # -- draft phase: thin calls, APPROXIMATE parameters ----------------
+        t_d0 = time.perf_counter()
+        max_k = rnd.max_k
+        for i in range(max_k):
+            db = self.scheduler.draft_batch(rnd, i)
+            logits, new_cache = self._dispatch(self.draft_params, db, tables)
+            self.pool.update(new_cache)
+            toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            speculative.record_drafts(rnd, i, toks)
+        t_d1 = time.perf_counter()
+        if max_k:
+            # the draft K/V above each base cursor is approximate junk:
+            # retreat the cursors (repro.models.lm.rollback_slots) and let
+            # the verify call overwrite those positions with exact K/V
+            self.pool.set_lengths(base)
+
+        # -- verify phase: ONE chunk-shaped call, EXACT parameters ----------
+        vb = self.scheduler.verify_batch(rnd)
+        t_v0 = time.perf_counter()
+        cache_before = self.pool.cache
+        logits, new_cache = self._dispatch(self.params, vb, tables)
+        self.pool.update(new_cache)
+        t_v1 = time.perf_counter()
+
+        (finished, emitted, prompt_toks,
+         drafted, accepted) = self._spec_postprocess(rnd, vb, logits)
+
+        # final cursors: base + chunk (prefill rows), base + 1 (plain
+        # decode rows), base + emitted (verify rows — the device advanced
+        # k_eff + 1; rejected or stop-truncated positions roll back, their
+        # stale exact K/V masked until overwritten next round).  This
+        # replaces the plain path's pool.advance and keeps the paged host
+        # mirror in sync; released slots re-zero their cursor on acquire.
+        final = base.copy()
+        for r, kind in zip(vb.rows, vb.row_kinds):
+            if kind != "verify":
+                final[r.slot] = base[r.slot] + int(vb.n_valid[r.slot])
+        for row in rnd.spec_rows:
+            final[row.req.slot] = base[row.req.slot] + row.emitted
+        self.pool.set_lengths(final)
+
+        if tr is not None:
+            for r, kind in zip(vb.rows, vb.row_kinds):
+                if kind == "verify":
+                    continue
+                tr.record("prefill_chunk" if kind == "prefill"
+                          else "decode_step", rid=r.rid, t=t_v0,
+                          dur=t_v1 - t_v0, slot=r.slot,
+                          n_valid=int(vb.n_valid[r.slot]))
+            for row in rnd.spec_rows:
+                tr.record("draft", rid=row.req.rid, t=t_d0,
+                          dur=t_d1 - t_d0, slot=row.req.slot, k=row.k_eff)
+                tr.record("verify", rid=row.req.rid, t=t_v0,
+                          dur=t_v1 - t_v0, slot=row.req.slot,
+                          drafted=row.k_eff, accepted=row.accepted,
+                          emitted=row.emitted)
+            for r in finished:
+                tr.record("finished", rid=r.rid, reason=r.finish_reason,
+                          generated=len(r.generated))
+        self.metrics.record_step(
+            "spec" if rnd.spec_rows else ("mixed" if rnd.plain else "prefill"),
+            self.pool.occupancy, len(self.queue),
+            prompt_tokens=prompt_toks, generated_tokens=emitted,
+            block_stats=self._windowed_block_stats() if self._paged else None,
+            drafted=drafted, accepted=accepted, draft_calls=max_k)
+        self._steps += 1
+        if (self._probe is not None
+                and self._steps % self.ecfg.error_probe_every == 0):
+            # the probe re-runs a verify-batch row against the exact path;
+            # under speculation the serving params for that call ARE exact,
+            # so it reports the (near-zero) noise floor — still useful as a
+            # liveness check, documented in docs/serving.md
+            self._run_probe(vb, cache_before, tables)
+        return finished
+
+    def _spec_postprocess(self, rnd, vb: ScheduledBatch,
+                          logits) -> tuple[list[Request], int, int, int, int]:
+        """Per-row advance for a speculative round's verify call.
+
+        Prefill and plain-decode rows behave exactly as in
+        :meth:`_postprocess`; verify rows run longest-agreeing-prefix
+        acceptance and emit their candidates one at a time through the
+        normal stop checks — eos/length can only fire on an EMITTED
+        verifier token, never on a drafted-but-rejected one (a rejected
+        draft that happens to equal ``eos_id`` must not finish the
+        request).  Returns ``(finished, generated_tokens, prompt_tokens,
+        drafted, accepted)``; the acceptance counters use the agreement
+        length, independent of stop-condition truncation."""
+        finished: list[Request] = []
+        emitted = prompt_toks = drafted = accepted = 0
+        # verify rows consume up to k_eff + 1 columns each, so take the
+        # argmax over the full (slots, C, V) block once; every row kind
+        # then reads from the same host array
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        for r, kind in zip(vb.rows, vb.row_kinds):
+            if kind == "prefill":
+                n = int(vb.n_valid[r.slot])
+                r.prefilled += n
+                prompt_toks += n
+                if self._paged:
+                    self.pool.register_prefix(r.slot, r.prompt_len,
+                                              r.prefilled)
+                if r.prefilled < r.prompt_len:
+                    continue
+                r.state = RequestState.DECODE
+                self._emit_row(r, int(toks[r.slot, n - 1]), finished,
+                               first=True)
+                emitted += 1
+            elif kind == "decode":
+                self._emit_row(r, int(toks[r.slot, 0]), finished,
+                               first=False)
+                emitted += 1
+        for row in rnd.spec_rows:
+            r = row.req
+            candidates = speculative.accept(row, toks[r.slot])
+            drafted += row.k_eff
+            accepted += row.accepted
+            for tok in candidates:
+                self._emit_row(r, tok, finished, first=False)
+                row.emitted += 1
+                emitted += 1
+                if r.state == RequestState.FINISHED:
+                    break  # accepted-but-past-stop candidates are dropped
+        return finished, emitted, prompt_toks, drafted, accepted
 
     def _run_probe(self, batch: ScheduledBatch, cache_before,
                    tables) -> None:
@@ -319,7 +533,9 @@ class ServingEngine:
             numerics=self.numerics,
             kv_layout=self.ecfg.kv_layout,
             decode_specialized=self.metrics.decode_specialized,
-            window_s=self.ecfg.metrics_window_s)
+            window_s=self.ecfg.metrics_window_s,
+            speculative_k=self._spec_k,
+            draft_numerics=self.draft_numerics if self._spec_k else None)
         self._bridge_window_samples()
         if self._paged:
             self.pool.reset_peak_blocks()

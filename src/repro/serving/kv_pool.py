@@ -92,6 +92,20 @@ class SlotPool:
         """Host copy of the per-slot write cursors."""
         return np.asarray(self.cache["lengths"])
 
+    def set_lengths(self, new_lengths: np.ndarray) -> None:
+        """Overwrite every slot's write cursor (speculative-decode rollback).
+
+        A cursor move is a sound rollback for attention-style caches:
+        entries beyond a slot's cursor are never attended (the position
+        mask) and are overwritten before they are read (``_slot_update``
+        writes before attention), so rejected speculative K/V needs no
+        erasing — only the cursor retreats.  Recurrent (RWKV) state has no
+        cursor to move, which is why the engine refuses speculation there.
+        """
+        from repro.models.lm import rollback_slots
+
+        self.cache = rollback_slots(self.cache, new_lengths)
+
     @property
     def n_free(self) -> int:
         return len(self._free)

@@ -11,7 +11,12 @@ and fragmentation (slot occupancy alone overstates utilization when
 lengths are heterogeneous), prefix-cache hits and skipped prefill
 tokens, COW copies, prefix evictions, and ``no_capacity_stalls`` —
 iterations where queued work waited on pool capacity, which queue-full
-rejection counts used to hide.
+rejection counts used to hide.  Speculative decode
+(``repro.serving.speculative``) adds draft/accept counters: the
+acceptance rate — accepted draft tokens over drafted — is the
+argmax-level draft-quality signal for the approximate spec, surfaced
+per window, in the snapshot (keyed by draft spec), and across
+:meth:`EngineMetrics.merge`.
 
 Three observability surfaces beyond the end-of-run aggregate:
 
@@ -179,6 +184,16 @@ class EngineMetrics:
     decode_steps: int = 0
     mixed_steps: int = 0  # chunk-shaped batches carrying decode rows
 
+    #: speculative decode config mirror: the engine's draft length
+    #: (0 = speculation off) and the NumericsSpec name its draft
+    #: parameters were packed under (the acceptance-rate key)
+    speculative_k: int = 0
+    draft_numerics: str | None = None
+    spec_rounds: int = 0  # engine iterations that ran a draft phase
+    draft_calls: int = 0  # thin approximate-parameter dispatches
+    drafted_tokens: int = 0  # draft tokens proposed across all rounds
+    accepted_draft_tokens: int = 0  # drafts the exact verifier agreed with
+
     submitted: int = 0
     rejected: int = 0
     evicted: int = 0  # queued requests re-rejected for higher-priority work
@@ -240,14 +255,22 @@ class EngineMetrics:
 
     def record_step(self, kind: str, occupancy: float, queue_depth: int,
                     prompt_tokens: int = 0, generated_tokens: int = 0,
-                    block_stats: dict | None = None) -> None:
+                    block_stats: dict | None = None, drafted: int = 0,
+                    accepted: int = 0, draft_calls: int = 0) -> None:
         self.start_clock()
         if kind == "prefill":
             self.prefill_steps += 1
         elif kind == "mixed":
             self.mixed_steps += 1
+        elif kind == "spec":
+            # one speculative round = draft_calls thin approximate
+            # dispatches + one chunk-shaped exact verify dispatch
+            self.spec_rounds += 1
         else:
             self.decode_steps += 1
+        self.drafted_tokens += drafted
+        self.accepted_draft_tokens += accepted
+        self.draft_calls += draft_calls
         self.prompt_tokens += prompt_tokens
         self.generated_tokens += generated_tokens
         self._occupancy_sum += occupancy
@@ -285,6 +308,10 @@ class EngineMetrics:
                 "prefill_steps": self.prefill_steps,
                 "decode_steps": self.decode_steps,
                 "mixed_steps": self.mixed_steps,
+                "spec_rounds": self.spec_rounds,
+                "draft_calls": self.draft_calls,
+                "drafted_tokens": self.drafted_tokens,
+                "accepted_draft_tokens": self.accepted_draft_tokens,
                 "_occupancy_sum": self._occupancy_sum,
                 "_queue_depth_sum": self._queue_depth_sum,
                 "_samples": self._samples,
@@ -324,6 +351,16 @@ class EngineMetrics:
                 d["_block_util_sum"] / d["_block_samples"], 3)
             sample["mean_block_fragmentation"] = round(
                 d["_block_frag_sum"] / d["_block_samples"], 3)
+        if self.speculative_k:
+            # per-window acceptance: the live draft-quality signal (a CV
+            # toggle or quality drift shows up here before it shows up in
+            # the end-of-run aggregate)
+            sample["spec_rounds"] = d["spec_rounds"]
+            sample["drafted_tokens"] = d["drafted_tokens"]
+            sample["accepted_draft_tokens"] = d["accepted_draft_tokens"]
+            sample["acceptance_rate"] = (
+                round(d["accepted_draft_tokens"] / d["drafted_tokens"], 4)
+                if d["drafted_tokens"] else None)
         if len(self.timeseries) == self.timeseries.maxlen:
             self.timeseries_dropped += 1
         self.timeseries.append(sample)
@@ -407,6 +444,23 @@ class EngineMetrics:
             "decode_steps": self.decode_steps,
             "mixed_steps": self.mixed_steps,
             "step_samples": self._samples,
+            "speculative_k": self.speculative_k or None,
+            "draft_numerics": self.draft_numerics,
+            "spec_rounds": self.spec_rounds,
+            "draft_calls": self.draft_calls,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_draft_tokens": self.accepted_draft_tokens,
+            "acceptance_rate": round(
+                self.accepted_draft_tokens / self.drafted_tokens, 4)
+            if self.drafted_tokens else None,
+            "acceptance_by_draft_spec": (
+                {self.draft_numerics or "unknown": {
+                    "drafted": self.drafted_tokens,
+                    "accepted": self.accepted_draft_tokens,
+                    "acceptance_rate": round(
+                        self.accepted_draft_tokens / self.drafted_tokens,
+                        4)}}
+                if self.drafted_tokens else None),
             "ttft_mean_s": round(self.ttfts.mean, 4) if self.ttfts else None,
             "ttft_p50_s": round(self.ttfts.percentile(0.5), 4)
             if self.ttfts else None,
@@ -441,6 +495,8 @@ class EngineMetrics:
         "requests_evicted", "no_capacity_stalls", "prefix_hits",
         "prefix_hit_tokens", "prompt_tokens", "generated_tokens",
         "prefill_steps", "decode_steps", "mixed_steps", "step_samples",
+        "spec_rounds", "draft_calls", "drafted_tokens",
+        "accepted_draft_tokens",
         "block_step_samples", "ttft_samples", "ttft_samples_capped",
         "itl_samples", "itl_samples_capped", "latency_samples",
         "latency_samples_capped", "timeseries_samples", "timeseries_dropped",
@@ -497,14 +553,37 @@ class EngineMetrics:
         for k in EngineMetrics._EQUAL_OR_MIXED:
             vals = {s.get(k) for s in snaps}
             out[k] = vals.pop() if len(vals) == 1 else "mixed"
-        for k in ("decode_specialized", "metrics_window_s"):
+        for k in ("decode_specialized", "metrics_window_s", "speculative_k"):
             vals = {s.get(k) for s in snaps}
             out[k] = vals.pop() if len(vals) == 1 else None
+        # draft spec label: single non-None value passes through, a
+        # heterogeneous fleet reads "mixed" (the per-spec breakdown below
+        # keeps the split auditable)
+        dn = {s.get("draft_numerics") for s in snaps
+              if s.get("draft_numerics") is not None}
+        out["draft_numerics"] = (dn.pop() if len(dn) == 1
+                                 else ("mixed" if dn else None))
         elapsed = out.get("elapsed_s") or 0.0
         gen = out.get("generated_tokens") or 0
         total = gen + (out.get("prompt_tokens") or 0)
         out["gen_tok_per_s"] = round(gen / elapsed, 2) if elapsed else 0.0
         out["total_tok_per_s"] = round(total / elapsed, 2) if elapsed else 0.0
+        # acceptance recomputes from the summed counters (rates never
+        # average); the per-spec map unions by key, summing its counters
+        drafted = out.get("drafted_tokens") or 0
+        out["acceptance_rate"] = (
+            round((out.get("accepted_draft_tokens") or 0) / drafted, 4)
+            if drafted else None)
+        by_spec: dict = {}
+        for s in snaps:
+            for label, st in (s.get("acceptance_by_draft_spec") or {}).items():
+                cur = by_spec.setdefault(label, {"drafted": 0, "accepted": 0})
+                cur["drafted"] += st["drafted"]
+                cur["accepted"] += st["accepted"]
+        for st in by_spec.values():
+            st["acceptance_rate"] = (round(st["accepted"] / st["drafted"], 4)
+                                     if st["drafted"] else None)
+        out["acceptance_by_draft_spec"] = by_spec or None
         # error-probe moments: dict-union layers, Chan-merge shared paths
         probes = [s["error_probe"] for s in snaps if s.get("error_probe")]
         if probes:

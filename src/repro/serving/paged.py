@@ -385,6 +385,19 @@ class PagedKVPool:
     def lengths(self) -> np.ndarray:
         return np.asarray(self.cache["lengths"])
 
+    def set_lengths(self, new_lengths: np.ndarray) -> None:
+        """Overwrite device cursors AND the host mirror (speculative-decode
+        rollback).  Under the paged layout a rollback is purely a cursor
+        move: block tables are position-stable, rejected speculative K/V
+        sits in blocks the request already owns (the round's COW barrier
+        ran before drafting), and entries past the cursor are masked until
+        overwritten — so no block is freed or copied on rollback, even
+        when the cursor retreats across a block boundary."""
+        from repro.models.lm import rollback_slots
+
+        self.cache = rollback_slots(self.cache, new_lengths)
+        self._cursors[:] = np.asarray(new_lengths, np.int64)
+
     def block_tables_array(self) -> np.ndarray:
         """(slots, blocks_per_slot) int32 for the jitted step; idle slots
         and the unallocated tail of short tables point at NULL_BLOCK."""

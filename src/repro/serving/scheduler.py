@@ -42,11 +42,16 @@ from repro.serving.request import Request, RequestQueue, RequestState
 class ScheduledBatch:
     """One fixed-shape engine iteration."""
 
-    kind: str  # "prefill" | "decode" | "mixed" (chunk-shaped, both row kinds)
+    #: "prefill" | "decode" | "mixed" (chunk-shaped, both row kinds) |
+    #: "draft" (thin speculative draft call) | "spec" (chunk-shaped verify)
+    kind: str
     tokens: np.ndarray  # (slots, C) int32
     n_valid: np.ndarray  # (slots,) int32
     rows: list[Request]  # participating requests (their .slot indexes rows)
-    row_kinds: list[str]  # per entry of ``rows``: "prefill" | "decode"
+    #: per entry of ``rows``: "prefill" | "decode" | "verify" (a decoding
+    #: request's [last-token, drafts...] row inside a speculative verify
+    #: call — n_valid = k_eff + 1 instead of a decode row's 1)
+    row_kinds: list[str]
 
 
 class SlotScheduler:
@@ -164,3 +169,57 @@ class SlotScheduler:
             n_valid[r.slot] = 1
         return ScheduledBatch("decode", tokens, n_valid, decoding,
                               ["decode"] * len(decoding))
+
+    # -- speculative batches (repro.serving.speculative) ---------------------
+
+    def draft_batch(self, rnd, i: int) -> ScheduledBatch:
+        """Thin ``(slots, 1)`` draft call ``i`` of a speculative round.
+
+        Only spec rows still inside their ``k_eff`` participate; everyone
+        else (prefill, plain-decode, idle) is ``n_valid = 0`` padding.  The
+        engine runs these with the DRAFT parameters, so the jit cache entry
+        is (draft structure, thin shape) — the same thin shape slot plain
+        decode would have used, never a third one."""
+        from repro.serving.speculative import draft_inputs
+
+        tokens, n_valid = draft_inputs(rnd, self.slots, i)
+        rows = [row.req for row in rnd.spec_rows if i < row.k_eff]
+        return ScheduledBatch("draft", tokens, n_valid, rows,
+                              ["draft"] * len(rows))
+
+    def verify_batch(self, rnd) -> ScheduledBatch:
+        """The speculative round's single chunk-shaped exact call.
+
+        Three row kinds share the ``(slots, prefill_chunk)`` shape: prompt
+        chunks ("prefill", exactly as in :meth:`_chunk_batch`), verify rows
+        carrying ``[last-token, d_1..d_k]`` with ``n_valid = k_eff + 1``
+        ("verify" — k+1 greedy verdicts in one dispatch, riding the same
+        mixed-batch machinery that lets decode rows share chunk calls), and
+        budget-exhausted decoders as ordinary ``n_valid = 1`` rows
+        ("decode").  Keeping the latter chunk-shaped is what preserves the
+        two-compiled-shapes invariant under speculation: the exact
+        parameters never see the thin shape."""
+        ch = self.prefill_chunk
+        tokens = np.zeros((self.slots, ch), np.int32)
+        n_valid = np.zeros((self.slots,), np.int32)
+        rows: list[Request] = []
+        kinds: list[str] = []
+        for r in rnd.prefilling:
+            n = min(ch, r.prompt_len - r.prefilled)
+            tokens[r.slot, :n] = r.prompt[r.prefilled : r.prefilled + n]
+            n_valid[r.slot] = n
+            rows.append(r)
+            kinds.append("prefill")
+        for row in rnd.spec_rows:
+            r = row.req
+            seq = [r.generated[-1]] + row.drafts
+            tokens[r.slot, :len(seq)] = seq
+            n_valid[r.slot] = len(seq)
+            rows.append(r)
+            kinds.append("verify")
+        for r in rnd.plain:
+            tokens[r.slot, 0] = r.generated[-1]
+            n_valid[r.slot] = 1
+            rows.append(r)
+            kinds.append("decode")
+        return ScheduledBatch("spec", tokens, n_valid, rows, kinds)

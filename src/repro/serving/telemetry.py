@@ -20,6 +20,12 @@ Span taxonomy (:data:`SPAN_KINDS`):
   * ``evicted``       — re-rejected from a full queue by higher priority
   * ``rejected``      — admission control refused the request
   * ``finished``      — terminal; ``reason``/``generated`` ride in args
+  * ``draft``         — one speculative round's draft phase for a
+    participating slot: ``k`` approximate-spec tokens proposed
+    (:mod:`repro.serving.speculative`)
+  * ``verify``        — the exact-spec verification of those drafts:
+    ``drafted``/``accepted``/``emitted`` ride in args, so per-request
+    acceptance is reconstructable from the trace alone
   * ``probe``         — one approximation-error probe result
     (:mod:`repro.quant.error_probe`)
   * ``metrics_window``— one windowed time-series sample
@@ -59,6 +65,8 @@ SPAN_KINDS: tuple[str, ...] = (
     "evicted",
     "rejected",
     "finished",
+    "draft",
+    "verify",
     "probe",
     "metrics_window",
 )

@@ -1,0 +1,242 @@
+"""Speculative decode: the approximate pack drafts, the exact-int8 pack
+verifies.  Contracts under test:
+
+  * bit-identity — speculative greedy output equals the sequential
+    exact-int8 baseline for every k and both KV layouts, with the
+    two-compiled-shapes invariant intact and acceptance > 0;
+  * rollback — a near-always-rejected (junk) drafter forces a KV cursor
+    rollback every round, including across paged block boundaries, and
+    the output still matches the baseline token for token;
+  * stop conditions — a drafted-but-rejected token equal to eos_id must
+    NOT finish the request (finish decisions run on verifier output only);
+  * CV as a draft-quality knob — the control-variate draft spec accepts
+    at least as well as the same spec without CV on the same trace;
+  * construction guards and the `plan --diff-checkpoint` drift gate.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import EngineConfig
+from repro.core.policy import ApproxPolicy
+from repro.launch import serve
+from repro.launch.serve import ServeConfig, build_serving_params
+from repro.models import build_model
+from repro.numerics.presets import get_preset
+from repro.serving import ServingEngine
+
+MAX_LEN = 64
+
+
+def _sequential_baseline(api, params, prompt, gen, decode):
+    """Per-request prefill + decode_step greedy loop (the oracle the
+    engine — speculative or not — must reproduce token for token)."""
+    logits, cache = api.prefill(params, {"tokens": jnp.asarray([prompt])},
+                                max_len=MAX_LEN, cache_dtype=jnp.float32)
+    tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    for _ in range(gen - 1):
+        logits, cache = decode(params, jnp.asarray([[tok]]), cache)
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+    return out
+
+
+def _mixed_requests(vocab, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    trace = []
+    for i in range(n):
+        plen = [3, 17, 33, 9, 25, 5][i % 6] + int(rng.integers(0, 3))
+        gen = int(rng.integers(4, 12))
+        trace.append((rng.integers(0, vocab, plen).tolist(), gen))
+    return trace
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """One float init packed twice — exact int8 verifier, approximate+CV
+    drafter (the one-checkpoint speculative pair)."""
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    raw = api.init(jax.random.PRNGKey(0))
+    verify = build_serving_params(raw, cfg, ServeConfig(spec=get_preset("int8")))
+    draft = build_serving_params(raw, cfg,
+                                 ServeConfig(spec=get_preset("serve-default")))
+    return cfg, api, raw, verify, draft
+
+
+@pytest.fixture(scope="module")
+def trace(setup):
+    return _mixed_requests(setup[0].vocab)
+
+
+@pytest.fixture(scope="module")
+def baseline(setup, trace):
+    cfg, api, _, verify, _ = setup
+    decode = jax.jit(api.decode_step)
+    return [_sequential_baseline(api, verify, p, g, decode) for p, g in trace]
+
+
+def _spec_engine(cfg, verify, draft, k, layout="contiguous", block_size=16,
+                 slots=3, draft_label="serve-default"):
+    ecfg = EngineConfig(slots=slots, max_len=MAX_LEN, prefill_chunk=16,
+                        cache_dtype="float32", speculative_k=k,
+                        kv_layout=layout, kv_block_size=block_size)
+    return ServingEngine(cfg, verify, ecfg, draft_params=draft,
+                         draft_numerics=draft_label)
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_speculative_token_identical(setup, trace, baseline, layout):
+    """For every draft depth k the speculative engine must emit exactly the
+    sequential exact-int8 greedy tokens — the drafts only ever change HOW
+    the tokens are computed, never WHICH tokens come out — while accepting
+    a nonzero share of drafts and compiling at most two shapes."""
+    cfg, _, _, verify, draft = setup
+    for k in (1, 2, 4):
+        eng = _spec_engine(cfg, verify, draft, k, layout=layout,
+                           block_size=8 if layout == "paged" else 16)
+        reqs = [eng.submit(p, g) for p, g in trace]
+        finished = eng.run()
+        assert len(finished) == len(trace)
+        for r, base in zip(reqs, baseline):
+            assert r.finished and r.generated == base, (layout, k, r.rid)
+        # draft params see only the thin shape, verify params only the
+        # chunk shape: speculation must not add compiled shapes
+        assert eng.compile_count() <= 2, (layout, k)
+        snap = eng.metrics.snapshot()
+        assert snap["speculative_k"] == k
+        assert snap["drafted_tokens"] > 0 and snap["spec_rounds"] > 0
+        assert snap["acceptance_rate"] is not None
+        assert snap["acceptance_rate"] > 0, (layout, k)
+
+
+def test_paged_rollback_at_block_boundary(setup):
+    """A drafter packed from DIFFERENT weights proposes near-pure junk, so
+    almost every round rejects and rolls the KV cursors back over drafted
+    positions — with block_size=4 those rollbacks repeatedly cross paged
+    block boundaries.  Rollback must be a pure cursor move (no block free
+    or remap), so the output still matches the baseline exactly."""
+    cfg, api, _, verify, _ = setup
+    junk_raw = api.init(jax.random.PRNGKey(42))
+    junk = build_serving_params(junk_raw, cfg,
+                                ServeConfig(spec=get_preset("serve-default")))
+    rng = np.random.default_rng(5)
+    trace = [(rng.integers(0, cfg.vocab, 7).tolist(), 12),
+             (rng.integers(0, cfg.vocab, 19).tolist(), 10)]
+    decode = jax.jit(api.decode_step)
+    base = [_sequential_baseline(api, verify, p, g, decode) for p, g in trace]
+
+    eng = _spec_engine(cfg, verify, junk, k=4, layout="paged", block_size=4,
+                       slots=2, draft_label="junk")
+    reqs = [eng.submit(p, g) for p, g in trace]
+    eng.run()
+    snap = eng.metrics.snapshot()
+    assert snap["drafted_tokens"] > 0
+    # the junk drafter must actually exercise the rejection/rollback path
+    assert snap["accepted_draft_tokens"] < snap["drafted_tokens"]
+    for r, b in zip(reqs, base):
+        assert r.generated == b, (r.rid, r.generated, b)
+
+
+def test_drafted_eos_never_finishes(setup):
+    """Stop-condition contract: a junk drafter whose first proposal d1 is
+    outside the exact greedy continuation is submitted with eos_id == d1.
+    The draft is rejected by the verifier, so the request must run to its
+    full budget with finish_reason 'length' — a drafted-but-rejected eos
+    token must never finish a request."""
+    cfg, api, _, verify, _ = setup
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, 9).tolist()
+    gen = 8
+    decode = jax.jit(api.decode_step)
+    base = _sequential_baseline(api, verify, prompt, gen, decode)
+
+    # the drafter's first proposal: the token it emits from the verifier's
+    # first token x1 over the prefilled cache (exactly what round 1 drafts)
+    logits, cache = api.prefill(verify, {"tokens": jnp.asarray([prompt])},
+                                max_len=MAX_LEN, cache_dtype=jnp.float32)
+    assert int(jnp.argmax(logits[0])) == base[0]
+    junk = d1 = None
+    for key in (9, 13, 21):
+        cand = build_serving_params(
+            api.init(jax.random.PRNGKey(key)), cfg,
+            ServeConfig(spec=get_preset("serve-default")))
+        dl, _ = decode(cand, jnp.asarray([[base[0]]]), cache)
+        tok = int(jnp.argmax(dl[0]))
+        if tok != base[1] and tok not in base:
+            junk, d1 = cand, tok
+            break
+    assert junk is not None, "no junk drafter drafted outside the baseline"
+
+    eng = _spec_engine(cfg, verify, junk, k=4, slots=2, draft_label="junk")
+    r = eng.submit(prompt, gen, eos_id=d1)
+    eng.run()
+    assert r.generated == base and r.finish_reason == "length", (
+        r.generated, base, r.finish_reason)
+
+
+def test_cv_acceptance_at_least_no_cv(setup, trace):
+    """The acceptance rate is a live draft-quality readout: the CV-corrected
+    perforated drafter must agree with the exact verifier at least as often
+    as the same perforated spec without the control variate."""
+    cfg, _, raw, verify, draft_cv = setup
+    draft_nocv = build_serving_params(
+        raw, cfg, ServeConfig(spec=get_preset(
+            "serve-default",
+            policy=ApproxPolicy("perforated", 2, use_cv=False))))
+    rates = {}
+    for label, dp in (("cv", draft_cv), ("no-cv", draft_nocv)):
+        eng = _spec_engine(cfg, verify, dp, k=4, draft_label=label)
+        for p, g in trace:
+            eng.submit(p, g)
+        eng.run()
+        snap = eng.metrics.snapshot()
+        assert snap["acceptance_rate"] is not None
+        rates[label] = snap["acceptance_rate"]
+    assert rates["cv"] >= rates["no-cv"], rates
+
+
+def test_speculative_construction_guards(setup):
+    cfg, _, _, verify, _ = setup
+    # speculation without a drafter is a config error, caught at build time
+    with pytest.raises(ValueError, match="draft_params"):
+        ServingEngine(cfg, verify,
+                      EngineConfig(slots=2, max_len=32, prefill_chunk=8,
+                                   cache_dtype="float32", speculative_k=2))
+    # recurrent state cannot rewind a rejected draft
+    rcfg = dataclasses.replace(get_config("rwkv6-1.6b-reduced"),
+                               compute_dtype="float32")
+    rapi = build_model(rcfg)
+    rparams = rapi.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="roll back"):
+        ServingEngine(rcfg, rparams,
+                      EngineConfig(slots=2, max_len=32, prefill_chunk=8,
+                                   cache_dtype="float32", speculative_k=2),
+                      draft_params=rparams)
+
+
+def test_plan_diff_checkpoint_gate(setup, tmp_path):
+    """`plan --diff-checkpoint` re-resolves the NumericsSpec persisted in a
+    checkpoint's metadata over the same abstract params: clean exit when
+    the CLI spec matches, SystemExit(=drifted layer count) when not."""
+    from repro.checkpoint.manager import save_pytree
+
+    _, _, raw, _, _ = setup
+    path = str(tmp_path / "ckpt.rpk")
+    save_pytree(raw, path,
+                meta={"numerics": get_preset("serve-default").to_dict()})
+    # same spec as the checkpoint was packed under: no drift, clean return
+    serve.main(["plan", "--arch", "olmo-1b-reduced",
+                "--preset", "serve-default", "--diff-checkpoint", path])
+    # different spec: every approximable layer drifts -> nonzero SystemExit
+    with pytest.raises(SystemExit) as ei:
+        serve.main(["plan", "--arch", "olmo-1b-reduced", "--preset", "int8",
+                    "--diff-checkpoint", path])
+    assert int(ei.value.code) > 0

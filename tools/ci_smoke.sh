@@ -39,6 +39,15 @@ python -m repro.launch.serve --engine --requests 6 \
 echo "== shared-prefix fleet bench (paged vs contiguous, 1 rep) =="
 python -m benchmarks.serve_bench --paged-only --reps 1 --no-write
 
+echo "== speculative serve smoke (approx drafts, exact verify, acceptance > 0 asserted) =="
+python -m repro.launch.serve --engine --requests 6 \
+    --arch olmo-1b-reduced --mode perforated --m 2 \
+    --slots 4 --max-len 64 --chunk 16 \
+    --speculative-k 4 --assert-acceptance
+
+echo "== speculative serve bench (drafts vs plain exact decode, identity asserted, 1 rep) =="
+python -m benchmarks.serve_bench --speculative-only --reps 1 --no-write
+
 echo "== traced serve smoke (span trace + windowed metrics + error probe) =="
 TRACE_OUT="$(mktemp -t repro_trace_XXXX.json)"
 trap 'rm -f "$TRACE_OUT"' EXIT

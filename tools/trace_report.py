@@ -9,7 +9,11 @@ Reads either export format of ``repro.serving.telemetry.SpanTracer`` and
 prints:
 
   * per-request timelines — queue wait, prefill chunks, decode steps,
-    end-to-end span, finish reason;
+    end-to-end span, finish reason; under speculative decode also the
+    per-request draft rounds and acceptance rate (reconstructed from the
+    ``draft``/``verify`` spans alone);
+  * a speculative summary — trace-wide drafted/accepted counts and the
+    acceptance rate, the draft-quality signal for the approximate spec;
   * stall attribution — the largest inter-decode-step gaps per request,
     attributed to prefill interference (another request's chunk ran in
     the gap), capacity stalls, or scheduler idle time;
@@ -75,6 +79,7 @@ def _request_timelines(events: list[dict]) -> dict:
         r = reqs.setdefault(rid, {
             "queued_t": None, "queue_wait_s": None, "prefill_chunks": 0,
             "decode_steps": 0, "prefill_s": 0.0, "decode_s": 0.0,
+            "spec_rounds": 0, "drafted": 0, "accepted": 0,
             "prefix_hit_tokens": 0, "finish_reason": None, "generated": None,
             "t_first": e["t"], "t_last": e["t"] + e["dur"]})
         r["t_first"] = min(r["t_first"], e["t"])
@@ -90,6 +95,13 @@ def _request_timelines(events: list[dict]) -> dict:
         elif k == "decode_step":
             r["decode_steps"] += 1
             r["decode_s"] += e["dur"]
+        elif k == "verify":
+            # one verify span per speculative round per request; drafted/
+            # accepted ride in its args, so acceptance reconstructs from
+            # the trace alone (no metrics snapshot needed)
+            r["spec_rounds"] += 1
+            r["drafted"] += e["data"].get("drafted", 0)
+            r["accepted"] += e["data"].get("accepted", 0)
         elif k == "prefix_hit":
             r["prefix_hit_tokens"] = e["data"].get("hit_tokens", 0)
         elif k == "finished":
@@ -99,8 +111,23 @@ def _request_timelines(events: list[dict]) -> dict:
             r["finish_reason"] = k
     for r in reqs.values():
         r["span_s"] = round(r["t_last"] - r["t_first"], 6)
+        r["acceptance_rate"] = (round(r["accepted"] / r["drafted"], 4)
+                                if r["drafted"] else None)
         del r["t_first"], r["t_last"]
     return reqs
+
+
+def _speculative_summary(events: list[dict]) -> dict | None:
+    verifies = [e for e in events if e["kind"] == "verify"]
+    if not verifies:
+        return None
+    drafted = sum(e["data"].get("drafted", 0) for e in verifies)
+    accepted = sum(e["data"].get("accepted", 0) for e in verifies)
+    return {"rounds": len(verifies),
+            "draft_spans": sum(1 for e in events if e["kind"] == "draft"),
+            "drafted": drafted, "accepted": accepted,
+            "acceptance_rate": (round(accepted / drafted, 4)
+                                if drafted else None)}
 
 
 def _stall_attribution(events: list[dict], top: int = 5) -> list[dict]:
@@ -165,6 +192,7 @@ def report(events: list[dict]) -> dict:
     return {"events": len(events), "kinds": dict(sorted(kinds.items())),
             "requests": _request_timelines(events),
             "top_decode_gaps": _stall_attribution(events),
+            "speculative": _speculative_summary(events),
             "probe": _probe_trend(events),
             "windows": _window_summary(events)}
 
@@ -184,7 +212,10 @@ def _print_human(rep: dict) -> None:
               f"span {r['span_s']*1e3:8.2f}ms  "
               f"[{r['finish_reason'] or 'running'}]"
               + (f"  prefix_hit={r['prefix_hit_tokens']}"
-                 if r["prefix_hit_tokens"] else ""))
+                 if r["prefix_hit_tokens"] else "")
+              + (f"  spec {r['accepted']}/{r['drafted']} accepted "
+                 f"({r['spec_rounds']} rounds)"
+                 if r["spec_rounds"] else ""))
     if rep["top_decode_gaps"]:
         print("\nlargest inter-decode gaps:")
         for g in rep["top_decode_gaps"]:
@@ -192,6 +223,12 @@ def _print_human(rep: dict) -> None:
                   f"t={g['t']:.3f}s  cause={g['cause']}"
                   + (f" ({g['interfering_chunks']} chunks)"
                      if g["interfering_chunks"] else ""))
+    if rep["speculative"]:
+        s = rep["speculative"]
+        rate = (f"{s['acceptance_rate']:.2%}"
+                if s["acceptance_rate"] is not None else "n/a")
+        print(f"\nspeculative decode: {s['rounds']} verify rounds, "
+              f"{s['accepted']}/{s['drafted']} drafts accepted ({rate})")
     if rep["probe"]:
         p = rep["probe"]
         print(f"\nerror probe: {p['runs']} runs, logits_err_var "
