@@ -14,9 +14,13 @@ payoff the paged subsystem exists for.  A SPECULATIVE scenario serves a
 decode-heavy trace twice — plain exact-int8 decode vs self-verifying
 speculative decode (perforated-m2-cv drafts, exact-int8 verify) — asserts
 the outputs token-identical, and records the measured draft acceptance
-rate alongside gen tok/s.  Results are also written to
-BENCH_serve.json at the repo root so later PRs have a perf trajectory to
-beat.
+rate alongside gen tok/s.  A GOVERNOR scenario exercises the robustness
+layer: an injected accuracy breach must escalate the numerics governor's
+degradation ladder within <= 2 windows (and relax after the fault
+clears), NaN injection must quarantine-replay to tokens identical to a
+clean run, and a quiescent governor must cost <= 1% gen tok/s.  Results
+are also written to BENCH_serve.json at the repo root so later PRs have
+a perf trajectory to beat.
 
 Every scenario LOGS what it ran: silent truncation of the scenario list
 is the failure mode this guards against — a bench that quietly skips a
@@ -538,6 +542,221 @@ def run_speculative(reps: int = REPEATS) -> list[dict]:
     return rows
 
 
+# -- robustness: governor escalation, quarantine identity, governor cost -----
+#
+# Three parts.  ESCALATION: a dense-noise fault injector corrupts the error
+# probe's observation for the first GOV_FAULT_STOP steps — the governor must
+# escalate within <= 2 windows of the first breach and relax back after the
+# fault clears, with the cost-model power delta recorded per switch.
+# QUARANTINE: an int8 engine under NaN step-injection must emit tokens
+# IDENTICAL to an uninjected run (every corrupted row detected, rolled back,
+# replayed exact).  OVERHEAD: governor attached + injection off vs a plain
+# engine at the SAME probe cadence — the governor's bookkeeping must cost
+# <= 1% gen tok/s (the probe itself is priced separately; both sides pay it).
+
+#: sits between the approximate rung's NATURAL logits err-var on this
+#: reduced model (~0.005-0.015) and the dense-noise-injected one (~0.045):
+#: the governor must breach only while the fault is live, not oscillate on
+#: the rung's own approximation error afterwards
+GOV_SLO = 2.5e-2
+GOV_WINDOW_PROBES = 2
+GOV_RELAX_AFTER = 2
+GOV_FAULT_STOP = 14  # injector fires on steps [0, 14): breach, then clear
+GOV_PROBE_EVERY = 8  # overhead part's shared probe cadence
+GOV_PASSES = 6  # interleaved pass-pairs per rep (the telemetry estimator)
+
+
+def run_governor(reps: int = REPEATS) -> list[dict]:
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.base import EngineConfig
+    from repro.launch.serve import (ServeConfig, build_serving_params,
+                                    mixed_trace)
+    from repro.models import build_model
+    from repro.numerics import get_preset, resolve_ladder
+    from repro.quant.faults import FaultInjector, FaultSpec
+    from repro.serving import GovernorConfig, NumericsGovernor, ServingEngine
+
+    cfg = get_config(ARCH)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    spec = get_preset("serve-default")
+    approx = build_serving_params(params, cfg, ServeConfig(spec=spec))
+    exact = build_serving_params(params, cfg,
+                                 ServeConfig(spec=get_preset("int8")))
+    packs = {spec.name: approx, "int8": exact}
+
+    def pack_fn(s):
+        if s is None:
+            return params
+        if s.name not in packs:
+            packs[s.name] = build_serving_params(params, cfg,
+                                                 ServeConfig(spec=s))
+        return packs[s.name]
+
+    trace = mixed_trace(cfg, N_REQUESTS, MAX_LEN, CHUNK, seed=1)
+    rows = []
+
+    # -- part A: escalation under an injected breach, relax after it clears --
+    print("[serve_bench] scenario=governor part=escalation")
+    gov = NumericsGovernor(
+        resolve_ladder([spec, "int8", "float"], params),
+        GovernorConfig(slo_err_var=GOV_SLO,
+                       window_probes=GOV_WINDOW_PROBES,
+                       clean_windows_to_relax=GOV_RELAX_AFTER))
+    inj = FaultInjector(FaultSpec(kind="dense-noise", every=1,
+                                  stop=GOV_FAULT_STOP, seed=13, scale=5.0))
+    ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                        cache_dtype="bfloat16", error_probe_every=1)
+    eng = ServingEngine(cfg, approx, ecfg, numerics=spec.name, governor=gov,
+                        pack_fn=pack_fn, fault_injector=inj)
+    reqs = [eng.submit(p, g) for p, g in trace]
+    eng.run()
+    snap = eng.metrics.snapshot()
+    assert all(r.finished for r in reqs), "governor escalation run stalled"
+    # the acceptance bar: escalation within <= 2 windows of the breach
+    assert gov.first_breach_window is not None, "injected breach not seen"
+    d0 = gov.decisions[0]
+    assert d0.action == "escalate", d0
+    assert d0.window - gov.first_breach_window <= 2, (
+        d0.window, gov.first_breach_window)
+    # the fault clears at GOV_FAULT_STOP: the governor must re-harvest
+    assert any(d.action == "relax" for d in gov.decisions), gov.decisions
+    # no corrupted emission, ever: every token a valid vocab id
+    assert all(0 <= t < cfg.vocab for r in reqs for t in r.generated)
+    switches = [d.to_dict() for d in gov.decisions]
+    assert all(s["power_delta_pct"] is not None for s in switches)
+    rows.append({
+        "name": "serve/governor/escalation",
+        "arch": ARCH,
+        "numerics_start": spec.name,
+        "numerics_final": snap["numerics"],
+        "ladder": [r.name for r in gov.ladder],
+        "scenario": (f"dense-noise fault on steps [0,{GOV_FAULT_STOP}) "
+                     f"vs slo_err_var={GOV_SLO}; probe every step, "
+                     f"{GOV_WINDOW_PROBES} probes/window"),
+        "slots": SLOTS, "max_len": MAX_LEN, "prefill_chunk": CHUNK,
+        "slo_err_var": GOV_SLO,
+        "first_breach_window": gov.first_breach_window,
+        "escalate_window": d0.window,
+        "escalate_within_windows": d0.window - gov.first_breach_window,
+        "governor_switches": snap["governor_switches"],
+        "governor_escalations": snap["governor_escalations"],
+        "governor_relaxes": snap["governor_relaxes"],
+        "faults_injected": snap["faults_injected"],
+        "switch_log": switches,
+    })
+
+    # -- part B: quarantine replay emits tokens identical to a clean run -----
+    print("[serve_bench] scenario=governor part=quarantine")
+
+    def serve_int8(injector):
+        e = ServingEngine(
+            cfg, exact,
+            EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                         cache_dtype="bfloat16"),
+            numerics="int8", fault_injector=injector)
+        rs = [e.submit(p, g) for p, g in trace]
+        e.run()
+        assert all(r.finished for r in rs), "quarantine run stalled"
+        return e, [r.generated for r in rs]
+
+    _, toks_clean = serve_int8(None)
+    inj2 = FaultInjector(FaultSpec(kind="nan", every=3, rows=2, seed=7))
+    e_inj, toks_inj = serve_int8(inj2)
+    m = e_inj.metrics
+    assert toks_clean == toks_inj, "quarantine replay diverged from clean run"
+    assert m.faults_injected > 0
+    assert m.faults_detected == m.faults_injected, (
+        m.faults_detected, m.faults_injected)
+    assert m.quarantine_replays == m.faults_detected
+    assert all(np.isfinite(t) and 0 <= t < cfg.vocab
+               for toks in toks_inj for t in toks)
+    rows.append({
+        "name": "serve/governor/quarantine",
+        "arch": ARCH,
+        "numerics": "int8",
+        "scenario": ("nan@3 step-surface injection vs uninjected run; "
+                     "token identity asserted"),
+        "slots": SLOTS, "max_len": MAX_LEN, "prefill_chunk": CHUNK,
+        "faults_injected": m.faults_injected,
+        "faults_detected": m.faults_detected,
+        "quarantines": m.quarantines,
+        "quarantine_replays": m.quarantine_replays,
+        "tokens_identical_to_clean": True,
+    })
+
+    # -- part C: governor-on/injection-off cost <= 1% gen tok/s --------------
+    print("[serve_bench] scenario=governor part=overhead")
+
+    def governed_engine():
+        g = NumericsGovernor(
+            resolve_ladder([spec, "int8", "float"], params),
+            GovernorConfig(slo_err_var=1e9))  # never breaches: cost only
+        e = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                         cache_dtype="bfloat16",
+                         error_probe_every=GOV_PROBE_EVERY)
+        return ServingEngine(cfg, approx, e, numerics=spec.name, governor=g,
+                             pack_fn=pack_fn)
+
+    def plain_engine():
+        e = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                         cache_dtype="bfloat16",
+                         error_probe_every=GOV_PROBE_EVERY)
+        return ServingEngine(cfg, approx, e, numerics=spec.name)
+
+    engines = [("governed", governed_engine()), ("plain", plain_engine())]
+    for _, e in engines:  # warm both compiled shapes
+        e.submit(list(range(1, 9)), 2)
+        e.run()
+
+    def one_pass(label, e):
+        return _run_mixed_load(cfg, e, label,
+                               resident_gen=TRACE_RESIDENT_GEN,
+                               inject_gen=TRACE_INJECT_GEN)
+
+    for label, e in engines:
+        one_pass(label, e)  # unrecorded warmup pair
+    best: dict[str, dict] = {}
+    for i in range(max(reps, 1) * GOV_PASSES):
+        order = engines if i % 2 == 0 else engines[::-1]
+        for label, e in order:
+            s = one_pass(label, e)
+            if (label not in best
+                    or s["gen_tok_per_s"] > best[label]["gen_tok_per_s"]):
+                best[label] = s
+    assert best["governed"]["governor_switches"] == 0, (
+        "overhead part must measure a quiescent governor")
+    overhead = round(
+        (best["plain"]["gen_tok_per_s"] - best["governed"]["gen_tok_per_s"])
+        / best["plain"]["gen_tok_per_s"] * 100, 2)
+    print(f"[serve_bench] governor overhead: {overhead}% gen tok/s "
+          f"(best governed {best['governed']['gen_tok_per_s']:.1f} vs plain "
+          f"{best['plain']['gen_tok_per_s']:.1f})")
+    assert overhead <= 1.0, (
+        f"quiescent governor costs {overhead}% gen tok/s (bar: 1%)")
+    for label, _ in engines:
+        s = best[label]
+        rows.append({
+            "name": f"serve/governor/overhead-{label}",
+            "arch": ARCH,
+            "numerics": s["numerics"],
+            "governed": label == "governed",
+            "scenario": ("mixed-load workload, probe every "
+                         f"{GOV_PROBE_EVERY} steps on BOTH sides; governor "
+                         "attached but quiescent (slo never breached) vs "
+                         "none"),
+            "slots": SLOTS, "max_len": MAX_LEN, "prefill_chunk": CHUNK,
+            "gen_tok_per_s": s["gen_tok_per_s"],
+            "total_tok_per_s": s["total_tok_per_s"],
+            "itl_p50_s": s["itl_p50_s"],
+            **({"overhead_pct_vs_plain": overhead}
+               if label == "governed" else {}),
+        })
+    return rows
+
+
 def _run_throughput(reps: int = REPEATS) -> list[dict]:
     from repro.configs import get_config
     from repro.launch.serve import ServeConfig, build_serving_params
@@ -575,23 +794,26 @@ def _run_throughput(reps: int = REPEATS) -> list[dict]:
 
 def run(reps: int = REPEATS, mixed_load_only: bool = False,
         paged_only: bool = False, telemetry_only: bool = False,
-        speculative_only: bool = False, write: bool = True) -> list[dict]:
+        speculative_only: bool = False, governor_only: bool = False,
+        write: bool = True) -> list[dict]:
     """Full bench: throughput modes + mixed-load stall scenario +
-    shared-prefix fleet + speculative decode, persisted to
-    BENCH_serve.json.  This is the entry the benchmarks.run harness calls;
-    ``mixed_load_only``/``paged_only``/``telemetry_only``/
-    ``speculative_only`` are the CI-smoke subsets (which never rewrite the
-    persisted trajectory — they would drop the other scenarios' rows).
+    shared-prefix fleet + speculative decode + robustness governor,
+    persisted to BENCH_serve.json.  This is the entry the benchmarks.run
+    harness calls; ``mixed_load_only``/``paged_only``/``telemetry_only``/
+    ``speculative_only``/``governor_only`` are the CI-smoke subsets (which
+    never rewrite the persisted trajectory — they would drop the other
+    scenarios' rows).
 
     Every scenario that runs is logged by name, and the returned row set
     is cross-checked against the scenario list — a scenario silently
     dropping out of the bench is a hard failure, not a smaller report."""
     if sum([mixed_load_only, paged_only, telemetry_only,
-            speculative_only]) > 1:
+            speculative_only, governor_only]) > 1:
         raise SystemExit("pick one of --mixed-load-only / --paged-only / "
-                         "--telemetry-only / --speculative-only")
+                         "--telemetry-only / --speculative-only / "
+                         "--governor-only")
     subset = (mixed_load_only or paged_only or telemetry_only
-              or speculative_only)
+              or speculative_only or governor_only)
     scenarios = []
     if not subset:
         scenarios.append(("throughput", _run_throughput))
@@ -603,6 +825,8 @@ def run(reps: int = REPEATS, mixed_load_only: bool = False,
         scenarios.append(("telemetry-overhead", run_telemetry_overhead))
     if speculative_only or not subset:
         scenarios.append(("speculative", run_speculative))
+    if governor_only or not subset:
+        scenarios.append(("governor", run_governor))
     rows = []
     for name, fn in scenarios:
         print(f"[serve_bench] running scenario: {name}")
@@ -643,12 +867,17 @@ def main(argv=None) -> list[dict]:
                     help="run only the speculative-decode scenario "
                          "(approximate drafts vs plain exact decode; "
                          "CI speculative smoke)")
+    ap.add_argument("--governor-only", action="store_true",
+                    help="run only the robustness-governor scenario "
+                         "(SLO-breach escalation, quarantine identity, "
+                         "quiescent-governor overhead; CI fault smoke)")
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
     args = ap.parse_args(argv)
     return run(reps=args.reps, mixed_load_only=args.mixed_load_only,
                paged_only=args.paged_only, telemetry_only=args.telemetry_only,
                speculative_only=args.speculative_only,
+               governor_only=args.governor_only,
                write=not args.no_write)
 
 

@@ -70,6 +70,12 @@ class EngineConfig:
     #: so outputs stay bit-identical to plain exact decode.  0 disables.
     #: Requires ``ServingEngine(..., draft_params=...)``.
     speculative_k: int = 0
+    #: engine-side NaN/divergence detection on every step's consumed
+    #: logits columns: flagged rows are quarantined — KV cursor rolled
+    #: back, the step replayed on the exact pack — before any token is
+    #: emitted (repro.quant.faults).  Implied on when a fault injector is
+    #: attached; off (the default) costs nothing on the hot path.
+    detect_faults: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

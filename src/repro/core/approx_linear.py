@@ -139,7 +139,7 @@ def dense(p: Any, x: jax.Array, name: str | None = None) -> jax.Array:
     same codes: mode "observe" records the elementwise approx-vs-exact
     delta moments, mode "exact" returns the reference instead.
     """
-    from repro.quant import error_probe, observers
+    from repro.quant import error_probe, faults, observers
 
     if isinstance(p, QuantizedDense):
         probe = error_probe.active()
@@ -147,6 +147,13 @@ def dense(p: Any, x: jax.Array, name: str | None = None) -> jax.Array:
             if probe.mode == "exact":
                 return error_probe.exact_dense(p, x).astype(x.dtype)
             y = _packed_forward(p, x)
+            flt = faults.active()
+            if flt is not None:
+                # armed fault injector (repro.quant.faults): corrupt the
+                # approximate output BEFORE the delta is observed, so a
+                # degraded MAC array shows up in the probe's variance
+                y = flt.corrupt_dense(observers.current_path(),
+                                      name or "dense", y)
             probe.observe(observers.current_path(), name or "dense",
                           np.asarray(y, np.float64)
                           - np.asarray(error_probe.exact_dense(p, x),
@@ -322,7 +329,7 @@ def dense_group(g: QuantizedDenseGroup, x: jax.Array) -> dict[str, jax.Array]:
     if g.members is not None and rows < _fuse_m_min():
         return {name: dense(member, x, name=name)
                 for name, member in zip(g.names, g.members)}
-    from repro.quant import error_probe, observers
+    from repro.quant import error_probe, faults, observers
 
     probe = error_probe.active()
     if probe is not None and not isinstance(x, jax.core.Tracer):
@@ -330,6 +337,10 @@ def dense_group(g: QuantizedDenseGroup, x: jax.Array) -> dict[str, jax.Array]:
             y = error_probe.exact_dense(g, x).astype(x.dtype)
         else:
             y = _packed_forward(g, x)
+            flt = faults.active()
+            if flt is not None:
+                y = flt.corrupt_dense(observers.current_path(),
+                                      "|".join(g.names), y)
             probe.observe(observers.current_path(), "|".join(g.names),
                           np.asarray(y, np.float64)
                           - np.asarray(error_probe.exact_dense(g, x),

@@ -45,6 +45,16 @@ different numerics than it was saved with.
 ``--legacy`` keeps the old lock-step rectangular-batch loop for comparison;
 ``--spec-json FILE`` serves under a spec shipped as JSON (the same payload
 checkpoints and engine metadata carry).
+
+Robustness (PR 8): ``--governor --slo-err-var V`` attaches the accuracy-SLO
+numerics governor (repro.serving.governor) — the error probe's running
+variance estimate walks the degradation ladder CLI-spec -> int8 -> float,
+hot-swapping the live pack; ``--inject-faults KIND@EVERY[@START-STOP]``
+arms the deterministic fault injector (repro.quant.faults) and engine-side
+quarantine (NaN rows are rolled back and replayed on the exact pack, so no
+corrupted token is emitted — the run asserts it); ``--deadline-ms`` gives
+every request a latency SLO; queue-full submissions retry with exponential
+backoff (``--submit-retries``).
 """
 
 from __future__ import annotations
@@ -179,13 +189,17 @@ def _spec_from_args(args) -> NumericsSpec | None:
 
 
 def _prepare_params(cfg: ArchConfig, args):
+    """Returns ``(serving_params, label, float_params, spec)`` — the float
+    init and spec ride along so the robustness layer can build further
+    packs (governor ladder rungs, the exact quarantine-replay pack) from
+    the SAME weights."""
     api = build_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
     spec = _spec_from_args(args)
     if spec is None:
-        return params, "float"
+        return params, "float", params, None
     scfg = ServeConfig(spec=spec)
-    return build_serving_params(params, cfg, scfg), spec.name
+    return build_serving_params(params, cfg, scfg), spec.name, params, spec
 
 
 def _draft_spec_from_args(args) -> NumericsSpec:
@@ -249,9 +263,54 @@ def run_engine(args) -> dict:
     if spec_k:
         params, label, draft_params, draft_label = (
             _prepare_speculative_params(cfg, args))
+        params_float = spec = None
     else:
-        params, label = _prepare_params(cfg, args)
+        params, label, params_float, spec = _prepare_params(cfg, args)
         draft_params = draft_label = None
+
+    # -- robustness layer (repro.serving.governor / repro.quant.faults) ------
+    governor = injector = pack_fn = exact_params = None
+    probe_every = args.error_probe_every
+    if getattr(args, "governor", False):
+        if spec is None:
+            raise SystemExit(
+                "--governor needs an approximate serving spec (float serving "
+                "has nothing to degrade; speculative serving is exact "
+                "already) — pass --mode/--m, --preset, or --spec-json")
+        if args.slo_err_var is None:
+            raise SystemExit("--governor needs --slo-err-var: the logits "
+                             "error-variance ceiling the ladder enforces")
+        from repro.numerics import resolve_ladder
+        from repro.serving import GovernorConfig, NumericsGovernor
+
+        rungs: list = [spec]
+        if spec.name != "int8":
+            rungs.append("int8")
+        rungs.append("float")
+        ladder = resolve_ladder(rungs, params_float)
+        governor = NumericsGovernor(ladder, GovernorConfig(
+            slo_err_var=args.slo_err_var,
+            window_probes=args.governor_window,
+            clean_windows_to_relax=args.governor_relax_after))
+
+        def pack_fn(s, _p=params_float, _cfg=cfg):
+            if s is None:
+                return _p  # the "float" rung serves the raw init
+            return build_serving_params(_p, _cfg, ServeConfig(spec=s))
+
+        if probe_every <= 0:
+            probe_every = 4  # the governor consumes the probe; arm it
+            print(f"governor: defaulting --error-probe-every to {probe_every}")
+    if getattr(args, "inject_faults", None):
+        from repro.quant.faults import FaultInjector, FaultSpec
+
+        injector = FaultInjector(
+            FaultSpec.parse(args.inject_faults, seed=args.fault_seed))
+        if injector.spec.surface == "step" and label != "int8":
+            # quarantine replays must run an exact pack; int8 IS exact
+            exact_params = build_serving_params(
+                params_float, cfg, ServeConfig(spec=get_preset("int8")))
+
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.chunk, cache_dtype=args.cache_dtype,
                         mixed_batches=not args.no_mixed,
@@ -261,10 +320,13 @@ def run_engine(args) -> dict:
                         prefix_cache=not args.no_prefix_cache,
                         trace=bool(args.trace_out),
                         metrics_window_s=args.metrics_window,
-                        error_probe_every=args.error_probe_every,
-                        speculative_k=spec_k)
+                        error_probe_every=probe_every,
+                        speculative_k=spec_k,
+                        detect_faults=getattr(args, "detect_faults", False))
     eng = ServingEngine(cfg, params, ecfg, numerics=label,
-                        draft_params=draft_params, draft_numerics=draft_label)
+                        draft_params=draft_params, draft_numerics=draft_label,
+                        governor=governor, pack_fn=pack_fn,
+                        fault_injector=injector, exact_params=exact_params)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
           f"kv={ecfg.cache_dtype} mixed={ecfg.mixed_batches} "
@@ -273,7 +335,11 @@ def run_engine(args) -> dict:
              f"prefix_cache={ecfg.prefix_cache}"
              if ecfg.kv_layout == "paged" else "")
           + (f" speculative_k={spec_k} draft={draft_label}"
-             if spec_k else ""))
+             if spec_k else "")
+          + (f" governor=[{' -> '.join(r.name for r in governor.ladder)}] "
+             f"slo_err_var={args.slo_err_var}" if governor else "")
+          + (f" inject={injector.spec.kind}@{injector.spec.every} "
+             f"seed={injector.spec.seed}" if injector else ""))
 
     trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
     if args.shared_prefix_pair:
@@ -297,10 +363,24 @@ def run_engine(args) -> dict:
                             * ecfg.kv_block_size, len(shared) - 1)
             assert hit.prefix_hit_tokens >= shareable, (
                 hit.prefix_hit_tokens, shareable)
+    deadline = args.deadline_ms if getattr(args, "deadline_ms", 0) else None
     for prompt, gen in trace:
-        r = eng.submit(prompt, gen)
+        r = eng.submit(prompt, gen, deadline_ms=deadline)
+        # bounded retry with exponential backoff for QUEUE-FULL rejections
+        # only: a full queue is transient (steps drain it), every other
+        # reject reason (capacity, validation) is permanent for this job
+        attempt = 0
+        while (r.state.value == "rejected"
+               and (r.reject_reason or "").startswith("queue full")
+               and attempt < args.submit_retries):
+            for _ in range(2 ** attempt):  # backoff unit = one engine step
+                eng.step()
+            attempt += 1
+            eng.metrics.requests_retried += 1
+            r = eng.submit(prompt, gen, deadline_ms=deadline)
         if r.state.value == "rejected":
-            print(f"  request {r.rid} rejected: {r.reject_reason}")
+            print(f"  request {r.rid} rejected: {r.reject_reason}"
+                  + (f" (after {attempt} retries)" if attempt else ""))
     finished = eng.run()
     snap = eng.metrics.snapshot()
     print(f"finished {len(finished)}/{len(trace)} requests, "
@@ -315,6 +395,30 @@ def run_engine(args) -> dict:
         print(f"  speculative: acceptance_rate={acc} "
               f"drafted={snap['drafted_tokens']} "
               f"accepted={snap['accepted_draft_tokens']}")
+    if injector is not None:
+        m = eng.metrics
+        print(f"  faults: injected={m.faults_injected} "
+              f"detected={m.faults_detected} quarantines={m.quarantines} "
+              f"replays={m.quarantine_replays}")
+        if injector.spec.surface == "step":
+            # the no-corrupted-emission contract: every injected row was
+            # caught, rolled back, and replayed on the exact pack
+            assert m.faults_detected >= m.faults_injected, (
+                m.faults_detected, m.faults_injected)
+            assert m.quarantine_replays == m.faults_detected
+            assert all(0 <= t < cfg.vocab for r in finished
+                       for t in r.generated), "corrupted token emitted"
+    if governor is not None:
+        print(f"  governor: rung={eng.numerics} "
+              f"switches={eng.metrics.governor_switches} "
+              f"(escalate {eng.metrics.governor_escalations} / "
+              f"relax {eng.metrics.governor_relaxes})")
+        for d in governor.decisions:
+            dd = d.to_dict()
+            print(f"    window {dd['window']}: {dd['action']} "
+                  f"{dd['from']} -> {dd['to']} [{dd['reason']}] "
+                  f"err_var={dd['err_var']} "
+                  f"power_delta={dd['power_delta_pct']}%")
     print(json.dumps(snap, indent=2))
     if args.trace_out:
         eng.tracer.write(args.trace_out)
@@ -329,7 +433,7 @@ def run_engine(args) -> dict:
 
 def run_legacy(args) -> None:
     cfg = get_config(args.arch)
-    params, label = _prepare_params(cfg, args)
+    params, label, _, _ = _prepare_params(cfg, args)
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)))
     max_len = args.prompt_len + args.gen
@@ -493,6 +597,47 @@ def main(argv=None) -> None:
                     help="every N engine steps re-run one scheduled batch "
                          "row through the exact-int8 path and record "
                          "approx-vs-exact error moments (0 disables)")
+    # robustness (repro.serving.governor / repro.quant.faults)
+    ap.add_argument("--governor", action="store_true",
+                    help="attach the accuracy-SLO numerics governor: the "
+                         "error probe's running variance estimate walks the "
+                         "degradation ladder (CLI spec -> int8 -> float), "
+                         "hot-swapping the live pack on breach and relaxing "
+                         "back after clean windows")
+    ap.add_argument("--slo-err-var", type=float, default=None, metavar="VAR",
+                    help="accuracy SLO: max acceptable running logits "
+                         "error variance (approx vs exact; required with "
+                         "--governor)")
+    ap.add_argument("--governor-window", type=int, default=4,
+                    metavar="PROBES",
+                    help="probe reports per governor window (count-based, "
+                         "deterministic)")
+    ap.add_argument("--governor-relax-after", type=int, default=3,
+                    metavar="WINDOWS",
+                    help="consecutive clean windows before relaxing one "
+                         "rung back down")
+    ap.add_argument("--inject-faults", default=None, metavar="SPEC",
+                    help="deterministic fault injection, as "
+                         "KIND@EVERY[@START-STOP] with KIND in nan|inf|"
+                         "spike|dense-noise (e.g. 'nan@8', "
+                         "'dense-noise@2@10-50'); step-surface kinds "
+                         "corrupt served logits and must be fully "
+                         "quarantined (asserted), dense-noise corrupts the "
+                         "probe's observation and drives the governor")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault injector RNG seed (same seed = same "
+                         "injected steps and rows)")
+    ap.add_argument("--detect-faults", action="store_true",
+                    help="engine-side NaN/divergence detection + "
+                         "quarantine even without an injector")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request latency SLO in ms from submission "
+                         "(0 = none); expired queued requests are purged, "
+                         "running ones stop with finish_reason 'deadline'")
+    ap.add_argument("--submit-retries", type=int, default=3, metavar="N",
+                    help="bounded retry budget for queue-full submissions "
+                         "(exponential backoff in engine steps: 1, 2, 4 "
+                         "... steps drained between attempts)")
     # legacy path knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

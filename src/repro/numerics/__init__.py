@@ -14,6 +14,8 @@ object travels in checkpoints, CLI flags, and engine metadata.  See
 docs/numerics.md for the worked example.
 """
 
+from repro.numerics.ladder import (DEFAULT_LADDER, LadderRung, ladder_spec,
+                                   resolve_ladder)
 from repro.numerics.plan import PackPlan, PlanEntry, apply_numerics
 from repro.numerics.presets import (PRESETS, SERVE_FLOAT_RULES, get_preset,
                                     paper_grid_specs, uniform_spec)
@@ -30,6 +32,10 @@ __all__ = [
     "PackPlan",
     "PlanEntry",
     "apply_numerics",
+    "DEFAULT_LADDER",
+    "LadderRung",
+    "ladder_spec",
+    "resolve_ladder",
     "PRESETS",
     "SERVE_FLOAT_RULES",
     "get_preset",

@@ -1,0 +1,222 @@
+"""Deterministic fault injection for the approximate-matmul serving path.
+
+The governor (:mod:`repro.serving.governor`) and the engine's quarantine
+machinery exist to survive a *misbehaving approximate multiplier* — a MAC
+array drifting out of its calibrated envelope, a stuck-at bit, a transient
+upset.  Testing that story needs faults on demand, reproducibly.  This
+module provides seedable injectors with two corruption surfaces:
+
+  * **step surface** (kinds ``nan`` / ``inf`` / ``spike``): the engine
+    corrupts the *host-side logits* of deterministically chosen batch rows
+    after the jitted dispatch, modeling a transient corruption of the
+    step's output.  These are what the engine-side NaN/divergence
+    detector catches: the row is quarantined, its KV cursor rolled back,
+    and the step replayed on the exact pack before any token is emitted.
+  * **dense surface** (kind ``dense-noise``): a thread-local hook in
+    :func:`repro.core.approx_linear.dense` / ``dense_group`` adds
+    deterministic Gaussian noise to the APPROXIMATE output of packed
+    layers matching a path pattern — but only on eager probe forwards
+    (tracers are never touched, so the jitted serving step is unaffected
+    and the hook costs nothing when off, exactly like
+    :mod:`repro.quant.error_probe`).  This models a degraded MAC array as
+    the error probe observes it: the probe's approx-vs-exact delta
+    variance breaches the SLO and drives the governor's ladder.
+
+Determinism contract: row/layer choices derive from
+``np.random.default_rng((seed, step))`` — the same seed and step sequence
+injects the same faults regardless of KV layout (contiguous vs paged),
+wall time, or host.  Every injection appends to ``FaultInjector.log`` so
+tests can compare campaigns structurally.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import threading
+import zlib
+
+import numpy as np
+
+_STATE = threading.local()
+
+#: logit magnitude on the consumed column above which a row is treated as
+#: divergent even when finite (trained logits are O(10); a stuck-at-style
+#: offset spike lands far outside this)
+DIVERGENCE_ABS = 1e3
+
+KINDS = ("nan", "inf", "spike", "dense-noise")
+
+
+def active():
+    """The thread-local armed :class:`FaultInjector`, or None (the common
+    case — consulted only on eager probe forwards, never inside jit)."""
+    return getattr(_STATE, "injector", None)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault campaign.
+
+    ``kind``   — ``nan`` | ``inf`` | ``spike`` (step surface: corrupt
+                 chosen rows' logits) or ``dense-noise`` (dense surface:
+                 Gaussian noise on matching packed layers' probe outputs).
+    ``every``  — fire on engine steps where ``(step - start) % every == 0``.
+    ``start``/``stop`` — half-open step window ``[start, stop)`` the
+                 campaign is live in (``stop=None`` = forever).
+    ``rows``   — max batch rows corrupted per fired step (step surface).
+    ``scale``  — spike offset magnitude / dense-noise sigma.
+    ``layers`` — ``fnmatch`` pattern over layer paths (dense surface).
+    """
+
+    kind: str = "nan"
+    every: int = 8
+    seed: int = 0
+    start: int = 0
+    stop: int | None = None
+    rows: int = 1
+    scale: float = 1e4
+    layers: str = "*"
+
+    def __post_init__(self) -> None:
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        if self.every < 1:
+            raise ValueError(f"fault every must be >= 1, got {self.every}")
+        if self.rows < 1:
+            raise ValueError(f"fault rows must be >= 1, got {self.rows}")
+        if self.stop is not None and self.stop <= self.start:
+            raise ValueError("fault window is empty: "
+                             f"start={self.start} stop={self.stop}")
+
+    @property
+    def surface(self) -> str:
+        return "dense" if self.kind == "dense-noise" else "step"
+
+    @staticmethod
+    def parse(text: str, seed: int = 0) -> "FaultSpec":
+        """Parse the CLI form ``KIND@EVERY[@START-STOP]``.
+
+        Examples: ``nan@5`` (NaN a row every 5th step), ``spike@7@20-60``
+        (offset spikes every 7th step between steps 20 and 60),
+        ``dense-noise@1@10-30`` (probe-visible layer noise, steps 10-30).
+        """
+        parts = text.split("@")
+        if not 2 <= len(parts) <= 3:
+            raise ValueError(
+                f"fault spec {text!r} is not KIND@EVERY[@START-STOP]")
+        kind, every = parts[0], int(parts[1])
+        start, stop = 0, None
+        if len(parts) == 3:
+            lo, _, hi = parts[2].partition("-")
+            start = int(lo) if lo else 0
+            stop = int(hi) if hi else None
+        return FaultSpec(kind=kind, every=every, seed=seed,
+                         start=start, stop=stop)
+
+
+class FaultInjector:
+    """Stateful executor of one :class:`FaultSpec` campaign.
+
+    The engine owns one injector; replayed (quarantine) dispatches never
+    consult it, so a corrupted step's exact replay is always clean.
+    """
+
+    def __init__(self, spec: FaultSpec) -> None:
+        self.spec = spec
+        self.injected_steps = 0
+        self.injected_rows = 0
+        #: structural campaign record — step surface entries are
+        #: ``("step", step, kind, (rows...))``, dense surface entries
+        #: ``("dense", step, layer_key)`` — comparable across engines
+        self.log: list[tuple] = []
+        self._armed_step: int | None = None
+
+    # -- schedule ------------------------------------------------------------
+
+    def fires(self, step: int) -> bool:
+        s = self.spec
+        if step < s.start or (s.stop is not None and step >= s.stop):
+            return False
+        return (step - s.start) % s.every == 0
+
+    def _rng(self, step: int, salt: int = 0) -> np.random.Generator:
+        return np.random.default_rng((self.spec.seed, step, salt))
+
+    def plan_rows(self, step: int, live_rows) -> list[int]:
+        """Deterministic subset of live batch rows to corrupt this step."""
+        live = sorted(int(r) for r in live_rows)
+        if not live:
+            return []
+        k = min(self.spec.rows, len(live))
+        picked = self._rng(step).choice(len(live), size=k, replace=False)
+        return sorted(live[int(i)] for i in picked)
+
+    # -- step surface (host-side logits corruption) --------------------------
+
+    def corrupt_logits(self, step: int, logits, rows: list[int]) -> np.ndarray:
+        """Return a corrupted host copy of ``logits`` (slots, cols, vocab)
+        with the chosen rows overwritten per the campaign kind."""
+        lg = np.array(logits)  # host copy; the device value is untouched
+        s = self.spec
+        for r in rows:
+            if s.kind == "nan":
+                lg[r] = np.nan
+            elif s.kind == "inf":
+                lg[r] = np.inf
+            else:  # spike: stuck-at-style constant offset, still finite
+                lg[r] = lg[r] + s.scale
+        self.injected_steps += 1
+        self.injected_rows += len(rows)
+        self.log.append(("step", step, s.kind, tuple(rows)))
+        return lg
+
+    # -- dense surface (probe-forward hook) ----------------------------------
+
+    @contextlib.contextmanager
+    def armed(self, step: int):
+        """Arm the thread-local hook for one probe forward.  No-op (but
+        still a valid context) when the campaign does not fire on
+        ``step`` or is not dense-surface."""
+        if self.spec.surface != "dense" or not self.fires(step):
+            yield self
+            return
+        if active() is not None:
+            raise RuntimeError("nested FaultInjector arming")
+        _STATE.injector = self
+        self._armed_step = step
+        try:
+            yield self
+        finally:
+            _STATE.injector = None
+            self._armed_step = None
+
+    def corrupt_dense(self, path: str, name: str, y):
+        """Called from the dense() probe hook: add deterministic Gaussian
+        noise to a matching packed layer's approximate output."""
+        key = f"{path}/{name}" if path else name
+        if not fnmatch.fnmatch(key, self.spec.layers):
+            return y
+        step = self._armed_step or 0
+        rng = self._rng(step, salt=zlib.crc32(key.encode()))
+        noise = rng.normal(0.0, self.spec.scale, np.shape(y))
+        self.injected_rows += 1
+        self.log.append(("dense", step, key))
+        return y + np.asarray(noise, np.asarray(y).dtype)
+
+
+def suspect_rows(cols: np.ndarray) -> np.ndarray:
+    """Boolean mask over rows of ``cols`` (rows, vocab) — each row's
+    consumed logits column — flagging non-finite or divergent rows.
+
+    This is the engine-side detection predicate: it runs on values the
+    postprocess already pulls to the host, so detection adds no device
+    round-trip beyond the gather.
+    """
+    cols = np.asarray(cols, np.float32)
+    finite = np.isfinite(cols)
+    nonfinite = ~finite.all(axis=-1)
+    magnitude = np.abs(np.where(finite, cols, 0.0)).max(axis=-1)
+    return nonfinite | (magnitude > DIVERGENCE_ABS)

@@ -67,11 +67,23 @@ KV memory models (``EngineConfig.kv_layout``):
     prefill.  Token-identical to the contiguous path by construction (the
     step gathers blocks into the same contiguous view).
 
+The robustness layer (:mod:`repro.serving.governor` +
+:mod:`repro.quant.faults`) makes the paper's accuracy bound an *enforced*
+SLO: the error probe's running variance estimate drives a governor that
+walks a degradation ladder of NumericsSpecs (hot-swapping the live pack),
+engine-side NaN/divergence detection quarantines corrupted rows — KV
+cursor rollback + exact-pack replay, so no corrupted token is ever
+emitted — and per-request deadlines bound queue and serving latency
+(finish_reason ``"deadline"``).  See docs/serving.md "Failure modes &
+graceful degradation".
+
 Follow-ons tracked in ROADMAP.md: ring-buffer and SSM slot state (hymba),
 paged-gather Pallas kernel, multi-host request routing.
 """
 
 from repro.serving.engine import ServingEngine
+from repro.serving.governor import (GovernorConfig, GovernorDecision,
+                                    NumericsGovernor)
 from repro.serving.kv_pool import SlotPool
 from repro.serving.metrics import EngineMetrics
 from repro.serving.paged import (BlockAllocator, BlockTable, PagedKVPool,
@@ -87,6 +99,9 @@ __all__ = [
     "SpanEvent",
     "SpanTracer",
     "ServingEngine",
+    "GovernorConfig",
+    "GovernorDecision",
+    "NumericsGovernor",
     "SlotPool",
     "BlockAllocator",
     "BlockTable",

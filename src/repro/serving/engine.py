@@ -78,7 +78,9 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = EngineConfig(),
                  mesh=None, api: ModelApi | None = None,
                  numerics: str | None = None,
-                 draft_params=None, draft_numerics: str | None = None) -> None:
+                 draft_params=None, draft_numerics: str | None = None,
+                 governor=None, pack_fn: Callable | None = None,
+                 fault_injector=None, exact_params=None) -> None:
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -159,6 +161,44 @@ class ServingEngine:
 
             self._probe = ErrorProbe(self.api.decode_slots, mesh=mesh,
                                      paged=self._paged)
+        # -- robustness layer (repro.serving.governor / repro.quant.faults) --
+        # ``governor``: a NumericsGovernor walking the degradation ladder on
+        # SLO breaches; ``pack_fn(spec_or_none) -> params`` builds the pack
+        # for a rung on first use (cached per rung name).  ``fault_injector``
+        # corrupts deterministically for testing; ``exact_params`` (optional)
+        # is the pack quarantine replays run on (defaults to the live pack —
+        # correct when the live pack IS exact, e.g. int8 serving).
+        self.governor = governor
+        self._pack_fn = pack_fn
+        self._injector = fault_injector
+        self._exact_params = exact_params
+        self._detect = fault_injector is not None or ecfg.detect_faults
+        self._rung_packs: dict = {}
+        #: structural record of quarantine replays: {rid, slot, step, token}
+        self.quarantine_log: list[dict] = []
+        if governor is not None:
+            if pack_fn is None:
+                raise ValueError(
+                    "a governor needs pack_fn: called with a rung's "
+                    "NumericsSpec (or None for float) to build the pack it "
+                    "hot-swaps in — see repro.launch.serve for the "
+                    "build_serving_params closure")
+            if ecfg.error_probe_every <= 0:
+                raise ValueError(
+                    "the governor consumes the error probe; set "
+                    "EngineConfig.error_probe_every > 0")
+            if self._spec_k:
+                raise ValueError(
+                    "governor + speculative decode is unsupported: "
+                    "speculation already pins every emitted token to the "
+                    "exact pack, so there is no approximate emission for "
+                    "an SLO to govern")
+            # the live params ARE the starting rung's pack
+            self._rung_packs[governor.rung.name] = params
+        if fault_injector is not None and self._spec_k:
+            raise ValueError(
+                "fault injection targets the plain serving path; the "
+                "speculative path's emissions are exact-verified already")
         self.active: dict[int, Request] = {}
         self._rid = itertools.count()
         decode_slots = self.api.decode_slots
@@ -190,7 +230,8 @@ class ServingEngine:
 
     def submit(self, prompt, max_new_tokens: int, priority: int = 0,
                eos_id: int | None = None,
-               on_token: Callable | None = None) -> Request:
+               on_token: Callable | None = None,
+               deadline_ms: float | None = None) -> Request:
         """Admission-checked enqueue; returns the Request (maybe REJECTED).
 
         A request returned as QUEUED can still become REJECTED later: a
@@ -199,7 +240,8 @@ class ServingEngine:
         ``state == REJECTED`` as terminal alongside ``finished``."""
         req = Request(rid=next(self._rid), prompt=[int(t) for t in prompt],
                       max_new_tokens=int(max_new_tokens), priority=priority,
-                      eos_id=eos_id, on_token=on_token)
+                      eos_id=eos_id, on_token=on_token,
+                      deadline_ms=deadline_ms)
         self.metrics.submitted += 1
         tr = self.tracer
         ok, reason, evicted = self.admission.admit(self.queue, req)
@@ -233,8 +275,12 @@ class ServingEngine:
         return not self.active and not len(self.queue)
 
     def step(self) -> list[Request]:
-        """One engine iteration; returns requests that finished in it."""
+        """One engine iteration; returns requests that finished in it
+        (including queued requests evicted by an expired deadline — they
+        are terminal without ever touching a slot)."""
         tr = self.tracer
+        expired = self.scheduler.purge_expired(self.queue, self.metrics,
+                                               tracer=tr)
         admitted = self.scheduler.admit(self.queue, self.pool, self.active,
                                         self.metrics, tracer=tr)
         for r in admitted:
@@ -253,11 +299,11 @@ class ServingEngine:
             rnd = speculative.plan_round(self.active, self._spec_k,
                                          self.ecfg.prefill_chunk)
             if rnd is None:
-                return []
-            return self._speculative_step(rnd)
+                return expired
+            return expired + self._speculative_step(rnd)
         batch = self.scheduler.next_batch(self.active)
         if batch is None:
-            return []
+            return expired
         # arm the throughput clock BEFORE the dispatch: warmup between
         # construction and the first served batch stays excluded, but the
         # first measured step's own wall time is inside the window
@@ -279,7 +325,26 @@ class ServingEngine:
         self.pool.update(new_cache)
         if self._paged:
             self.pool.advance(batch.n_valid)
-        finished, emitted, prompt_toks = self._postprocess(batch, logits)
+        # fault injection (step surface): corrupt chosen rows' logits on
+        # the host, modeling a transient corruption of the step's output;
+        # the detector below must catch every one before emission
+        if (self._injector is not None
+                and self._injector.spec.surface == "step"
+                and self._injector.fires(self._steps)):
+            live = [r.slot for r in batch.rows
+                    if batch.n_valid[r.slot] > 0]
+            bad_rows = self._injector.plan_rows(self._steps, live)
+            if bad_rows:
+                logits = self._injector.corrupt_logits(self._steps, logits,
+                                                       bad_rows)
+                self.metrics.faults_injected += len(bad_rows)
+        pp_batch, q_finished, q_emitted, q_prompt = (
+            self._quarantine(batch, logits, tables) if self._detect
+            else (batch, [], 0, 0))
+        finished, emitted, prompt_toks = self._postprocess(pp_batch, logits)
+        finished += q_finished
+        emitted += q_emitted
+        prompt_toks += q_prompt
         if tr is not None:
             t1 = time.perf_counter()
             for r, kind in zip(batch.rows, batch.row_kinds):
@@ -297,7 +362,88 @@ class ServingEngine:
         if (self._probe is not None
                 and self._steps % self.ecfg.error_probe_every == 0):
             self._run_probe(batch, cache_before, tables)
-        return finished
+        return expired + finished
+
+    # -- fault detection & quarantine (repro.quant.faults) -------------------
+
+    def _quarantine(self, batch: ScheduledBatch, logits,
+                    tables) -> tuple[ScheduledBatch, list[Request], int, int]:
+        """Detect corrupted rows in this step's logits; quarantine them.
+
+        Detection reads each live row's consumed column (``n_valid - 1``)
+        and flags non-finite or divergent values
+        (:func:`repro.quant.faults.suspect_rows`).  A flagged row's KV
+        cursor rolls back to its pre-step value (``set_lengths`` — a pure
+        cursor move on both layouts, PR 7's rollback primitive) and the
+        row REPLAYS through the exact pack with the injector never
+        consulted, so the corrupted logits are discarded before any token
+        is emitted.  Returns the cleaned batch (flagged rows removed) and
+        the replay's ``(finished, emitted, prompt_tokens)``.
+        """
+        from repro.quant import faults
+
+        nv = np.asarray(batch.n_valid)
+        live = [(r, k) for r, k in zip(batch.rows, batch.row_kinds)
+                if nv[r.slot] > 0]
+        if not live:
+            return batch, [], 0, 0
+        lg = np.asarray(logits)
+        cols = np.maximum(nv - 1, 0)
+        picked = lg[np.arange(lg.shape[0]), cols]  # (slots, vocab)
+        slots = np.array([r.slot for r, _ in live])
+        mask = faults.suspect_rows(picked[slots])
+        if not mask.any():
+            return batch, [], 0, 0
+        bad = [live[i] for i in np.nonzero(mask)[0]]
+        bad_slots = {r.slot for r, _ in bad}
+        tr = self.tracer
+        self.metrics.faults_detected += len(bad)
+        if tr is not None:
+            for r, _ in bad:
+                tr.record("fault_detected", rid=r.rid, slot=r.slot,
+                          step=self._steps)
+        if self.governor is not None:
+            # a detected fault is an unbounded-variance observation: the
+            # governor escalates immediately, no window arithmetic
+            self._apply_decision(self.governor.note_fault())
+        # roll the flagged slots' cursors back to their pre-step values
+        # (post-step length = pre-step + n_valid on both layouts)
+        cur = np.array(self.pool.lengths())  # lengths() can be a read-only
+        for r, _ in bad:                     # view of the device array
+            cur[r.slot] -= int(nv[r.slot])
+        self.pool.set_lengths(cur)
+        # replay ONLY the flagged rows on the exact pack; same batch shape,
+        # so the jit cache grows by at most one (params structure) entry
+        rep_nv = np.zeros_like(nv)
+        for r, _ in bad:
+            rep_nv[r.slot] = nv[r.slot]
+        rep_batch = ScheduledBatch(batch.kind, batch.tokens, rep_nv,
+                                   [r for r, _ in bad], [k for _, k in bad])
+        rep_params = (self._exact_params if self._exact_params is not None
+                      else self.params)
+        rep_logits, rep_cache = self._dispatch(rep_params, rep_batch, tables)
+        self.pool.update(rep_cache)
+        if self._paged:
+            self.pool.advance(rep_nv)
+        self.metrics.quarantines += len(bad)
+        self.metrics.quarantine_replays += len(bad)
+        finished, emitted, prompt_toks = self._postprocess(rep_batch,
+                                                           rep_logits)
+        for r, _ in bad:
+            tok = r.generated[-1] if r.generated else None
+            self.quarantine_log.append({"rid": r.rid, "slot": r.slot,
+                                        "step": self._steps, "token": tok})
+            if tr is not None:
+                tr.record("quarantine", rid=r.rid, slot=r.slot,
+                          step=self._steps, replayed=int(rep_nv[r.slot]))
+        clean_nv = np.array(nv, copy=True)
+        clean_nv[list(bad_slots)] = 0
+        clean = ScheduledBatch(
+            batch.kind, batch.tokens, clean_nv,
+            [r for r in batch.rows if r.slot not in bad_slots],
+            [k for r, k in zip(batch.rows, batch.row_kinds)
+             if r.slot not in bad_slots])
+        return clean, finished, emitted, prompt_toks
 
     def _dispatch(self, params, batch: ScheduledBatch, tables):
         """Run the jitted slot step under the given parameter set.
@@ -455,6 +601,10 @@ class ServingEngine:
                     self.pool.register_prefix(r.slot, r.prompt_len,
                                               r.prefilled)
                 if r.prefilled < r.prompt_len:
+                    if r.deadline_expired:
+                        r.finish_reason = "deadline"
+                        self.metrics.requests_deadline_expired += 1
+                        finished.append(self._finish(r))
                     continue
                 r.state = RequestState.DECODE
                 self._emit_row(r, int(toks[r.slot, n - 1]), finished,
@@ -481,9 +631,24 @@ class ServingEngine:
                    tables) -> None:
         """One approximation-error probe against the batch the engine just
         served: the pre-step cache reference reproduces the row's forward
-        (JAX arrays are immutable, so holding it is free)."""
-        report = self._probe.run(self.params, batch.tokens, batch.n_valid,
-                                 cache_before, block_tables=tables)
+        (JAX arrays are immutable, so holding it is free).
+
+        A dense-surface fault injector arms its thread-local hook around
+        the probe's observe forward — a degraded MAC array corrupts what
+        the probe measures, which is exactly how the governor sees it —
+        and the report feeds the governor's running SLO estimate."""
+        inj = self._injector
+        if inj is not None and inj.spec.surface == "dense":
+            log0 = len(inj.log)
+            with inj.armed(self._steps):
+                report = self._probe.run(self.params, batch.tokens,
+                                         batch.n_valid, cache_before,
+                                         block_tables=tables)
+            self.metrics.faults_injected += len(inj.log) - log0
+        else:
+            report = self._probe.run(self.params, batch.tokens,
+                                     batch.n_valid, cache_before,
+                                     block_tables=tables)
         if report is None:
             return
         rid = next((r.rid for r in batch.rows if r.slot == report["row"]),
@@ -497,6 +662,37 @@ class ServingEngine:
                 logits_err_max_abs=report["logits"]["max_abs"],
                 mean_layer_err_var=(sum(lvars) / len(lvars)
                                     if lvars else 0.0))
+        if self.governor is not None:
+            self._apply_decision(self.governor.observe_probe(report))
+
+    # -- governor execution (repro.serving.governor) -------------------------
+
+    def _apply_decision(self, decision) -> None:
+        """Execute one governor ladder move: hot-swap the live pack.
+
+        Rung packs build lazily through ``pack_fn`` and cache per rung
+        name, so an escalate/relax cycle packs each rung once.  The swap
+        is a Python attribute assignment — the next dispatch traces the
+        new parameter structure (one extra jit cache entry per rung, both
+        batch shapes), every request's KV carries over untouched."""
+        if decision is None:
+            return
+        rung = self.governor.rung
+        pack = self._rung_packs.get(rung.name)
+        if pack is None:
+            pack = self._pack_fn(rung.spec)
+            self._rung_packs[rung.name] = pack
+        self.params = pack
+        self.numerics = rung.name
+        self.metrics.numerics = rung.name
+        self.metrics.governor_switches += 1
+        if decision.action == "escalate":
+            self.metrics.governor_escalations += 1
+        else:
+            self.metrics.governor_relaxes += 1
+        if self.tracer is not None:
+            self.tracer.record("governor_switch", step=self._steps,
+                               **decision.to_dict())
 
     def _windowed_block_stats(self) -> dict:
         """Pool block stats with the cumulative counters rebased to the
@@ -578,6 +774,12 @@ class ServingEngine:
                     self.pool.register_prefix(r.slot, r.prompt_len,
                                               r.prefilled)
                 if r.prefilled < r.prompt_len:
+                    if r.deadline_expired:
+                        # blown mid-prompt: no first token can meet the
+                        # SLO — stop before spending more prefill compute
+                        r.finish_reason = "deadline"
+                        self.metrics.requests_deadline_expired += 1
+                        finished.append(self._finish(r))
                     continue
                 # prompt complete: its last token's logits seed generation
                 r.state = RequestState.DECODE
@@ -598,9 +800,14 @@ class ServingEngine:
 
     def _done(self, r: Request, tok: int) -> bool:
         """Stop check; records ``finish_reason`` at the moment it fires.
-        The length budget takes precedence: a final greedy token that
-        merely coincides with ``eos_id`` on the budget's last step is
-        still a length stop."""
+        Precedence: deadline > length > eos.  A blown deadline is the
+        request's SLO verdict regardless of what the token says; within
+        budget, the length stop takes precedence over an ``eos_id``
+        coincidence on the budget's last step (as before)."""
+        if r.deadline_expired:
+            r.finish_reason = "deadline"
+            self.metrics.requests_deadline_expired += 1
+            return True
         if len(r.generated) >= r.max_new_tokens:
             r.finish_reason = "length"
             return True

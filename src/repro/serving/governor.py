@@ -1,0 +1,208 @@
+"""Accuracy-SLO numerics governor: adaptive approximation under a live
+error budget.
+
+The paper's deployment premise is that approximate multipliers stay
+inside a bounded accuracy cost — but the deployed CV constants are
+calibration-time, and a drifting MAC array (or a miscalibrated spec) can
+silently blow the budget at serving time.  The governor turns the PR 6
+error probe into an *enforced* SLO:
+
+  * every probe report's logits moments fold into the current **window**
+    (a fixed count of probe runs, so windows are deterministic and
+    layout-independent);
+  * closed windows Chan-merge (:func:`repro.serving.metrics._merge_moments`)
+    into a bounded history — the **running variance estimate** the SLO is
+    checked against, exactly the fleet-merge arithmetic applied in time
+    instead of across engines;
+  * a breach **escalates** one rung up the degradation ladder
+    (:mod:`repro.numerics.ladder`; e.g. perforated-m2-cv -> int8 ->
+    float), a detected fault (NaN = unbounded variance) escalates
+    immediately without waiting for the window;
+  * after ``clean_windows_to_relax`` consecutive windows comfortably
+    under the SLO the governor **relaxes** one rung back down to
+    re-harvest power.
+
+The governor itself is engine-agnostic pure bookkeeping: it consumes
+probe reports and returns :class:`GovernorDecision`\\ s; the engine
+executes them by hot-swapping the live pack (``apply_numerics`` of the
+rung's spec) and records a ``governor_switch`` span carrying the
+cost-model power delta.  History resets on every switch — the estimate
+must describe the *current* rung, not a mixture of regimes.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+from repro.numerics.ladder import LadderRung
+from repro.serving.metrics import _merge_moments
+
+__all__ = ["GovernorConfig", "GovernorDecision", "NumericsGovernor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    """Accuracy-SLO policy knobs.
+
+    ``slo_err_var``   — max acceptable running logits err-var (the probe's
+                        approx-vs-exact delta variance).
+    ``window_probes`` — probe reports per governor window (count-based, so
+                        window boundaries are deterministic).
+    ``history_windows`` — closed windows Chan-merged into the running
+                        estimate (bounded; resets on every switch).
+    ``clean_windows_to_relax`` — consecutive clean windows required before
+                        stepping back down the ladder.
+    ``relax_headroom`` — a window only counts as *clean* when its running
+                        estimate is under ``relax_headroom * slo_err_var``
+                        (hysteresis: relaxing at 0.99x the SLO would
+                        oscillate).
+    """
+
+    slo_err_var: float
+    window_probes: int = 4
+    history_windows: int = 8
+    clean_windows_to_relax: int = 3
+    relax_headroom: float = 0.25
+
+    def __post_init__(self) -> None:
+        if self.slo_err_var <= 0:
+            raise ValueError(
+                f"slo_err_var must be > 0, got {self.slo_err_var}")
+        if self.window_probes < 1:
+            raise ValueError(
+                f"window_probes must be >= 1, got {self.window_probes}")
+        if self.clean_windows_to_relax < 1:
+            raise ValueError("clean_windows_to_relax must be >= 1, got "
+                             f"{self.clean_windows_to_relax}")
+        if not 0 < self.relax_headroom <= 1:
+            raise ValueError("relax_headroom must be in (0, 1], got "
+                             f"{self.relax_headroom}")
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorDecision:
+    """One ladder move for the engine to execute (pack hot-swap)."""
+
+    action: str  # "escalate" | "relax"
+    reason: str  # "slo_breach" | "fault" | "clean_windows"
+    rung_from: LadderRung
+    rung_to: LadderRung
+    window: int  # windows closed when the decision fired
+    err_var: float | None  # running estimate that drove it (None: fault)
+
+    @property
+    def power_delta_pct(self) -> float:
+        """Modeled MAC-array power-saving change: negative = the switch
+        SPENDS power (escalation), positive = re-harvests it (relax)."""
+        return round(self.rung_to.power_saving_pct
+                     - self.rung_from.power_saving_pct, 2)
+
+    def to_dict(self) -> dict:
+        return {"action": self.action, "reason": self.reason,
+                "from": self.rung_from.name, "to": self.rung_to.name,
+                "window": self.window, "err_var": self.err_var,
+                "power_delta_pct": self.power_delta_pct}
+
+
+class NumericsGovernor:
+    """Pure SLO bookkeeping over probe reports for one engine."""
+
+    def __init__(self, ladder: list[LadderRung], cfg: GovernorConfig,
+                 start: int = 0) -> None:
+        if len(ladder) < 2:
+            raise ValueError("governor needs a ladder of >= 2 rungs")
+        if not 0 <= start < len(ladder):
+            raise ValueError(f"start rung {start} outside ladder of "
+                             f"{len(ladder)}")
+        self.ladder = list(ladder)
+        self.cfg = cfg
+        self.rung_idx = start
+        self.windows_closed = 0
+        self.first_breach_window: int | None = None
+        self.decisions: list[GovernorDecision] = []
+        self._history: collections.deque = collections.deque(
+            maxlen=cfg.history_windows)
+        self._win: tuple[int, float, float] = (0, 0.0, 0.0)
+        self._win_probes = 0
+        self._clean = 0
+
+    @property
+    def rung(self) -> LadderRung:
+        return self.ladder[self.rung_idx]
+
+    @property
+    def err_var_estimate(self) -> float | None:
+        """Running logits err-var over history + the open window (None
+        until any probe sample exists)."""
+        est = (0, 0.0, 0.0)
+        for m in self._history:
+            est = _merge_moments(est, m)
+        est = _merge_moments(est, self._win)
+        return est[2] if est[0] else None
+
+    # -- inputs --------------------------------------------------------------
+
+    def observe_probe(self, report: dict) -> GovernorDecision | None:
+        """Fold one error-probe report; returns a decision when it closes
+        a window that demands a switch.  Reports without logits moments
+        (or with n=0 — a zero-sample window) are exact no-ops."""
+        lg = (report or {}).get("logits")
+        if lg is None or not lg.get("n"):
+            return None
+        self._win = _merge_moments(
+            self._win, (lg["n"], lg["mean"], lg["var"]))
+        self._win_probes += 1
+        if self._win_probes < self.cfg.window_probes:
+            return None
+        return self._close_window()
+
+    def note_fault(self) -> GovernorDecision | None:
+        """A detected NaN/divergence fault: unbounded error variance —
+        escalate immediately, no window arithmetic."""
+        if self.first_breach_window is None:
+            self.first_breach_window = self.windows_closed
+        return self._switch("escalate", "fault", err_var=None)
+
+    # -- internals -----------------------------------------------------------
+
+    def _close_window(self) -> GovernorDecision | None:
+        est = self.err_var_estimate
+        self._history.append(self._win)
+        self._win = (0, 0.0, 0.0)
+        self._win_probes = 0
+        self.windows_closed += 1
+        if est is None:
+            return None
+        if est > self.cfg.slo_err_var:
+            if self.first_breach_window is None:
+                self.first_breach_window = self.windows_closed - 1
+            self._clean = 0
+            return self._switch("escalate", "slo_breach", err_var=est)
+        if est <= self.cfg.relax_headroom * self.cfg.slo_err_var:
+            self._clean += 1
+            if self._clean >= self.cfg.clean_windows_to_relax:
+                return self._switch("relax", "clean_windows", err_var=est)
+        else:
+            # inside the hysteresis band: neither a breach nor clean
+            self._clean = 0
+        return None
+
+    def _switch(self, action: str, reason: str,
+                err_var: float | None) -> GovernorDecision | None:
+        step = 1 if action == "escalate" else -1
+        target = self.rung_idx + step
+        if not 0 <= target < len(self.ladder):
+            return None  # already at the ladder end
+        d = GovernorDecision(action=action, reason=reason,
+                             rung_from=self.ladder[self.rung_idx],
+                             rung_to=self.ladder[target],
+                             window=self.windows_closed, err_var=err_var)
+        self.rung_idx = target
+        self.decisions.append(d)
+        # new numerics regime: the running estimate must restart
+        self._history.clear()
+        self._win = (0, 0.0, 0.0)
+        self._win_probes = 0
+        self._clean = 0
+        return d

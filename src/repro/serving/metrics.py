@@ -236,6 +236,20 @@ class EngineMetrics:
     _win_t0: float | None = None
     _win_base: dict | None = None
 
+    # robustness counters (repro.serving.governor / repro.quant.faults):
+    # SLO-governor pack switches, injected/detected faults, quarantined
+    # rows replayed on the exact pack, deadline expiries, and submit-loop
+    # retries after queue-full rejections
+    governor_switches: int = 0
+    governor_escalations: int = 0
+    governor_relaxes: int = 0
+    faults_injected: int = 0
+    faults_detected: int = 0
+    quarantines: int = 0
+    quarantine_replays: int = 0
+    requests_retried: int = 0
+    requests_deadline_expired: int = 0
+
     # approximation-error probe aggregation (repro.quant.error_probe):
     # per-layer and logits-level (n, mean, var) of approximate-vs-exact
     # output deltas, combined across probe runs with Chan's formula
@@ -312,6 +326,9 @@ class EngineMetrics:
                 "draft_calls": self.draft_calls,
                 "drafted_tokens": self.drafted_tokens,
                 "accepted_draft_tokens": self.accepted_draft_tokens,
+                "governor_switches": self.governor_switches,
+                "faults_detected": self.faults_detected,
+                "quarantines": self.quarantines,
                 "_occupancy_sum": self._occupancy_sum,
                 "_queue_depth_sum": self._queue_depth_sum,
                 "_samples": self._samples,
@@ -361,6 +378,12 @@ class EngineMetrics:
             sample["acceptance_rate"] = (
                 round(d["accepted_draft_tokens"] / d["drafted_tokens"], 4)
                 if d["drafted_tokens"] else None)
+        if self.governor_switches or self.faults_detected or self.quarantines:
+            # robustness deltas appear once any governor/fault activity
+            # exists (keeps pre-governor sample schemas unchanged)
+            sample["governor_switches"] = d["governor_switches"]
+            sample["faults_detected"] = d["faults_detected"]
+            sample["quarantines"] = d["quarantines"]
         if len(self.timeseries) == self.timeseries.maxlen:
             self.timeseries_dropped += 1
         self.timeseries.append(sample)
@@ -420,6 +443,15 @@ class EngineMetrics:
             "requests_rejected": self.rejected,
             "requests_evicted": self.evicted,
             "no_capacity_stalls": self.no_capacity_stalls,
+            "governor_switches": self.governor_switches,
+            "governor_escalations": self.governor_escalations,
+            "governor_relaxes": self.governor_relaxes,
+            "faults_injected": self.faults_injected,
+            "faults_detected": self.faults_detected,
+            "quarantines": self.quarantines,
+            "quarantine_replays": self.quarantine_replays,
+            "requests_retried": self.requests_retried,
+            "requests_deadline_expired": self.requests_deadline_expired,
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "mean_block_utilization": round(
@@ -492,7 +524,11 @@ class EngineMetrics:
 
     _SUM_KEYS = (
         "engines", "requests_finished", "requests_rejected",
-        "requests_evicted", "no_capacity_stalls", "prefix_hits",
+        "requests_evicted", "no_capacity_stalls",
+        "governor_switches", "governor_escalations", "governor_relaxes",
+        "faults_injected", "faults_detected", "quarantines",
+        "quarantine_replays", "requests_retried",
+        "requests_deadline_expired", "prefix_hits",
         "prefix_hit_tokens", "prompt_tokens", "generated_tokens",
         "prefill_steps", "decode_steps", "mixed_steps", "step_samples",
         "spec_rounds", "draft_calls", "drafted_tokens",
@@ -543,13 +579,21 @@ class EngineMetrics:
             vals = [s.get(k) for s in snaps if s.get(k) is not None]
             out[k] = max(vals) if vals else None
         for k, wk in EngineMetrics._WEIGHTED_KEYS:
-            num = den = 0.0
-            for s in snaps:
-                v, w = s.get(k), s.get(wk)
-                if v is not None and w:
-                    num += v * w
-                    den += w
-            out[k] = num / den if den else None
+            pairs = [(s.get(k), s.get(wk)) for s in snaps
+                     if s.get(k) is not None and s.get(wk)]
+            if not pairs:
+                # no weighted contributor: single-engine merge must be an
+                # exact no-op, so a sole snapshot's value (e.g. the 0.0 a
+                # zero-sample snapshot reports) passes through verbatim
+                out[k] = snaps[0].get(k) if len(snaps) == 1 else None
+            elif len(pairs) == 1:
+                # one contributor: pass through exactly (v * w / w is not
+                # bit-identical to v for every float)
+                out[k] = pairs[0][0]
+            else:
+                num = sum(v * w for v, w in pairs)
+                den = sum(w for _, w in pairs)
+                out[k] = num / den
         for k in EngineMetrics._EQUAL_OR_MIXED:
             vals = {s.get(k) for s in snaps}
             out[k] = vals.pop() if len(vals) == 1 else "mixed"

@@ -38,6 +38,12 @@ class Request:
     max_new_tokens: int
     priority: int = 0  # lower = more urgent; FIFO within a class
     eos_id: int | None = None
+    #: per-request latency SLO: wall-clock budget in ms from submission.
+    #: None = no deadline.  Expired QUEUED requests are purged before
+    #: admission (finish_reason "deadline", never served); running
+    #: requests stop at the first emission/prefill boundary past the
+    #: budget (partial output kept).
+    deadline_ms: float | None = None
     #: streaming hook, called as on_token(request, token) per generated token
     on_token: Callable | None = None
 
@@ -75,6 +81,11 @@ class Request:
     @property
     def finished(self) -> bool:
         return self.state == RequestState.FINISHED
+
+    @property
+    def deadline_expired(self) -> bool:
+        return (self.deadline_ms is not None
+                and (time.time() - self.t_submit) * 1000.0 > self.deadline_ms)
 
     @property
     def ttft(self) -> float | None:
@@ -132,6 +143,19 @@ class RequestQueue:
         self._heap.pop()
         heapq.heapify(self._heap)
         return req
+
+    def purge(self, pred) -> list[Request]:
+        """Remove and return every queued request satisfying ``pred``,
+        preserving (priority, FIFO) order among the survivors.  Used for
+        deadline expiry: an expired request must not consume a slot."""
+        flagged = [bool(pred(e[2])) for e in self._heap]  # evaluate ONCE:
+        # a time-based predicate must not flip between the two passes
+        if not any(flagged):
+            return []
+        gone = [e[2] for e, f in zip(self._heap, flagged) if f]
+        self._heap = [e for e, f in zip(self._heap, flagged) if not f]
+        heapq.heapify(self._heap)
+        return gone
 
     def __len__(self) -> int:
         return len(self._heap)

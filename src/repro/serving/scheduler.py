@@ -65,6 +65,30 @@ class SlotScheduler:
 
     # -- admission -----------------------------------------------------------
 
+    def purge_expired(self, queue: RequestQueue, metrics=None,
+                      tracer=None) -> list[Request]:
+        """Evict queued requests whose deadline already passed.
+
+        They are terminal (``finish_reason = "deadline"``) without ever
+        touching a slot — admitting a request that cannot possibly answer
+        inside its latency budget only wastes prefill compute.  The engine
+        calls this before every admission pass and returns the expired
+        requests from ``step()`` so pollers observe them finishing.
+        """
+        import time
+
+        expired = queue.purge(lambda r: r.deadline_expired)
+        for r in expired:
+            r.state = RequestState.FINISHED
+            r.finish_reason = "deadline"
+            r.t_finish = time.time()
+            if metrics is not None:
+                metrics.requests_deadline_expired += 1
+            if tracer is not None:
+                tracer.record("evicted", rid=r.rid, reason="deadline",
+                              deadline_ms=r.deadline_ms)
+        return expired
+
     def admit(self, queue: RequestQueue, pool: SlotPool,
               active: dict[int, Request], metrics=None,
               tracer=None) -> list[Request]:

@@ -31,6 +31,13 @@ Span taxonomy (:data:`SPAN_KINDS`):
   * ``metrics_window``— one windowed time-series sample
     (:class:`~repro.serving.metrics.EngineMetrics`); exported as Chrome
     *counter* events so Perfetto plots the series
+  * ``governor_switch`` — the accuracy-SLO governor hot-swapped the live
+    numerics pack (:mod:`repro.serving.governor`); ``from``/``to``/
+    ``reason``/``power_delta_pct`` ride in args
+  * ``fault_detected`` — engine-side NaN/divergence detection flagged a
+    batch row before emission (:mod:`repro.quant.faults`)
+  * ``quarantine``    — a flagged row's KV cursor was rolled back and the
+    step replayed on the exact pack; ``replayed`` tokens ride in args
 
 Timestamps are ``time.perf_counter()`` (monotonic); exports rebase them to
 the tracer's construction time.  Two export formats:
@@ -69,6 +76,9 @@ SPAN_KINDS: tuple[str, ...] = (
     "verify",
     "probe",
     "metrics_window",
+    "governor_switch",
+    "fault_detected",
+    "quarantine",
 )
 
 #: request-lifecycle stages every served-to-completion request passes

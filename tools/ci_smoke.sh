@@ -59,4 +59,18 @@ python -m repro.launch.serve --engine --requests 8 \
 echo "== trace report (>=1 span per lifecycle stage asserted) =="
 python tools/trace_report.py "$TRACE_OUT" --assert-lifecycle
 
+echo "== fault-injection smoke (NaN rows injected, quarantine + exact replay asserted) =="
+FAULT_TRACE="$(mktemp -t repro_fault_trace_XXXX.jsonl)"
+trap 'rm -f "$TRACE_OUT" "$FAULT_TRACE"' EXIT
+python -m repro.launch.serve --engine --requests 6 \
+    --arch olmo-1b-reduced --preset int8 \
+    --slots 4 --max-len 64 --chunk 16 \
+    --inject-faults nan@3 --fault-seed 7 --trace-out "$FAULT_TRACE"
+
+echo "== fault trace report (quarantine spans + lifecycle with new span kinds) =="
+python tools/trace_report.py "$FAULT_TRACE" --assert-lifecycle --assert-quarantine
+
+echo "== governor serve bench (SLO breach -> ladder escalation, 1 rep) =="
+python -m benchmarks.serve_bench --governor-only --reps 1 --no-write
+
 echo "CI smoke OK"

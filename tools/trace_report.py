@@ -19,11 +19,18 @@ prints:
     the gap), capacity stalls, or scheduler idle time;
   * probe error trend — the approximation-error probe's logits/layer
     error variance over time (first vs last, min/max);
-  * windowed counters — min/median/max of the windowed gen tok/s series.
+  * windowed counters — min/median/max of the windowed gen tok/s series;
+  * robustness — governor ladder switches (from/to rung, reason, cost-model
+    power delta), detected faults, quarantine replays, and deadline
+    evictions, when the trace carries any (old traces without the PR 8
+    span kinds still load and report).
 
 ``--assert-lifecycle`` exits non-zero unless the trace holds at least one
 span of every request-lifecycle stage (queued, admitted, prefill_chunk,
 decode_step, finished) — the CI smoke's trace-integrity gate.
+``--assert-quarantine`` exits non-zero unless every ``fault_detected``
+span is matched by a ``quarantine`` span (the fault-injection smoke's
+no-corrupted-emission gate; also requires >= 1 of each).
 """
 
 from __future__ import annotations
@@ -176,6 +183,36 @@ def _probe_trend(events: list[dict]) -> dict | None:
             "logits_err_var_max": max(lv) if lv else None}
 
 
+def _robustness_summary(events: list[dict]) -> dict | None:
+    """Governor/fault/deadline activity (PR 8 span kinds).  None when the
+    trace predates them or the run had no robustness events — the report
+    stays loadable for every trace vintage."""
+    switches = [e for e in events if e["kind"] == "governor_switch"]
+    faults = sum(1 for e in events if e["kind"] == "fault_detected")
+    quars = [e for e in events if e["kind"] == "quarantine"]
+    deadline_evictions = sum(
+        1 for e in events if e["kind"] == "evicted"
+        and e["data"].get("reason") == "deadline")
+    deadline_finishes = sum(
+        1 for e in events if e["kind"] == "finished"
+        and e["data"].get("reason") == "deadline")
+    if not (switches or faults or quars or deadline_evictions
+            or deadline_finishes):
+        return None
+    return {
+        "governor_switches": [
+            {k: e["data"].get(k)
+             for k in ("step", "action", "from", "to", "reason",
+                       "err_var", "power_delta_pct")}
+            for e in switches],
+        "faults_detected": faults,
+        "quarantines": len(quars),
+        "replayed_tokens": sum(e["data"].get("replayed", 0) for e in quars),
+        "deadline_evictions": deadline_evictions,
+        "deadline_finishes": deadline_finishes,
+    }
+
+
 def _window_summary(events: list[dict]) -> dict | None:
     xs = sorted(e["data"]["gen_tok_per_s"] for e in events
                 if e["kind"] == "metrics_window"
@@ -194,7 +231,8 @@ def report(events: list[dict]) -> dict:
             "top_decode_gaps": _stall_attribution(events),
             "speculative": _speculative_summary(events),
             "probe": _probe_trend(events),
-            "windows": _window_summary(events)}
+            "windows": _window_summary(events),
+            "robustness": _robustness_summary(events)}
 
 
 def _print_human(rep: dict) -> None:
@@ -241,6 +279,19 @@ def _print_human(rep: dict) -> None:
         print(f"\nwindowed gen tok/s: {w['samples']} samples, "
               f"min {w['gen_tok_per_s_min']} / p50 {w['gen_tok_per_s_p50']} "
               f"/ max {w['gen_tok_per_s_max']}")
+    if rep["robustness"]:
+        rb = rep["robustness"]
+        print(f"\nrobustness: faults_detected={rb['faults_detected']} "
+              f"quarantines={rb['quarantines']} "
+              f"(replayed {rb['replayed_tokens']} tokens), "
+              f"deadline evictions={rb['deadline_evictions']} "
+              f"finishes={rb['deadline_finishes']}")
+        for s in rb["governor_switches"]:
+            ev = (f"{s['err_var']:.3e}" if isinstance(s["err_var"], float)
+                  else s["err_var"])
+            print(f"  step {s['step']:5}  {s['action']:8} "
+                  f"{s['from']} -> {s['to']}  [{s['reason']}]  "
+                  f"err_var={ev}  power_delta={s['power_delta_pct']}%")
 
 
 def main(argv=None) -> int:
@@ -252,6 +303,10 @@ def main(argv=None) -> int:
     ap.add_argument("--assert-lifecycle", action="store_true",
                     help="fail unless >= 1 span of every lifecycle stage "
                          f"{list(LIFECYCLE)} is present")
+    ap.add_argument("--assert-quarantine", action="store_true",
+                    help="fail unless the trace holds >= 1 fault_detected "
+                         "span and every one is matched by a quarantine "
+                         "span (the fault-injection smoke gate)")
     args = ap.parse_args(argv)
     events = load_events(args.trace)
     rep = report(events)
@@ -267,6 +322,15 @@ def main(argv=None) -> int:
             return 2
         print("\nlifecycle OK: "
               + ", ".join(f"{k}={rep['kinds'][k]}" for k in LIFECYCLE))
+    if args.assert_quarantine:
+        detected = rep["kinds"].get("fault_detected", 0)
+        quars = rep["kinds"].get("quarantine", 0)
+        if not detected or quars < detected:
+            print(f"\nFAIL: quarantine gate: fault_detected={detected} "
+                  f"quarantine={quars} (need >= 1 detection, all "
+                  "quarantined)", file=sys.stderr)
+            return 3
+        print(f"\nquarantine OK: {detected} detected, {quars} quarantined")
     return 0
 
 
