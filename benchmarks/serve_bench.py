@@ -18,7 +18,11 @@ rate alongside gen tok/s.  A GOVERNOR scenario exercises the robustness
 layer: an injected accuracy breach must escalate the numerics governor's
 degradation ladder within <= 2 windows (and relax after the fault
 clears), NaN injection must quarantine-replay to tokens identical to a
-clean run, and a quiescent governor must cost <= 1% gen tok/s.  Results
+clean run, and a quiescent governor must cost <= 1% gen tok/s.  A FLEET
+scenario serves a classed trace through a two-tier heterogeneous-numerics
+fleet (exact int8 + perforated+CV, one float init) vs monolithic
+per-tier engines, asserts request-by-request token identity, and records
+per-tier gen tok/s, TTFT, and modeled MAC-array power saving.  Results
 are also written to BENCH_serve.json at the repo root so later PRs have
 a perf trajectory to beat.
 
@@ -757,6 +761,154 @@ def run_governor(reps: int = REPEATS) -> list[dict]:
     return rows
 
 
+# -- fleet: heterogeneous-numerics tiers behind the spec-aware router --------
+#
+# A classed trace (latency chat turns + bulk long documents) served by a
+# two-tier fleet — one exact-int8 replica, one perforated+CV replica, both
+# packed from ONE float init — and by two monolithic single-tier engines.
+# Token identity is asserted request by request: a fleet request's output
+# equals the monolithic engine under the SAME tier's pack (routing must
+# change placement, never tokens).  Rows record per-tier gen tok/s, TTFT,
+# and the cost model's modeled MAC-array power saving — the deployment
+# argument in one table: the bulk tier's tokens ride the approximate
+# array's power budget while latency traffic keeps exact numerics.
+
+N_FLEET_REQUESTS = 12
+FLEET_TIERS = ("int8", "serve-default")
+
+
+def run_fleet_bench(reps: int = REPEATS) -> list[dict]:
+    from repro.configs import get_config
+    from repro.configs.base import EngineConfig
+    from repro.launch.serve import (ServeConfig, build_serving_params,
+                                    mixed_trace)
+    from repro.models import build_model
+    from repro.numerics import get_preset, resolve_ladder
+    from repro.serving import TierConfig, build_fleet
+
+    cfg = get_config(ARCH)
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    specs = {n: get_preset(n) for n in FLEET_TIERS}
+    packs = {n: build_serving_params(params, cfg, ServeConfig(spec=s))
+             for n, s in specs.items()}
+    # modeled MAC-array power saving per tier, from the same cost model
+    # the governor ladder prices switches with (each tier priced against
+    # the float anchor — the tiers are alternatives, not one ladder)
+    power = {n: resolve_ladder([s, "float"], params)[0].power_saving_pct
+             for n, s in specs.items()}
+    # the deployment argument this scenario exists to show: the
+    # approximate bulk tier harvests strictly more modeled power
+    assert power["serve-default"] > power["int8"], power
+
+    ecfg = EngineConfig(slots=SLOTS, max_len=MAX_LEN, prefill_chunk=CHUNK,
+                        cache_dtype="bfloat16")
+    fleet = build_fleet(
+        cfg, None, [TierConfig(n, n) for n in FLEET_TIERS], ecfg,
+        pack=lambda n: (packs[n], specs[n].name, specs[n]), api=api)
+    by_id = {r.replica_id: r for r in fleet.replicas}
+    for rep in fleet.replicas:  # warm both compiled shapes per replica
+        rep.engine.submit(list(range(1, 9)), 2)
+    fleet.drain()
+    monos = {n: _make_engine(cfg, packs[n], specs[n].name)
+             for n in FLEET_TIERS}
+
+    trace = mixed_trace(cfg, N_FLEET_REQUESTS, MAX_LEN, CHUNK, seed=1)
+    # mixed_trace makes every third request a long document: bulk traffic
+    klasses = ["bulk" if i % 3 == 2 else "latency"
+               for i in range(len(trace))]
+    mono_outs: dict[str, list[list[int]]] = {}
+    mono_snaps: dict[str, list[dict]] = {n: [] for n in FLEET_TIERS}
+    fleet_snaps: list[dict] = []
+    fleet_outs = None
+    for rep_i in range(max(reps, 1)):
+        print(f"[serve_bench] scenario=fleet rep={rep_i + 1}/{max(reps, 1)}")
+        for n, eng in monos.items():
+            eng.reset_metrics()
+            rs = [eng.submit(p, g) for p, g in trace]
+            eng.run()
+            assert all(r.finished for r in rs), n
+            mono_snaps[n].append(eng.metrics.snapshot())
+            outs = [r.generated for r in rs]
+            mono_outs.setdefault(n, outs)
+            assert mono_outs[n] == outs, f"{n}: nondeterministic repeat"
+        for rep in fleet.replicas:
+            rep.engine.reset_metrics()
+        placed = [fleet.submit(p, g, klass=k)
+                  for (p, g), k in zip(trace, klasses)]
+        fleet.drain()
+        fleet_snaps.append(fleet.snapshot())
+        outs = [r.generated for r in placed]
+        if fleet_outs is None:
+            fleet_outs = outs
+        assert fleet_outs == outs, "fleet: nondeterministic repeat"
+        for i, r in enumerate(placed):
+            assert r.finished, (i, r.state)
+            # the tentpole contract: a fleet request is token-identical
+            # to a monolithic engine under the tier's pack that served it
+            assert r.generated == mono_outs[r.fleet_tier][i], (
+                i, r.fleet_tier)
+            if r.fleet_class == "latency":
+                assert by_id[r.fleet_replica].exact, r.fleet_replica
+    assert fleet.compile_count() <= 2 * len(fleet.replicas)
+
+    def med(snaps, key, nd=4):
+        vals = [s[key] for s in snaps if s[key] is not None]
+        return round(statistics.median(vals), nd) if vals else None
+
+    scenario = (f"{N_FLEET_REQUESTS} classed requests "
+                f"({klasses.count('latency')} latency / "
+                f"{klasses.count('bulk')} bulk) over "
+                "1x int8 + 1x serve-default replicas, one float init; "
+                "token-identical to per-tier monolithic engines (asserted)")
+    rows = []
+    for n in FLEET_TIERS:
+        tsnaps = [s["tiers"][n] for s in fleet_snaps]
+        rows.append({
+            "name": f"serve/fleet/tier-{n}",
+            "arch": ARCH,
+            "numerics": tsnaps[0]["numerics"],
+            "tier": n,
+            "exact": n == "int8",
+            "scenario": scenario,
+            "slots": SLOTS, "max_len": MAX_LEN, "prefill_chunk": CHUNK,
+            "requests_finished": tsnaps[0]["requests_finished"],
+            "generated_tokens": tsnaps[0]["generated_tokens"],
+            "gen_tok_per_s": med(tsnaps, "gen_tok_per_s", 2),
+            "ttft_mean_s": med(tsnaps, "ttft_mean_s"),
+            "ttft_p50_s": med(tsnaps, "ttft_p50_s"),
+            "modeled_power_saving_pct": power[n],
+        })
+    agg = fleet_snaps[0]
+    rows.append({
+        "name": "serve/fleet/aggregate",
+        "arch": ARCH,
+        "numerics": agg["fleet"]["numerics"],  # "mixed"
+        "scenario": scenario,
+        "slots": SLOTS, "max_len": MAX_LEN, "prefill_chunk": CHUNK,
+        "replicas": len(fleet.replicas),
+        "routing": agg["routing"],
+        "requests_finished": agg["fleet"]["requests_finished"],
+        "gen_tok_per_s": med([s["fleet"] for s in fleet_snaps],
+                             "gen_tok_per_s", 2),
+        "ttft_mean_s": med([s["fleet"] for s in fleet_snaps], "ttft_mean_s"),
+    })
+    for n in FLEET_TIERS:
+        rows.append({
+            "name": f"serve/fleet/monolithic-{n}",
+            "arch": ARCH,
+            "numerics": mono_snaps[n][0]["numerics"],
+            "scenario": ("the same trace on ONE engine under this tier's "
+                         "pack (the fleet comparison baseline)"),
+            "slots": SLOTS, "max_len": MAX_LEN, "prefill_chunk": CHUNK,
+            "requests_finished": mono_snaps[n][0]["requests_finished"],
+            "gen_tok_per_s": med(mono_snaps[n], "gen_tok_per_s", 2),
+            "ttft_mean_s": med(mono_snaps[n], "ttft_mean_s"),
+            "modeled_power_saving_pct": power[n],
+        })
+    return rows
+
+
 def _run_throughput(reps: int = REPEATS) -> list[dict]:
     from repro.configs import get_config
     from repro.launch.serve import ServeConfig, build_serving_params
@@ -795,12 +947,13 @@ def _run_throughput(reps: int = REPEATS) -> list[dict]:
 def run(reps: int = REPEATS, mixed_load_only: bool = False,
         paged_only: bool = False, telemetry_only: bool = False,
         speculative_only: bool = False, governor_only: bool = False,
-        write: bool = True) -> list[dict]:
+        fleet_only: bool = False, write: bool = True) -> list[dict]:
     """Full bench: throughput modes + mixed-load stall scenario +
-    shared-prefix fleet + speculative decode + robustness governor,
-    persisted to BENCH_serve.json.  This is the entry the benchmarks.run
-    harness calls; ``mixed_load_only``/``paged_only``/``telemetry_only``/
-    ``speculative_only``/``governor_only`` are the CI-smoke subsets (which
+    shared-prefix fleet + speculative decode + robustness governor +
+    heterogeneous-numerics fleet, persisted to BENCH_serve.json.  This is
+    the entry the benchmarks.run harness calls; ``mixed_load_only``/
+    ``paged_only``/``telemetry_only``/``speculative_only``/
+    ``governor_only``/``fleet_only`` are the CI-smoke subsets (which
     never rewrite the persisted trajectory — they would drop the other
     scenarios' rows).
 
@@ -808,12 +961,12 @@ def run(reps: int = REPEATS, mixed_load_only: bool = False,
     is cross-checked against the scenario list — a scenario silently
     dropping out of the bench is a hard failure, not a smaller report."""
     if sum([mixed_load_only, paged_only, telemetry_only,
-            speculative_only, governor_only]) > 1:
+            speculative_only, governor_only, fleet_only]) > 1:
         raise SystemExit("pick one of --mixed-load-only / --paged-only / "
                          "--telemetry-only / --speculative-only / "
-                         "--governor-only")
+                         "--governor-only / --fleet-only")
     subset = (mixed_load_only or paged_only or telemetry_only
-              or speculative_only or governor_only)
+              or speculative_only or governor_only or fleet_only)
     scenarios = []
     if not subset:
         scenarios.append(("throughput", _run_throughput))
@@ -827,6 +980,8 @@ def run(reps: int = REPEATS, mixed_load_only: bool = False,
         scenarios.append(("speculative", run_speculative))
     if governor_only or not subset:
         scenarios.append(("governor", run_governor))
+    if fleet_only or not subset:
+        scenarios.append(("fleet", run_fleet_bench))
     rows = []
     for name, fn in scenarios:
         print(f"[serve_bench] running scenario: {name}")
@@ -871,13 +1026,17 @@ def main(argv=None) -> list[dict]:
                     help="run only the robustness-governor scenario "
                          "(SLO-breach escalation, quarantine identity, "
                          "quiescent-governor overhead; CI fault smoke)")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="run only the heterogeneous-numerics fleet "
+                         "scenario (two-tier fleet vs monolithic engines, "
+                         "token identity asserted; CI fleet smoke)")
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
     args = ap.parse_args(argv)
     return run(reps=args.reps, mixed_load_only=args.mixed_load_only,
                paged_only=args.paged_only, telemetry_only=args.telemetry_only,
                speculative_only=args.speculative_only,
-               governor_only=args.governor_only,
+               governor_only=args.governor_only, fleet_only=args.fleet_only,
                write=not args.no_write)
 
 

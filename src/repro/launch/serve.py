@@ -55,6 +55,14 @@ quarantine (NaN rows are rolled back and replayed on the exact pack, so no
 corrupted token is emitted — the run asserts it); ``--deadline-ms`` gives
 every request a latency SLO; queue-full submissions retry with exponential
 backoff (``--submit-retries``).
+
+Fleet serving (PR 9): ``--fleet --tier SPEC=COUNT ...`` serves through
+heterogeneous-numerics replica tiers behind the spec-aware router
+(repro.serving.fleet) — one float init, one pack per tier, latency
+traffic on exact tiers, bulk on approximate ones, cross-replica
+prefix-cache sharing (``--share-prefixes-every``,
+``--assert-prefix-share`` is the CI fleet smoke), per-replica traces
+(``--trace-dir``).
 """
 
 from __future__ import annotations
@@ -431,6 +439,157 @@ def run_engine(args) -> dict:
     return snap
 
 
+def _parse_tiers(items: list[str] | None) -> list:
+    """``--tier SPEC=COUNT`` -> TierConfig list (tier name == spec name).
+
+    SPEC is anything :func:`repro.numerics.ladder_spec` resolves — a
+    preset name, ``float``, or a spec-JSON path.  Defaults to the
+    two-tier deployment the docs describe: an exact-int8 latency tier
+    and an approximate bulk tier, two replicas each."""
+    from repro.serving import TierConfig
+
+    items = items or ["int8=2", "serve-default=2"]
+    tiers = []
+    for item in items:
+        spec, sep, cnt = item.partition("=")
+        if not spec:
+            raise SystemExit(f"--tier {item!r}: expected SPEC=COUNT")
+        try:
+            count = int(cnt) if sep else 1
+        except ValueError:
+            raise SystemExit(
+                f"--tier {item!r}: COUNT must be an integer") from None
+        tiers.append(TierConfig(name=spec, spec=spec, count=count))
+    return tiers
+
+
+def run_fleet(args) -> dict:
+    """``--fleet``: heterogeneous-numerics replica tiers from ONE float
+    init, behind the spec-aware router (repro.serving.fleet).
+
+    Serves the same mixed trace as ``run_engine`` but classed: short
+    chat turns are latency-sensitive (exact tiers only), long documents
+    are bulk (approximate tiers, spilling into exact ones past
+    ``--spill-threshold``).  The run asserts the routing contract —
+    every latency request landed on an exact-tier replica — and
+    ``--assert-prefix-share`` additionally asserts a cross-replica
+    prefix-cache adoption (the CI fleet smoke)."""
+    from repro.numerics import ladder_spec
+    from repro.serving import build_fleet
+
+    cfg = get_config(args.arch)
+    tiers = _parse_tiers(args.tier)
+    api = build_model(cfg)
+    params_float = api.init(jax.random.PRNGKey(0))
+
+    def pack(spec_name, _p=params_float, _cfg=cfg):
+        label, spec = ladder_spec(spec_name)
+        if spec is None:
+            return _p, label, None
+        return (build_serving_params(_p, _cfg, ServeConfig(spec=spec)),
+                label, spec)
+
+    ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
+                        prefill_chunk=args.chunk,
+                        cache_dtype=args.cache_dtype,
+                        mixed_batches=not args.no_mixed,
+                        kv_layout=args.kv_layout,
+                        kv_block_size=args.block_size,
+                        kv_blocks=args.kv_blocks,
+                        prefix_cache=not args.no_prefix_cache,
+                        trace=bool(args.trace_dir))
+    fleet = build_fleet(cfg, params_float, tiers, ecfg, pack, api=api,
+                        policy=args.route_policy,
+                        spill_threshold=args.spill_threshold or None)
+    by_id = {r.replica_id: r for r in fleet.replicas}
+    print(f"arch={cfg.name} fleet replicas={len(fleet.replicas)} "
+          f"policy={fleet.policy} spill_threshold={fleet.spill_threshold} "
+          f"layout={ecfg.kv_layout}")
+    for rep in fleet.replicas:
+        print(f"  replica {rep.replica_id}: numerics={rep.engine.numerics} "
+              f"exact={rep.exact}")
+
+    if args.assert_prefix_share:
+        # the CI fleet smoke: warm ONE replica of a multi-replica tier,
+        # share, then prove a sibling replica serves the same prompt from
+        # the imported blocks
+        if ecfg.kv_layout != "paged" or not ecfg.prefix_cache:
+            raise SystemExit("--assert-prefix-share needs --kv-layout "
+                             "paged with the prefix cache enabled")
+        pair = next((tuple(reps) for t in tiers
+                     for reps in [[r for r in fleet.replicas
+                                   if r.tier.name == t.name]]
+                     if len(reps) >= 2), None)
+        if pair is None:
+            raise SystemExit("--assert-prefix-share needs a tier with "
+                             ">= 2 replicas")
+        warm_rep, cold_rep = pair[0], pair[1]
+        rng = np.random.default_rng(17)
+        shared = rng.integers(
+            0, cfg.vocab,
+            min(4 * ecfg.prefill_chunk, ecfg.max_len // 2)).tolist()
+        warm_rep.engine.submit(shared, 2)
+        warm_rep.engine.drain()
+        imported = fleet.share_prefixes()
+        hit = cold_rep.engine.submit(
+            shared + rng.integers(0, cfg.vocab, 4).tolist(), 4)
+        cold_rep.engine.drain()
+        shareable = min(len(shared) // ecfg.kv_block_size
+                        * ecfg.kv_block_size, len(shared) - 1)
+        assert imported > 0, "share_prefixes imported nothing"
+        assert hit.prefix_hit_tokens >= shareable, (
+            hit.prefix_hit_tokens, shareable)
+        print(f"  prefix share: {imported} blocks "
+              f"{warm_rep.replica_id} -> fleet; {cold_rep.replica_id} "
+              f"hit {hit.prefix_hit_tokens} tokens")
+
+    trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
+    share_every = args.share_prefixes_every or None
+    placed = []
+    for i, (prompt, gen) in enumerate(trace):
+        # mixed_trace makes every third request a long document — that is
+        # the bulk/background traffic; chat turns are latency-sensitive
+        klass = "bulk" if i % 3 == 2 else "latency"
+        r = fleet.submit(prompt, gen, priority=0 if klass == "latency"
+                         else 1, klass=klass)
+        attempt = 0
+        while (r.state.value == "rejected"
+               and (r.reject_reason or "").startswith("queue full")
+               and attempt < args.submit_retries):
+            for _ in range(2 ** attempt):
+                fleet.step()
+            attempt += 1
+            r = fleet.submit(prompt, gen, priority=0 if klass == "latency"
+                             else 1, klass=klass)
+        if r.state.value == "rejected":
+            print(f"  request {r.rid} rejected: {r.reject_reason}")
+        else:
+            placed.append(r)
+    finished = fleet.drain(share_every=share_every)
+
+    # the routing contract: latency-class requests only on exact replicas
+    for r in placed:
+        if r.fleet_class == "latency" and fleet.policy == "spec-aware":
+            assert by_id[r.fleet_replica].exact, (
+                f"latency request {r.rid} on approximate replica "
+                f"{r.fleet_replica}")
+    snap = fleet.snapshot()
+    print(f"finished {len(finished)}/{len(placed)} placed requests, "
+          f"{fleet.compile_count()} compiled shapes across the fleet")
+    for tname, ts in snap["tiers"].items():
+        print(f"  tier {tname}: numerics={ts['numerics']} "
+              f"engines={ts['engines']} finished={ts['requests_finished']} "
+              f"gen_tok={ts['generated_tokens']} "
+              f"prefix_imports={ts['prefix_imports']}")
+    rt = snap["routing"]
+    print(f"  routing: {rt['routed_by_class']} spills={rt['spills']}")
+    print(json.dumps(snap["fleet"], indent=2))
+    if args.trace_dir:
+        paths = fleet.write_traces(args.trace_dir)
+        print(f"traces: {len(paths)} replica files -> {args.trace_dir}")
+    return snap
+
+
 def run_legacy(args) -> None:
     cfg = get_config(args.arch)
     params, label, _, _ = _prepare_params(cfg, args)
@@ -638,6 +797,42 @@ def main(argv=None) -> None:
                     help="bounded retry budget for queue-full submissions "
                          "(exponential backoff in engine steps: 1, 2, 4 "
                          "... steps drained between attempts)")
+    # fleet serving (repro.serving.fleet)
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve through heterogeneous-numerics replica "
+                         "tiers behind the spec-aware router instead of "
+                         "one engine; the numerics flags are ignored — "
+                         "--tier chooses each tier's spec")
+    ap.add_argument("--tier", action="append", metavar="SPEC=COUNT",
+                    help="one fleet tier: COUNT replicas packed under "
+                         "SPEC (a preset name, 'float', or a spec-JSON "
+                         "path); repeatable (default: int8=2 "
+                         "serve-default=2)")
+    ap.add_argument("--route-policy", default="spec-aware",
+                    choices=["spec-aware", "least-loaded", "round-robin"],
+                    help="fleet routing policy (spec-aware: latency "
+                         "class -> exact tiers, bulk -> approximate "
+                         "tiers, least-loaded within each)")
+    ap.add_argument("--spill-threshold", type=int, default=0, metavar="N",
+                    help="bulk traffic spills from a saturated "
+                         "approximate tier into the exact tiers once "
+                         "the least-loaded bulk replica has >= N "
+                         "pending requests (0 disables; latency "
+                         "traffic never spills to approximate tiers)")
+    ap.add_argument("--share-prefixes-every", type=int, default=4,
+                    metavar="STEPS",
+                    help="propagate prefix-cache blocks across each "
+                         "tier's replicas every N fleet iterations "
+                         "while draining (0 disables)")
+    ap.add_argument("--assert-prefix-share", action="store_true",
+                    help="warm one replica, share, and assert a sibling "
+                         "replica's prefix-cache hit on the imported "
+                         "blocks (CI fleet smoke; needs --kv-layout "
+                         "paged and a tier with >= 2 replicas)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="fleet tracing: write one JSONL span trace per "
+                         "replica into DIR (feed them all to "
+                         "tools/trace_report.py --trace ...)")
     # legacy path knobs
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -646,6 +841,8 @@ def main(argv=None) -> None:
 
     if args.legacy:
         run_legacy(args)
+    elif args.fleet:
+        run_fleet(args)
     else:
         run_engine(args)
 

@@ -203,6 +203,24 @@ class NumericsSpec:
                 return rule.action, rule.pattern
         return self.default, "default"
 
+    # -- tier classification -------------------------------------------------
+
+    @property
+    def is_exact(self) -> bool:
+        """True when no layer this spec can assign runs on the approximate
+        MAC array: every rule action and the default are FLOAT or exact
+        int8.  This is decidable from the spec alone (no parameter tree),
+        which is what the fleet router needs to classify replica tiers —
+        latency-sensitive traffic must only land on exact tiers.  ``auto``
+        rules are conservatively non-exact: their assignment is
+        resolve-time and may pick an approximate policy."""
+        def _exact(action: Action) -> bool:
+            return action is None or (isinstance(action, ApproxPolicy)
+                                      and not action.is_approx)
+
+        return (_exact(self.default)
+                and all(_exact(r.action) for r in self.rules))
+
     # -- serialization -------------------------------------------------------
 
     def to_dict(self) -> dict:

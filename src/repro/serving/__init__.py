@@ -77,11 +77,25 @@ emitted — and per-request deadlines bound queue and serving latency
 (finish_reason ``"deadline"``).  See docs/serving.md "Failure modes &
 graceful degradation".
 
+Fleet serving (:mod:`repro.serving.fleet`) makes an engine a *replica
+behind a router*: ``TierConfig`` groups N replicas packing the same
+checkpoint under one per-tier NumericsSpec (one float copy, one pack per
+tier), and ``FleetRouter`` places latency-sensitive traffic on exact
+tiers and bulk traffic on approximate ones (queue-depth/TTFT-aware, with
+bulk->exact overflow spill), shares prefix-cache blocks across a tier's
+replicas content-addressedly, and aggregates per-tier + fleet snapshots
+over ``EngineMetrics.merge``.  The router drives each engine only
+through its replica-handle surface (submit / step / drain / load /
+snapshot / prefix export+import / tracer — plain data at the boundary,
+so it could later sit on a socket).
+
 Follow-ons tracked in ROADMAP.md: ring-buffer and SSM slot state (hymba),
-paged-gather Pallas kernel, multi-host request routing.
+paged-gather Pallas kernel, multi-host (cross-socket) replica handles.
 """
 
 from repro.serving.engine import ServingEngine
+from repro.serving.fleet import (FleetReplica, FleetRouter, TierConfig,
+                                 build_fleet)
 from repro.serving.governor import (GovernorConfig, GovernorDecision,
                                     NumericsGovernor)
 from repro.serving.kv_pool import SlotPool
@@ -99,6 +113,10 @@ __all__ = [
     "SpanEvent",
     "SpanTracer",
     "ServingEngine",
+    "FleetReplica",
+    "FleetRouter",
+    "TierConfig",
+    "build_fleet",
     "GovernorConfig",
     "GovernorDecision",
     "NumericsGovernor",

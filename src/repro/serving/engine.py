@@ -80,12 +80,17 @@ class ServingEngine:
                  numerics: str | None = None,
                  draft_params=None, draft_numerics: str | None = None,
                  governor=None, pack_fn: Callable | None = None,
-                 fault_injector=None, exact_params=None) -> None:
+                 fault_injector=None, exact_params=None,
+                 engine_id: str | None = None) -> None:
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
         self.api = api or build_model(cfg)
         self.numerics = numerics  # active NumericsSpec name (None = unknown)
+        #: stable identity for traces and fleet routing; defaults to the
+        #: numerics label (the pre-fleet behavior, where one engine WAS
+        #: the deployment and its spec named it)
+        self.engine_id = engine_id or numerics or "engine"
         # speculative decode: ``params`` verifies (and serves prefill),
         # ``draft_params`` — the same weights packed under an approximate
         # spec — proposes.  Kept fully optional: without speculative_k the
@@ -149,7 +154,7 @@ class ServingEngine:
         # request-span tracing: a bounded per-engine ring of typed events,
         # recorded at points the engine already touches each request
         self.tracer = (SpanTracer(capacity=ecfg.trace_buffer,
-                                  engine=numerics or "engine")
+                                  engine=self.engine_id)
                        if ecfg.trace else None)
         self._bridge_window_samples()
         # approximation-error probe: every N steps, one scheduled row is
@@ -715,6 +720,50 @@ class ServingEngine:
             if max_steps is not None and steps >= max_steps:
                 break
         return finished
+
+    # -- replica handle ------------------------------------------------------
+    # The surface a FleetRouter (repro.serving.fleet) drives a replica
+    # through: submit / step / drain / load / snapshot / prefix sharing /
+    # tracer.  Everything crossing it is plain Python data (token lists,
+    # dicts, host numpy), so the same boundary could sit on a socket.
+
+    def drain(self, max_steps: int | None = None) -> list[Request]:
+        """Replica-handle verb for :meth:`run`: serve until idle."""
+        return self.run(max_steps)
+
+    def load(self) -> dict:
+        """Routing-facing load signal: queue depth and slot pressure now,
+        plus the replica's observed mean TTFT (None until one finishes).
+        Cheap host bookkeeping only — the router polls this per submit."""
+        backlog = self.scheduler.backlog(self.queue, self.active)
+        ttfts = self.metrics.ttfts
+        return {**backlog, "slots": self.ecfg.slots,
+                "slots_free": self.pool.n_free,
+                "ttft_mean_s": ttfts.mean if len(ttfts) else None}
+
+    def snapshot(self) -> dict:
+        """The metrics snapshot, as a plain dict (the handle boundary's
+        observability payload; feeds ``EngineMetrics.merge``)."""
+        return self.metrics.snapshot()
+
+    def export_prefix(self) -> list[tuple[bytes, dict]]:
+        """Export this replica's prefix-cache entries for adoption by a
+        colder replica (paged layout; [] otherwise — nothing to share)."""
+        if not self._paged:
+            return []
+        return self.pool.export_prefix_entries()
+
+    def import_prefix(self, entries) -> int:
+        """Adopt prefix entries exported by another replica; returns the
+        number of blocks imported (0 on the contiguous layout)."""
+        if not self._paged or not entries:
+            return 0
+        imported = self.pool.import_prefix_entries(entries)
+        if imported:
+            self.metrics.prefix_imports += imported
+            if self.tracer is not None:
+                self.tracer.record("prefix_import", blocks=imported)
+        return imported
 
     def compile_count(self) -> int:
         """Number of shapes the jitted slot step has compiled for."""

@@ -57,6 +57,13 @@ class GovernorConfig:
                         estimate is under ``relax_headroom * slo_err_var``
                         (hysteresis: relaxing at 0.99x the SLO would
                         oscillate).
+    ``severe_factor`` — a breach with running err-var >=
+                        ``severe_factor * slo_err_var`` is *severe*: the
+                        governor jumps directly to the first rung whose
+                        modeled residual clears the SLO instead of walking
+                        one rung per window (each intermediate rung would
+                        burn a full window while the SLO stays blown).
+                        None (the default) keeps the one-rung walk.
     """
 
     slo_err_var: float
@@ -64,6 +71,7 @@ class GovernorConfig:
     history_windows: int = 8
     clean_windows_to_relax: int = 3
     relax_headroom: float = 0.25
+    severe_factor: float | None = None
 
     def __post_init__(self) -> None:
         if self.slo_err_var <= 0:
@@ -78,6 +86,10 @@ class GovernorConfig:
         if not 0 < self.relax_headroom <= 1:
             raise ValueError("relax_headroom must be in (0, 1], got "
                              f"{self.relax_headroom}")
+        if self.severe_factor is not None and self.severe_factor < 1:
+            raise ValueError("severe_factor must be >= 1 (a severe breach "
+                             f"is at least a breach), got "
+                             f"{self.severe_factor}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,12 +200,33 @@ class NumericsGovernor:
             self._clean = 0
         return None
 
+    def _severe_target(self, est: float) -> int:
+        """Severe breach: the first rung past the current one whose
+        *modeled* residual clears the SLO.  The probe's err-var tracks the
+        approximate array's aggressiveness, which the cost model's power
+        saving proxies: ``residual_j ~= est * saving_j / saving_current``
+        (an exact rung, saving 0, models residual 0, so the most-exact
+        rung always qualifies).  When the current rung's saving is already
+        0 the proxy has no signal — fall back to the one-rung walk."""
+        cur = self.ladder[self.rung_idx].power_saving_pct
+        if cur <= 0:
+            return self.rung_idx + 1
+        for j in range(self.rung_idx + 1, len(self.ladder)):
+            if est * (self.ladder[j].power_saving_pct / cur) \
+                    <= self.cfg.slo_err_var:
+                return j
+        return len(self.ladder) - 1
+
     def _switch(self, action: str, reason: str,
                 err_var: float | None) -> GovernorDecision | None:
         step = 1 if action == "escalate" else -1
         target = self.rung_idx + step
         if not 0 <= target < len(self.ladder):
             return None  # already at the ladder end
+        if (action == "escalate" and err_var is not None
+                and self.cfg.severe_factor is not None
+                and err_var >= self.cfg.severe_factor * self.cfg.slo_err_var):
+            target = self._severe_target(err_var)
         d = GovernorDecision(action=action, reason=reason,
                              rung_from=self.ladder[self.rung_idx],
                              rung_to=self.ladder[target],

@@ -210,6 +210,9 @@ class EngineMetrics:
     #: blocks, and the total prompt tokens whose prefill that skipped
     prefix_hits: int = 0
     prefix_hit_tokens: int = 0
+    #: prefix-cache blocks adopted from another replica's pool
+    #: (cross-replica sharing, repro.serving.fleet)
+    prefix_imports: int = 0
 
     ttfts: Reservoir = dataclasses.field(default_factory=Reservoir)
     #: per-request gaps between consecutive generated tokens (seconds)
@@ -454,6 +457,7 @@ class EngineMetrics:
             "requests_deadline_expired": self.requests_deadline_expired,
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_imports": self.prefix_imports,
             "mean_block_utilization": round(
                 self._block_util_sum / self._block_samples, 3)
             if self._block_samples else None,
@@ -529,7 +533,8 @@ class EngineMetrics:
         "faults_injected", "faults_detected", "quarantines",
         "quarantine_replays", "requests_retried",
         "requests_deadline_expired", "prefix_hits",
-        "prefix_hit_tokens", "prompt_tokens", "generated_tokens",
+        "prefix_hit_tokens", "prefix_imports",
+        "prompt_tokens", "generated_tokens",
         "prefill_steps", "decode_steps", "mixed_steps", "step_samples",
         "spec_rounds", "draft_calls", "drafted_tokens",
         "accepted_draft_tokens",

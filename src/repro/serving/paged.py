@@ -182,6 +182,14 @@ class PrefixCache:
         self._entries[h] = bid
         return True
 
+    def items(self) -> list[tuple[bytes, int]]:
+        """(chain hash, physical block id) pairs, LRU -> MRU.  The export
+        path reads this; a copy, so callers cannot skew recency."""
+        return list(self._entries.items())
+
+    def __contains__(self, h: bytes) -> bool:
+        return h in self._entries
+
     def evict_lru(self, allocator: BlockAllocator) -> bool:
         """Reclaim one block by dropping the coldest FREEABLE entry — one
         whose block only the cache still references.  Entries whose blocks
@@ -236,14 +244,24 @@ class PagedKVPool:
         # one fixed-shape jitted COW copy: scalar src/dst are traced, so
         # every copy reuses the single compiled executable
         self._copy_fn = jax.jit(self._copy_block)
+        # fixed-shape jitted block write for imported prefix content: the
+        # content leaves always have one block's shape, dst is traced
+        self._write_fn = jax.jit(self._write_block)
         # cumulative observability counters (engine snapshots them)
         self.cow_copies = 0
         self.prefix_evictions = 0
+        self.prefix_imports = 0
 
     def _copy_block(self, cache: dict, src, dst) -> dict:
         out = dict(cache)
         for k in self._block_keys:
             out[k] = cache[k].at[:, dst].set(cache[k][:, src])
+        return out
+
+    def _write_block(self, cache: dict, dst, content: dict) -> dict:
+        out = dict(cache)
+        for k in self._block_keys:
+            out[k] = cache[k].at[:, dst].set(content[k])
         return out
 
     # -- allocation ----------------------------------------------------------
@@ -376,6 +394,56 @@ class PagedKVPool:
                                               self.allocator)
         self._registered[slot] = max(self._registered.get(slot, 0), n_full)
         return published
+
+    # -- cross-pool prefix sharing -------------------------------------------
+
+    def export_prefix_entries(self) -> list[tuple[bytes, dict]]:
+        """Snapshot every prefix-cache entry as (chain hash, block content).
+
+        Content is the per-layer KV slice of the entry's physical block,
+        pulled to host numpy so the pair is self-contained and
+        serializable (the replica boundary could sit on a socket).  The
+        chain hash commits to the entire token prefix AND the block size
+        (the hash seed), so an importer with the same model/cache config
+        can adopt the block sight unseen: equal hash means equal prefill
+        state.  Registered blocks are frozen full prompt blocks, so the
+        snapshot never races an in-flight write."""
+        if self.prefix is None:
+            return []
+        return [(h, {k: np.asarray(self.cache[k][:, bid])
+                     for k in self._block_keys})
+                for h, bid in self.prefix.items()]
+
+    def import_prefix_entries(self, entries) -> int:
+        """Adopt exported entries from another pool (cross-replica prefix
+        sharing).  Each new entry is written into a freshly allocated
+        block and published under its chain hash, after which local
+        prompts attach to it exactly as if a local request had prefilled
+        it.  Returns the number of blocks imported.
+
+        An imported block ends at refcount exactly 1 — held by the prefix
+        cache alone — so it is LRU-evictable like any locally published
+        entry.  Hashes already cached are skipped (no content rewrite;
+        recency untouched), and when the pool cannot make room even after
+        eviction the remainder is dropped: sharing is an optimization,
+        never a correctness event."""
+        if self.prefix is None:
+            return 0
+        imported = 0
+        for h, content in entries:
+            if h in self.prefix:
+                continue
+            if not self._make_room(1):
+                break
+            bid = self.allocator.alloc()
+            self.cache = self._write_fn(
+                self.cache, jnp.int32(bid),
+                {k: jnp.asarray(v) for k, v in content.items()})
+            self.prefix.register(h, bid, self.allocator)  # the cache's ref
+            self.allocator.decref(bid)  # drop the alloc ref: cache-owned
+            imported += 1
+        self.prefix_imports += imported
+        return imported
 
     # -- state ---------------------------------------------------------------
 

@@ -144,6 +144,22 @@ class SlotScheduler:
                               queued=len(queue))
         return admitted
 
+    # -- load accounting -----------------------------------------------------
+
+    def backlog(self, queue: RequestQueue,
+                active: dict[int, Request]) -> dict:
+        """Work pending on this scheduler, split by phase — the fleet
+        router's load-balancing signal.  ``queued`` is admission backlog,
+        ``prefilling``/``decoding`` are slot-resident; their sum is the
+        number of requests that must finish before a new submit drains."""
+        prefilling = sum(r.state == RequestState.PREFILL
+                         for r in active.values())
+        decoding = sum(r.state == RequestState.DECODE
+                       for r in active.values())
+        return {"queued": len(queue), "prefilling": prefilling,
+                "decoding": decoding,
+                "pending": len(queue) + prefilling + decoding}
+
     # -- batch construction --------------------------------------------------
 
     def next_batch(self, active: dict[int, Request]) -> ScheduledBatch | None:

@@ -38,6 +38,11 @@ Span taxonomy (:data:`SPAN_KINDS`):
     batch row before emission (:mod:`repro.quant.faults`)
   * ``quarantine``    — a flagged row's KV cursor was rolled back and the
     step replayed on the exact pack; ``replayed`` tokens ride in args
+  * ``routed``        — the fleet router assigned a request to a replica
+    (:mod:`repro.serving.fleet`); ``klass``/``tier``/``replica``/``spill``
+    ride in args, so tier placement is auditable from the trace alone
+  * ``prefix_import`` — this replica adopted prefix-cache blocks exported
+    by another replica (cross-replica sharing); ``blocks`` rides in args
 
 Timestamps are ``time.perf_counter()`` (monotonic); exports rebase them to
 the tracer's construction time.  Two export formats:
@@ -79,6 +84,8 @@ SPAN_KINDS: tuple[str, ...] = (
     "governor_switch",
     "fault_detected",
     "quarantine",
+    "routed",
+    "prefix_import",
 )
 
 #: request-lifecycle stages every served-to-completion request passes

@@ -5,6 +5,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import get_config, list_archs
@@ -62,6 +63,37 @@ def test_greedy_generation_runs_jitted():
         tok = jnp.argmax(logits, -1)[:, None]
         assert bool(jnp.isfinite(logits).all())
     assert int(cache["pos"]) == 8 + 8
+
+
+@pytest.mark.parametrize("kv_layout", ["contiguous", "paged"])
+def test_decode_slots_single_device_mesh_token_identity(kv_layout):
+    """The ``decode_slots(..., mesh=)`` plumb-through: a single-device
+    mesh (what every fleet replica gets, repro.serving.fleet.replica_mesh)
+    must generate token-identically to the mesh-less path, on both KV
+    layouts.  This is the no-op anchor the multi-host fleet placement
+    builds on — if a trivial mesh perturbs tokens, a sharded one hides
+    real divergence."""
+    from repro.configs.base import EngineConfig
+    from repro.serving import ServingEngine
+    from repro.serving.fleet import replica_mesh
+
+    cfg = get_config("olmo-1b-reduced")
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(slots=2, max_len=48, prefill_chunk=16,
+                        kv_layout=kv_layout)
+    rng = np.random.default_rng(5)
+    # one short prompt, one crossing a paged block boundary
+    jobs = [(rng.integers(0, cfg.vocab, 10).tolist(), 6),
+            (rng.integers(0, cfg.vocab, 20).tolist(), 6)]
+    outs = []
+    for mesh in (None, replica_mesh()):
+        eng = ServingEngine(cfg, params, ecfg, api=api, mesh=mesh)
+        reqs = [eng.submit(p, g) for p, g in jobs]
+        eng.run()
+        assert all(r.finish_reason == "length" for r in reqs)
+        outs.append([r.generated for r in reqs])
+    assert outs[0] == outs[1]
 
 
 def test_int8_kv_cache_decode_close():

@@ -87,6 +87,50 @@ def test_governor_hysteresis_band_resets_clean_count():
     assert gov.rung.name == "rung1"  # parked: never relaxes in the band
 
 
+def test_governor_severe_breach_jumps_to_clearing_rung():
+    # err-var 9 >= 4*slo: severe.  residual model est*saving_j/saving_cur
+    # gives rung1 -> 9*10/40 = 2.25 (still blown), rung2 -> 0: jump 0 -> 2
+    gov = NumericsGovernor(_rungs(), _cfg(severe_factor=4.0))
+    for _ in range(2):
+        d = gov.observe_probe(_probe(var=9.0))
+    assert d is not None and d.action == "escalate"
+    assert d.reason == "slo_breach"
+    assert gov.rung.name == "rung2"  # skipped rung1 entirely
+    assert d.power_delta_pct == pytest.approx(-40.0)
+
+
+def test_governor_severe_breach_stops_at_first_clearing_rung():
+    # severe, but rung1's modeled residual 3.9*10/40 = 0.975 <= slo:
+    # the jump lands there, not at the ladder bottom
+    gov = NumericsGovernor(_rungs(), _cfg(severe_factor=3.0))
+    for _ in range(2):
+        d = gov.observe_probe(_probe(var=3.9))
+    assert d is not None and gov.rung.name == "rung1"
+
+
+def test_governor_non_severe_breach_still_walks_one_rung():
+    # a plain breach under the severe threshold keeps the one-rung walk
+    gov = NumericsGovernor(_rungs(), _cfg(severe_factor=4.0))
+    for _ in range(2):
+        d = gov.observe_probe(_probe(var=2.0))
+    assert d is not None and d.action == "escalate"
+    assert gov.rung.name == "rung1"
+
+
+def test_governor_severe_factor_validation():
+    with pytest.raises(ValueError, match="severe_factor"):
+        _cfg(severe_factor=0.5)
+
+
+def test_governor_severe_fault_path_unchanged():
+    # note_fault carries no err-var estimate, so the severe jump cannot
+    # apply — faults keep the one-rung escalation
+    gov = NumericsGovernor(_rungs(), _cfg(severe_factor=2.0))
+    d = gov.note_fault()
+    assert d.action == "escalate" and d.err_var is None
+    assert gov.rung.name == "rung1"
+
+
 def test_governor_fault_escalates_immediately():
     gov = NumericsGovernor(_rungs(), _cfg())
     gov.observe_probe(_probe(var=0.0))  # open window discards on switch

@@ -73,4 +73,20 @@ python tools/trace_report.py "$FAULT_TRACE" --assert-lifecycle --assert-quaranti
 echo "== governor serve bench (SLO breach -> ladder escalation, 1 rep) =="
 python -m benchmarks.serve_bench --governor-only --reps 1 --no-write
 
+echo "== fleet smoke (2 numerics tiers, spec-aware routing, cross-replica prefix hit asserted) =="
+FLEET_TRACE_DIR="$(mktemp -d -t repro_fleet_traces_XXXX)"
+trap 'rm -f "$TRACE_OUT" "$FAULT_TRACE"; rm -rf "$FLEET_TRACE_DIR"' EXIT
+python -m repro.launch.serve --engine --fleet \
+    --arch olmo-1b-reduced \
+    --tier int8=2 --tier serve-default=1 \
+    --requests 6 --slots 4 --max-len 64 --chunk 16 \
+    --kv-layout paged --block-size 8 \
+    --assert-prefix-share --trace-dir "$FLEET_TRACE_DIR"
+
+echo "== fleet trace report (per-replica traces merged, per-tier section) =="
+python tools/trace_report.py "$FLEET_TRACE_DIR"/trace-*.jsonl --assert-lifecycle
+
+echo "== fleet serve bench (2-tier fleet vs monolithic, token identity asserted, 1 rep) =="
+python -m benchmarks.serve_bench --fleet-only --reps 1 --no-write
+
 echo "CI smoke OK"

@@ -1,9 +1,11 @@
 #!/usr/bin/env python
-"""Summarize a serving span trace (JSONL or Chrome trace_event JSON).
+"""Summarize serving span traces (JSONL or Chrome trace_event JSON).
 
     python tools/trace_report.py /tmp/trace.json
     python tools/trace_report.py /tmp/trace.jsonl --json
     python tools/trace_report.py /tmp/trace.json --assert-lifecycle
+    python tools/trace_report.py --trace /tmp/fleet/trace-int8-0.jsonl \\
+        --trace /tmp/fleet/trace-int8-1.jsonl ...
 
 Reads either export format of ``repro.serving.telemetry.SpanTracer`` and
 prints:
@@ -25,6 +27,15 @@ prints:
     evictions, when the trace carries any (old traces without the PR 8
     span kinds still load and report).
 
+Fleet traces: pass several files (repeatable ``--trace FILE``, e.g. the
+per-replica JSONLs ``FleetRouter.write_traces`` emits).  With more than
+one trace, request ids are prefixed with the replica's engine id
+(``"int8:0:7"`` — engine request counters are per-replica, so bare rids
+collide across a fleet) and the report gains a **fleet** section:
+per-tier request counts, routed classes/spills, TTFT, speculative
+acceptance, prefix imports, and capacity-stall attribution.
+Single-trace invocations are unchanged.
+
 ``--assert-lifecycle`` exits non-zero unless the trace holds at least one
 span of every request-lifecycle stage (queued, admitted, prefill_chunk,
 decode_step, finished) — the CI smoke's trace-integrity gate.
@@ -45,7 +56,7 @@ LIFECYCLE = ("queued", "admitted", "prefill_chunk", "decode_step", "finished")
 
 def load_events(path: str) -> list[dict]:
     """Normalize either export format to
-    ``{kind, rid, t (s), dur (s), data}`` sorted by time."""
+    ``{kind, rid, t (s), dur (s), engine, data}`` sorted by time."""
     with open(path) as f:
         text = f.read()
     events: list[dict] = []
@@ -54,6 +65,7 @@ def load_events(path: str) -> list[dict]:
     except json.JSONDecodeError:
         doc = None  # JSONL: one object per line
     if isinstance(doc, dict) and "traceEvents" in doc:
+        engine = (doc.get("otherData") or {}).get("engine")
         for e in doc["traceEvents"]:
             if e.get("ph") == "M":  # metadata (process/thread names)
                 continue
@@ -61,7 +73,8 @@ def load_events(path: str) -> list[dict]:
             rid = data.pop("rid", None)
             events.append({"kind": e["name"], "rid": rid,
                            "t": e.get("ts", 0.0) / 1e6,
-                           "dur": e.get("dur", 0.0) / 1e6, "data": data})
+                           "dur": e.get("dur", 0.0) / 1e6,
+                           "engine": engine, "data": data})
     else:
         for line in text.splitlines():
             line = line.strip()
@@ -72,7 +85,27 @@ def load_events(path: str) -> list[dict]:
                     if k not in ("engine", "kind", "rid", "t", "dur")}
             events.append({"kind": d["kind"], "rid": d.get("rid"),
                            "t": d["t"], "dur": d.get("dur", 0.0),
-                           "data": data})
+                           "engine": d.get("engine"), "data": data})
+    events.sort(key=lambda e: e["t"])
+    return events
+
+
+def load_traces(paths: list[str]) -> list[dict]:
+    """Load and merge several traces (a fleet's per-replica files).
+
+    With more than one file, every request id is prefixed with its
+    replica's engine id — each engine numbers requests independently, so
+    bare rids collide across a fleet; ``"<engine>:<rid>"`` keeps every
+    request's timeline distinct.  One file behaves exactly like
+    :func:`load_events` (integer rids, identical report)."""
+    events: list[dict] = []
+    for i, path in enumerate(paths):
+        evs = load_events(path)
+        if len(paths) > 1:
+            for e in evs:
+                if e["rid"] is not None:
+                    e["rid"] = f"{e['engine'] or f'trace{i}'}:{e['rid']}"
+        events.extend(evs)
     events.sort(key=lambda e: e["t"])
     return events
 
@@ -213,6 +246,62 @@ def _robustness_summary(events: list[dict]) -> dict | None:
     }
 
 
+def _fleet_summary(events: list[dict]) -> dict | None:
+    """Per-tier rollup when the events span several engines (a merged
+    fleet trace).  Tier = the engine id up to its last ``:`` (replica ids
+    are ``"<tier>:<index>"``).  None for single-engine traces, so plain
+    reports are unchanged.
+
+    TTFT here is trace-derived: queued span -> end of the request's last
+    prefill chunk (the call that produces its first token), so it stays
+    computable from the per-replica files alone."""
+    engines = sorted({e["engine"] for e in events if e["engine"]})
+    if len(engines) < 2:
+        return None
+
+    def tier_of(eng: str) -> str:
+        return eng.rsplit(":", 1)[0] if ":" in eng else eng
+
+    tiers: dict[str, list[str]] = {}
+    for eng in engines:
+        tiers.setdefault(tier_of(eng), []).append(eng)
+    out: dict[str, dict] = {}
+    for tname, engs in sorted(tiers.items()):
+        evs = [e for e in events if e["engine"] in engs]
+        queued = {e["rid"]: e["t"] for e in evs if e["kind"] == "queued"}
+        first_tok: dict = {}
+        for e in evs:
+            if e["kind"] == "prefill_chunk" and e["rid"] in queued:
+                end = e["t"] + e["dur"]
+                first_tok[e["rid"]] = max(first_tok.get(e["rid"], end), end)
+        ttfts = [first_tok[r] - queued[r] for r in first_tok]
+        verifies = [e for e in evs if e["kind"] == "verify"]
+        drafted = sum(e["data"].get("drafted", 0) for e in verifies)
+        accepted = sum(e["data"].get("accepted", 0) for e in verifies)
+        routed = collections.Counter(
+            e["data"].get("klass") for e in evs if e["kind"] == "routed")
+        out[tname] = {
+            "engines": engs,
+            "requests_finished": sum(
+                1 for e in evs if e["kind"] == "finished"),
+            "routed": dict(sorted(routed.items())),
+            "spills": sum(1 for e in evs if e["kind"] == "routed"
+                          and e["data"].get("spill")),
+            "ttft_mean_s": (round(sum(ttfts) / len(ttfts), 6)
+                            if ttfts else None),
+            "acceptance_rate": (round(accepted / drafted, 4)
+                                if drafted else None),
+            "capacity_stalls": sum(
+                1 for e in evs if e["kind"] == "capacity_stall"),
+            "prefix_hits": sum(1 for e in evs if e["kind"] == "prefix_hit"),
+            "prefix_import_blocks": sum(
+                e["data"].get("blocks", 0) for e in evs
+                if e["kind"] == "prefix_import"),
+            "top_decode_gaps": _stall_attribution(evs, top=3),
+        }
+    return out
+
+
 def _window_summary(events: list[dict]) -> dict | None:
     xs = sorted(e["data"]["gen_tok_per_s"] for e in events
                 if e["kind"] == "metrics_window"
@@ -232,7 +321,14 @@ def report(events: list[dict]) -> dict:
             "speculative": _speculative_summary(events),
             "probe": _probe_trend(events),
             "windows": _window_summary(events),
-            "robustness": _robustness_summary(events)}
+            "robustness": _robustness_summary(events),
+            "fleet": _fleet_summary(events)}
+
+
+def _rid_s(rid) -> str:
+    """rids are ints (single trace) or ``"engine:rid"`` strings (merged
+    fleet traces) — format either without breaking old output."""
+    return f"{rid:4d}" if isinstance(rid, int) else f"{rid:>16}"
 
 
 def _print_human(rep: dict) -> None:
@@ -242,7 +338,7 @@ def _print_human(rep: dict) -> None:
     for rid, r in sorted(rep["requests"].items()):
         wait = (f"{r['queue_wait_s']*1e3:8.2f}ms"
                 if r["queue_wait_s"] is not None else "       ?")
-        print(f"  req {rid:4d}  wait {wait}  "
+        print(f"  req {_rid_s(rid)}  wait {wait}  "
               f"prefill {r['prefill_chunks']:3d} chunks "
               f"({r['prefill_s']*1e3:8.2f}ms)  "
               f"decode {r['decode_steps']:3d} steps "
@@ -257,7 +353,7 @@ def _print_human(rep: dict) -> None:
     if rep["top_decode_gaps"]:
         print("\nlargest inter-decode gaps:")
         for g in rep["top_decode_gaps"]:
-            print(f"  req {g['rid']:4d}  {g['gap_s']*1e3:8.2f}ms at "
+            print(f"  req {_rid_s(g['rid'])}  {g['gap_s']*1e3:8.2f}ms at "
                   f"t={g['t']:.3f}s  cause={g['cause']}"
                   + (f" ({g['interfering_chunks']} chunks)"
                      if g["interfering_chunks"] else ""))
@@ -292,12 +388,35 @@ def _print_human(rep: dict) -> None:
             print(f"  step {s['step']:5}  {s['action']:8} "
                   f"{s['from']} -> {s['to']}  [{s['reason']}]  "
                   f"err_var={ev}  power_delta={s['power_delta_pct']}%")
+    if rep["fleet"]:
+        print("\nfleet (per tier):")
+        for tname, t in rep["fleet"].items():
+            ttft = (f"{t['ttft_mean_s']*1e3:.2f}ms"
+                    if t["ttft_mean_s"] is not None else "n/a")
+            acc = (f"{t['acceptance_rate']:.2%}"
+                   if t["acceptance_rate"] is not None else "n/a")
+            print(f"  tier {tname}: {len(t['engines'])} replicas, "
+                  f"{t['requests_finished']} finished, "
+                  f"routed={t['routed']} spills={t['spills']}, "
+                  f"ttft {ttft}, acceptance {acc}, "
+                  f"stalls={t['capacity_stalls']}, "
+                  f"prefix hits={t['prefix_hits']} "
+                  f"imported_blocks={t['prefix_import_blocks']}")
+            for g in t["top_decode_gaps"]:
+                print(f"    gap {_rid_s(g['rid'])}  "
+                      f"{g['gap_s']*1e3:8.2f}ms  cause={g['cause']}")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="Summarize a serving span trace (JSONL or Chrome JSON)")
-    ap.add_argument("trace", help="trace file written by --trace-out")
+        description="Summarize serving span traces (JSONL or Chrome JSON)")
+    ap.add_argument("trace", nargs="*",
+                    help="trace file(s) written by --trace-out / --trace-dir")
+    ap.add_argument("--trace", action="append", dest="traces", default=[],
+                    metavar="FILE",
+                    help="additional trace file; repeatable (several files "
+                         "= a fleet: rids get engine-id prefixes and the "
+                         "report gains a per-tier fleet section)")
     ap.add_argument("--json", action="store_true",
                     help="emit the report as JSON")
     ap.add_argument("--assert-lifecycle", action="store_true",
@@ -308,7 +427,10 @@ def main(argv=None) -> int:
                          "span and every one is matched by a quarantine "
                          "span (the fault-injection smoke gate)")
     args = ap.parse_args(argv)
-    events = load_events(args.trace)
+    paths = list(args.trace) + list(args.traces)
+    if not paths:
+        ap.error("no trace files given (positional or --trace)")
+    events = load_traces(paths)
     rep = report(events)
     if args.json:
         print(json.dumps(rep, indent=2))
