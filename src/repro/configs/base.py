@@ -76,6 +76,12 @@ class EngineConfig:
     #: emitted (repro.quant.faults).  Implied on when a fault injector is
     #: attached; off (the default) costs nothing on the hot path.
     detect_faults: bool = False
+    #: A/B shadow serving (repro.serving.shadow): every round(1/fraction)
+    #: finished requests, one replays teacher-forced through a SECOND
+    #: NumericsSpec pack on the same engine; token agreement, logit-delta
+    #: moments and modeled power feed an automated accuracy-vs-power
+    #: verdict.  0 disables.  Requires ``ServingEngine(shadow_params=)``.
+    shadow_fraction: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -63,12 +63,28 @@ traffic on exact tiers, bulk on approximate ones, cross-replica
 prefix-cache sharing (``--share-prefixes-every``,
 ``--assert-prefix-share`` is the CI fleet smoke), per-replica traces
 (``--trace-dir``).
+
+Observability (PR 10): ``--shadow-spec NAME_OR_FILE --shadow-fraction F``
+runs A/B shadow serving (repro.serving.shadow) — a deterministic sample
+of finished requests is replayed teacher-forced through a second pack and
+diffed token-by-token; the run prints the accuracy-vs-power verdict and
+``--assert-shadow`` makes it a CI gate.  ``--layer-slo PATTERN=VAR``
+(repeatable) gives the governor per-layer err-var ceilings on top of the
+global SLO; ``--assert-layer-breach [PATTERN]`` asserts a matching layer
+was named in a ``layer_slo_breach`` escalation AND is visible in the
+windowed per-layer err-var time-series.  ``--inject-faults`` accepts a
+fourth ``@LAYERS`` fnmatch segment (``dense-noise@1@blocks/0/*``) to
+confine dense-surface noise to chosen layers.  ``--prom-out FILE``
+exports the final metrics snapshot (engine or merged fleet) as
+OpenMetrics text (repro.serving.prom), and ``tools/obs_dashboard.py``
+renders the JSONL trace into a static HTML dashboard.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import fnmatch
 import json
 import sys
 import time
@@ -232,6 +248,32 @@ def _draft_spec_from_args(args) -> NumericsSpec:
     return spec
 
 
+def _spec_by_name_or_file(text: str) -> NumericsSpec:
+    """A preset name or a spec-JSON file path -> NumericsSpec."""
+    from repro.numerics.presets import PRESETS
+
+    if text in PRESETS:
+        return get_preset(text)
+    with open(text) as f:
+        return NumericsSpec.from_json(f.read())
+
+
+def _parse_layer_slos(items: list[str] | None) -> dict[str, float]:
+    """``--layer-slo PATTERN=VAR`` (repeatable) -> {pattern: ceiling}."""
+    out: dict[str, float] = {}
+    for item in items or []:
+        pattern, sep, var = item.partition("=")
+        if not sep or not pattern:
+            raise SystemExit(f"--layer-slo {item!r}: expected PATTERN=VAR "
+                             "(e.g. 'blocks/0/*=1e-4')")
+        try:
+            out[pattern] = float(var)
+        except ValueError:
+            raise SystemExit(
+                f"--layer-slo {item!r}: VAR must be a float") from None
+    return out
+
+
 def _prepare_speculative_params(cfg: ArchConfig, args):
     """Pack the SAME float init twice: exact int8 for verification (and
     prefill), the draft spec for proposing — the one-checkpoint
@@ -299,7 +341,8 @@ def run_engine(args) -> dict:
         governor = NumericsGovernor(ladder, GovernorConfig(
             slo_err_var=args.slo_err_var,
             window_probes=args.governor_window,
-            clean_windows_to_relax=args.governor_relax_after))
+            clean_windows_to_relax=args.governor_relax_after,
+            layer_slo=_parse_layer_slos(getattr(args, "layer_slo", None))))
 
         def pack_fn(s, _p=params_float, _cfg=cfg):
             if s is None:
@@ -319,6 +362,27 @@ def run_engine(args) -> dict:
             exact_params = build_serving_params(
                 params_float, cfg, ServeConfig(spec=get_preset("int8")))
 
+    # -- A/B shadow serving (repro.serving.shadow) ----------------------------
+    shadow_params = shadow_label = None
+    shadow_fraction = 0.0
+    if getattr(args, "shadow_spec", None):
+        if spec_k:
+            raise SystemExit("--shadow-spec is incompatible with "
+                             "--speculative-k (the engine refuses mixed "
+                             "draft/shadow dual-pack regimes)")
+        if governor is not None:
+            raise SystemExit("--shadow-spec is incompatible with --governor "
+                             "(a hot-swapping primary makes the A/B verdict "
+                             "a mixed-regime average)")
+        if params_float is None:
+            raise SystemExit("--shadow-spec needs the float init to pack "
+                             "the shadow from")
+        shadow_spec = _spec_by_name_or_file(args.shadow_spec)
+        shadow_params = build_serving_params(
+            params_float, cfg, ServeConfig(spec=shadow_spec))
+        shadow_label = shadow_spec.name
+        shadow_fraction = args.shadow_fraction
+
     ecfg = EngineConfig(slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.chunk, cache_dtype=args.cache_dtype,
                         mixed_batches=not args.no_mixed,
@@ -330,11 +394,14 @@ def run_engine(args) -> dict:
                         metrics_window_s=args.metrics_window,
                         error_probe_every=probe_every,
                         speculative_k=spec_k,
-                        detect_faults=getattr(args, "detect_faults", False))
+                        detect_faults=getattr(args, "detect_faults", False),
+                        shadow_fraction=shadow_fraction)
     eng = ServingEngine(cfg, params, ecfg, numerics=label,
                         draft_params=draft_params, draft_numerics=draft_label,
                         governor=governor, pack_fn=pack_fn,
-                        fault_injector=injector, exact_params=exact_params)
+                        fault_injector=injector, exact_params=exact_params,
+                        shadow_params=shadow_params,
+                        shadow_numerics=shadow_label)
     print(f"arch={cfg.name} numerics={label} slots={ecfg.slots} "
           f"max_len={ecfg.max_len} chunk={ecfg.prefill_chunk} "
           f"kv={ecfg.cache_dtype} mixed={ecfg.mixed_batches} "
@@ -347,7 +414,9 @@ def run_engine(args) -> dict:
           + (f" governor=[{' -> '.join(r.name for r in governor.ladder)}] "
              f"slo_err_var={args.slo_err_var}" if governor else "")
           + (f" inject={injector.spec.kind}@{injector.spec.every} "
-             f"seed={injector.spec.seed}" if injector else ""))
+             f"seed={injector.spec.seed}" if injector else "")
+          + (f" shadow={shadow_label} fraction={shadow_fraction}"
+             if shadow_params is not None else ""))
 
     trace = mixed_trace(cfg, args.requests, ecfg.max_len, ecfg.prefill_chunk)
     if args.shared_prefix_pair:
@@ -426,8 +495,51 @@ def run_engine(args) -> dict:
             print(f"    window {dd['window']}: {dd['action']} "
                   f"{dd['from']} -> {dd['to']} [{dd['reason']}] "
                   f"err_var={dd['err_var']} "
-                  f"power_delta={dd['power_delta_pct']}%")
+                  f"power_delta={dd['power_delta_pct']}%"
+                  + (f" layer={dd['layer']}" if dd.get("layer") else ""))
+    verdict = eng.shadow_verdict() if shadow_params is not None else None
+    if verdict is not None:
+        print(f"  shadow A/B [{label} vs {shadow_label}]: "
+              f"{verdict['verdict']} — match "
+              f"{verdict['token_match_rate']:.3f} over "
+              f"{verdict['tokens']} tokens "
+              f"({verdict['sampled_requests']} replays), "
+              f"logits_err_var={verdict['logits_err_var']:.3g}, "
+              f"power_delta={verdict['power_delta_pct']:+.2f}pp "
+              f"[{verdict['reason']}]")
+    if getattr(args, "assert_shadow", False):
+        # the CI shadow smoke: at least one finished request was replayed
+        # through the shadow pack and a verdict was reached
+        assert verdict is not None and verdict["sampled_requests"] >= 1, (
+            f"shadow smoke expected >=1 sampled replay, got {verdict!r}")
+    if getattr(args, "assert_layer_breach", None) is not None:
+        pattern = args.assert_layer_breach or "*"
+        breaches = [d.to_dict() for d in (governor.decisions if governor
+                                          else [])
+                    if d.to_dict().get("reason") == "layer_slo_breach"]
+        named = [d for d in breaches
+                 if fnmatch.fnmatch(d.get("layer") or "", pattern)]
+        assert named, (
+            f"no governor escalation with reason=layer_slo_breach matching "
+            f"layer pattern {pattern!r} (breaches seen: "
+            f"{[d.get('layer') for d in breaches]})")
+        # ...and the breaching layer must be visible in the windowed
+        # per-layer err-var time-series (the attribution surface)
+        layer = named[0]["layer"]
+        windows_with = [s for s in eng.metrics.timeseries
+                        if layer in (s.get("probe_layers") or {})]
+        assert windows_with, (
+            f"breaching layer {layer!r} absent from all "
+            f"{len(eng.metrics.timeseries)} metrics_window samples")
+        print(f"  layer-SLO breach: {layer} escalated "
+              f"{named[0]['from']} -> {named[0]['to']}, present in "
+              f"{len(windows_with)} window sample(s)")
     print(json.dumps(snap, indent=2))
+    if getattr(args, "prom_out", None):
+        from repro.serving.prom import to_openmetrics
+        with open(args.prom_out, "w") as f:
+            f.write(to_openmetrics(snap, labels={"engine": eng.engine_id}))
+        print(f"openmetrics: {args.prom_out}")
     if args.trace_out:
         eng.tracer.write(args.trace_out)
         print(f"trace: {len(eng.tracer)} spans "
@@ -587,6 +699,11 @@ def run_fleet(args) -> dict:
     if args.trace_dir:
         paths = fleet.write_traces(args.trace_dir)
         print(f"traces: {len(paths)} replica files -> {args.trace_dir}")
+    if getattr(args, "prom_out", None):
+        from repro.serving.prom import to_openmetrics
+        with open(args.prom_out, "w") as f:
+            f.write(to_openmetrics(snap["fleet"], labels={"fleet": "all"}))
+        print(f"openmetrics: {args.prom_out}")
     return snap
 
 
@@ -775,20 +892,57 @@ def main(argv=None) -> None:
                     metavar="WINDOWS",
                     help="consecutive clean windows before relaxing one "
                          "rung back down")
+    ap.add_argument("--layer-slo", action="append", metavar="PATTERN=VAR",
+                    help="per-layer accuracy SLO for the governor: fnmatch "
+                         "layer-path pattern -> max probe err-var ceiling "
+                         "(e.g. 'blocks/0/*=1e-4'); first matching pattern "
+                         "wins; repeatable; breaches escalate with reason "
+                         "layer_slo_breach naming the layer")
     ap.add_argument("--inject-faults", default=None, metavar="SPEC",
                     help="deterministic fault injection, as "
-                         "KIND@EVERY[@START-STOP] with KIND in nan|inf|"
-                         "spike|dense-noise (e.g. 'nan@8', "
-                         "'dense-noise@2@10-50'); step-surface kinds "
+                         "KIND@EVERY[@START-STOP][@LAYERS] with KIND in "
+                         "nan|inf|spike|dense-noise (e.g. 'nan@8', "
+                         "'dense-noise@2@10-50', "
+                         "'dense-noise@1@blocks/0/*'); step-surface kinds "
                          "corrupt served logits and must be fully "
                          "quarantined (asserted), dense-noise corrupts the "
-                         "probe's observation and drives the governor")
+                         "probe's observation and drives the governor — "
+                         "the optional fnmatch LAYERS segment confines it "
+                         "to matching packed layers")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="fault injector RNG seed (same seed = same "
                          "injected steps and rows)")
     ap.add_argument("--detect-faults", action="store_true",
                     help="engine-side NaN/divergence detection + "
                          "quarantine even without an injector")
+    # observability (repro.serving.shadow / repro.serving.prom)
+    ap.add_argument("--shadow-spec", default=None, metavar="NAME_OR_FILE",
+                    help="A/B shadow serving: replay a deterministic "
+                         "sample of finished requests teacher-forced "
+                         "through a second pack built under this spec "
+                         "(preset name or spec-JSON path) and diff tokens/"
+                         "logits/modeled power; incompatible with "
+                         "--speculative-k and --governor")
+    ap.add_argument("--shadow-fraction", type=float, default=0.25,
+                    metavar="F",
+                    help="fraction of finished requests replayed through "
+                         "the shadow pack (deterministic every-Nth "
+                         "sampling; default %(default)s)")
+    ap.add_argument("--assert-shadow", action="store_true",
+                    help="fail unless the shadow replayed >= 1 request "
+                         "and reached a verdict (CI shadow smoke)")
+    ap.add_argument("--assert-layer-breach", nargs="?", const="*",
+                    default=None, metavar="PATTERN",
+                    help="fail unless the governor escalated with reason "
+                         "layer_slo_breach on a layer matching PATTERN "
+                         "(default any) AND that layer appears in the "
+                         "windowed per-layer err-var samples (CI "
+                         "layer-SLO smoke; needs --governor --layer-slo "
+                         "--metrics-window)")
+    ap.add_argument("--prom-out", default=None, metavar="FILE",
+                    help="write the final metrics snapshot (engine, or "
+                         "merged fleet with --fleet) as OpenMetrics text "
+                         "exposition to FILE")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request latency SLO in ms from submission "
                          "(0 = none); expired queued requests are purged, "

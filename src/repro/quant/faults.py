@@ -97,24 +97,41 @@ class FaultSpec:
 
     @staticmethod
     def parse(text: str, seed: int = 0) -> "FaultSpec":
-        """Parse the CLI form ``KIND@EVERY[@START-STOP]``.
+        """Parse the CLI form ``KIND@EVERY[@START-STOP][@LAYERS]``.
 
         Examples: ``nan@5`` (NaN a row every 5th step), ``spike@7@20-60``
         (offset spikes every 7th step between steps 20 and 60),
-        ``dense-noise@1@10-30`` (probe-visible layer noise, steps 10-30).
+        ``dense-noise@1@10-30`` (probe-visible layer noise, steps 10-30),
+        ``dense-noise@1@blocks/0/*`` (noise confined to one block's
+        layers — the single-layer fault the per-layer SLO demo injects),
+        ``dense-noise@1@10-30@blocks/0/o`` (both).
+
+        The third segment is a STEP RANGE when it looks like one
+        (``N-M``/``N-``/``-M``, digits only) and a layer pattern
+        otherwise; a 4-segment spec pins range then pattern explicitly.
         """
+        import re
+
         parts = text.split("@")
-        if not 2 <= len(parts) <= 3:
-            raise ValueError(
-                f"fault spec {text!r} is not KIND@EVERY[@START-STOP]")
+        if not 2 <= len(parts) <= 4:
+            raise ValueError(f"fault spec {text!r} is not "
+                             "KIND@EVERY[@START-STOP][@LAYERS]")
         kind, every = parts[0], int(parts[1])
         start, stop = 0, None
-        if len(parts) == 3:
-            lo, _, hi = parts[2].partition("-")
+        layers = "*"
+        rest = parts[2:]
+        if rest and re.fullmatch(r"\d*-\d*", rest[0]) and rest[0] != "-":
+            lo, _, hi = rest[0].partition("-")
             start = int(lo) if lo else 0
             stop = int(hi) if hi else None
+            rest = rest[1:]
+        if rest:
+            if len(rest) > 1:
+                raise ValueError(f"fault spec {text!r}: at most one layer "
+                                 "pattern segment")
+            layers = rest[0]
         return FaultSpec(kind=kind, every=every, seed=seed,
-                         start=start, stop=stop)
+                         start=start, stop=stop, layers=layers)
 
 
 class FaultInjector:

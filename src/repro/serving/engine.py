@@ -74,6 +74,50 @@ def _has_blocked_packs(params) -> bool:
     return found
 
 
+def power_profile_from_params(params, n_array: int = 64) -> dict:
+    """Per-layer modeled MAC cost/saving profile of a packed parameter
+    tree: ``{path: {mac_per_token, saving_pct}}``.
+
+    ``mac_per_token`` is the layer's MAC count per served token (the
+    product of its weight shape — leading scan/stack dims included, so a
+    stacked layer counts every member).  ``saving_pct`` is the cost
+    model's modeled array-power saving for the layer's policy (0 for
+    exact/float layers).  Only linear layers are profiled — they are
+    where the approximate multipliers live, and the quantity the paper's
+    power model prices.  This is the ``PackPlan`` x ``cost_model`` join
+    evaluated on the LIVE pack, so a governor hot-swap re-derives it from
+    whatever is actually serving (see ``EngineMetrics.set_power_profile``).
+    """
+    from repro.core.approx_linear import (QuantizedDense,
+                                          QuantizedDenseGroup,
+                                          is_linear_params)
+    from repro.core.cost_model import power_saving
+
+    prof: dict[str, dict] = {}
+
+    def add(path, shape, policy):
+        saving = (power_saving(policy.mode, policy.m, n_array)
+                  if policy is not None and policy.is_approx else 0.0)
+        prof[path] = {"mac_per_token": float(np.prod(shape)),
+                      "saving_pct": round(float(saving), 3)}
+
+    def walk(node, path):
+        if isinstance(node, (QuantizedDense, QuantizedDenseGroup)):
+            add(path, node.pack.w_q.shape, node.policy)
+        elif isinstance(node, dict):
+            if is_linear_params(node):
+                add(path, node["w"].shape, None)
+                return
+            for k, v in node.items():
+                walk(v, f"{path}/{k}" if path else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}/{i}" if path else str(i))
+
+    walk(params, "")
+    return prof
+
+
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig = EngineConfig(),
                  mesh=None, api: ModelApi | None = None,
@@ -81,7 +125,9 @@ class ServingEngine:
                  draft_params=None, draft_numerics: str | None = None,
                  governor=None, pack_fn: Callable | None = None,
                  fault_injector=None, exact_params=None,
-                 engine_id: str | None = None) -> None:
+                 engine_id: str | None = None,
+                 shadow_params=None,
+                 shadow_numerics: str | None = None) -> None:
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -204,6 +250,38 @@ class ServingEngine:
             raise ValueError(
                 "fault injection targets the plain serving path; the "
                 "speculative path's emissions are exact-verified already")
+        # -- A/B shadow serving (repro.serving.shadow) -----------------------
+        # a sampled fraction of FINISHED requests replays teacher-forced
+        # through a second pack on this engine's ModelApi; the replay
+        # happens at finish time inside step() and records a "shadow" span
+        self._shadow = None
+        self._finish_count = 0
+        if ecfg.shadow_fraction > 0:
+            if shadow_params is None:
+                raise ValueError(
+                    "shadow_fraction > 0 needs shadow_params: the second "
+                    "NumericsSpec pack sampled requests replay through "
+                    "(same weights, different numerics)")
+            if self._spec_k:
+                raise ValueError(
+                    "shadow serving + speculative decode is unsupported: "
+                    "the draft pack already occupies the second-pack slot")
+            if governor is not None:
+                raise ValueError(
+                    "shadow serving + governor is unsupported: a mid-run "
+                    "hot-swap would mix regimes inside one A/B verdict")
+            from repro.serving.shadow import ShadowRunner
+
+            self._shadow = ShadowRunner(
+                self.api, ecfg, params, shadow_params,
+                primary_label=numerics or "primary",
+                shadow_label=shadow_numerics or "shadow", mesh=mesh)
+            self.metrics.shadow_numerics = self._shadow.shadow_label
+        # modeled power attribution: profile the live pack per numerics
+        # label (cached — a governor escalate/relax cycle profiles each
+        # rung once) and register it with the metrics joiner
+        self._power_profiles: dict = {}
+        self._register_power_profile()
         self.active: dict[int, Request] = {}
         self._rid = itertools.count()
         decode_slots = self.api.decode_slots
@@ -367,7 +445,41 @@ class ServingEngine:
         if (self._probe is not None
                 and self._steps % self.ecfg.error_probe_every == 0):
             self._run_probe(batch, cache_before, tables)
+        if self._shadow is not None and finished:
+            self._run_shadow(finished)
         return expired + finished
+
+    # -- A/B shadow serving (repro.serving.shadow) ---------------------------
+
+    def _run_shadow(self, finished: list[Request]) -> None:
+        """Replay sampled finished requests through the shadow pack.
+
+        Sampling is deterministic (every Nth finished request with
+        generated tokens), the replay is teacher-forced along the
+        PRIMARY's emitted tokens, and each replay records a ``shadow``
+        span whose duration is the replay's wall time — so stall
+        attribution prices shadow cost like probe cost."""
+        for r in finished:
+            if not r.generated:
+                continue
+            self._finish_count += 1
+            if not self._shadow.wants(self._finish_count):
+                continue
+            t0 = time.perf_counter()
+            rec = self._shadow.replay(r.prompt, r.generated)
+            t1 = time.perf_counter()
+            self.metrics.record_shadow(rec)
+            if self.tracer is not None:
+                self.tracer.record(
+                    "shadow", rid=r.rid, t=t0, dur=t1 - t0,
+                    tokens=rec["tokens"], matches=rec["matches"],
+                    logits_err_var=rec["logits_err"]["var"],
+                    logits_err_max_abs=rec["logits_err"]["max_abs"])
+
+    def shadow_verdict(self) -> dict | None:
+        """The accumulated accuracy-vs-power A/B verdict (None when no
+        shadow is configured or nothing was sampled yet)."""
+        return self._shadow.verdict() if self._shadow is not None else None
 
     # -- fault detection & quarantine (repro.quant.faults) -------------------
 
@@ -642,6 +754,7 @@ class ServingEngine:
         the probe's observe forward — a degraded MAC array corrupts what
         the probe measures, which is exactly how the governor sees it —
         and the report feeds the governor's running SLO estimate."""
+        t0 = time.perf_counter()
         inj = self._injector
         if inj is not None and inj.spec.surface == "dense":
             log0 = len(inj.log)
@@ -654,19 +767,28 @@ class ServingEngine:
             report = self._probe.run(self.params, batch.tokens,
                                      batch.n_valid, cache_before,
                                      block_tables=tables)
+        t1 = time.perf_counter()
         if report is None:
             return
         rid = next((r.rid for r in batch.rows if r.slot == report["row"]),
                    None)
         self.metrics.record_probe(report)
         if self.tracer is not None:
-            lvars = [st["var"] for st in report["layers"].values()]
+            # the span's duration is the eager probe forward's wall time:
+            # the decode gap it opens inside the step loop is then
+            # attributable to the probe instead of scheduler idle
+            lvars = {p: st["var"] for p, st in report["layers"].items()}
+            extra = {}
+            if lvars:
+                worst = max(lvars, key=lvars.get)
+                extra = {"max_layer_err_var": lvars[worst],
+                         "worst_layer": worst}
             self.tracer.record(
-                "probe", rid=rid,
+                "probe", rid=rid, t=t0, dur=t1 - t0,
                 logits_err_var=report["logits"]["var"],
                 logits_err_max_abs=report["logits"]["max_abs"],
-                mean_layer_err_var=(sum(lvars) / len(lvars)
-                                    if lvars else 0.0))
+                mean_layer_err_var=(sum(lvars.values()) / len(lvars)
+                                    if lvars else 0.0), **extra)
         if self.governor is not None:
             self._apply_decision(self.governor.observe_probe(report))
 
@@ -690,6 +812,8 @@ class ServingEngine:
         self.params = pack
         self.numerics = rung.name
         self.metrics.numerics = rung.name
+        # the new rung's tokens attribute to ITS power profile from here on
+        self._register_power_profile()
         self.metrics.governor_switches += 1
         if decision.action == "escalate":
             self.metrics.governor_escalations += 1
@@ -698,6 +822,16 @@ class ServingEngine:
         if self.tracer is not None:
             self.tracer.record("governor_switch", step=self._steps,
                                **decision.to_dict())
+
+    def _register_power_profile(self) -> None:
+        """Profile the LIVE pack (cached per numerics label) and register
+        it with the metrics power-attribution joiner."""
+        label = self.numerics or "unknown"
+        prof = self._power_profiles.get(label)
+        if prof is None:
+            prof = power_profile_from_params(self.params)
+            self._power_profiles[label] = prof
+        self.metrics.set_power_profile(label, prof)
 
     def _windowed_block_stats(self) -> dict:
         """Pool block stats with the cumulative counters rebased to the
@@ -780,8 +914,12 @@ class ServingEngine:
             decode_specialized=self.metrics.decode_specialized,
             window_s=self.ecfg.metrics_window_s,
             speculative_k=self._spec_k,
-            draft_numerics=self.draft_numerics if self._spec_k else None)
+            draft_numerics=self.draft_numerics if self._spec_k else None,
+            shadow_numerics=(self._shadow.shadow_label
+                             if self._shadow is not None else None))
         self._bridge_window_samples()
+        for label, prof in self._power_profiles.items():
+            self.metrics.set_power_profile(label, prof)
         if self._paged:
             self.pool.reset_peak_blocks()
             self._block_baseline = self.pool.block_stats()

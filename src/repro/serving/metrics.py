@@ -154,6 +154,30 @@ def _merge_moments(a: tuple[int, float, float],
     return n, mean, m2 / n
 
 
+def merge_layer_moments(*maps: dict) -> dict:
+    """Dict-union Chan merge of layer-keyed ``(n, mean, var)`` maps.
+
+    The shared primitive behind per-layer probe aggregation: the running
+    engine totals, the per-window accumulators, the governor's per-layer
+    SLO windows, and the fleet merge all combine layer moment maps with
+    this.  Associative and layout-independent: merging ``(a, b)`` then
+    ``c`` equals merging ``a`` then ``(b, c)``, and the key union never
+    depends on which engine saw which layer first.
+    """
+    out: dict = {}
+    for m in maps:
+        for path, mom in m.items():
+            out[path] = _merge_moments(out.get(path, (0, 0.0, 0.0)),
+                                       tuple(mom))
+    return out
+
+
+def _sig(x: float, digits: int = 6) -> float:
+    """Round to significant digits (err variances span many decades;
+    fixed decimal rounding flushes the small ones to zero)."""
+    return float(f"{x:.{digits}g}")
+
+
 @dataclasses.dataclass
 class EngineMetrics:
     #: set by the first record_step (lazy); None while nothing was served
@@ -260,6 +284,31 @@ class EngineMetrics:
     _probe_layers: dict = dataclasses.field(default_factory=dict)
     _probe_logits: tuple = (0, 0.0, 0.0)
 
+    # per-WINDOW probe accumulators: moments are not diffable counters
+    # (a base-vs-current subtraction is meaningless for a variance), so
+    # the window roller keeps fresh accumulators reset at every roll
+    # instead of riding _window_counters
+    _win_probe_runs: int = 0
+    _win_probe_layers: dict = dataclasses.field(default_factory=dict)
+    _win_probe_logits: tuple = (0, 0.0, 0.0)
+
+    # modeled power attribution: per-numerics-label layer cost profiles
+    # ({path: {mac_per_token, saving_pct}}, derived from the live packed
+    # params by the engine) joined against the token mix actually served
+    # under each label — so a governor hot-swap mid-run splits the
+    # attribution between rungs instead of crediting the final pack
+    power_profiles: dict = dataclasses.field(default_factory=dict)
+    _tokens_by_numerics: dict = dataclasses.field(default_factory=dict)
+
+    # A/B shadow serving (repro.serving.shadow): sampled-request replay
+    # of a second pack; counters + Chan-merged logit-delta moments
+    shadow_numerics: str | None = None
+    shadow_sampled: int = 0
+    shadow_tokens: int = 0
+    shadow_token_matches: int = 0
+    _shadow_logits: tuple = (0, 0.0, 0.0)
+    _shadow_max_abs: float = 0.0
+
     # -- recording -----------------------------------------------------------
 
     def start_clock(self) -> None:
@@ -290,6 +339,13 @@ class EngineMetrics:
         self.draft_calls += draft_calls
         self.prompt_tokens += prompt_tokens
         self.generated_tokens += generated_tokens
+        if prompt_tokens or generated_tokens:
+            # attribute served tokens to the numerics label active NOW —
+            # the join key for modeled power attribution
+            label = self.numerics or "unknown"
+            self._tokens_by_numerics[label] = (
+                self._tokens_by_numerics.get(label, 0)
+                + prompt_tokens + generated_tokens)
         self._occupancy_sum += occupancy
         self._queue_depth_sum += queue_depth
         self._samples += 1
@@ -332,6 +388,13 @@ class EngineMetrics:
                 "governor_switches": self.governor_switches,
                 "faults_detected": self.faults_detected,
                 "quarantines": self.quarantines,
+                "shadow_sampled": self.shadow_sampled,
+                "shadow_tokens": self.shadow_tokens,
+                "shadow_token_matches": self.shadow_token_matches,
+                # per-label token counters (flattened; labels can appear
+                # mid-run on a governor switch, hence base.get below)
+                **{f"_tok/{k}": v
+                   for k, v in self._tokens_by_numerics.items()},
                 "_occupancy_sum": self._occupancy_sum,
                 "_queue_depth_sum": self._queue_depth_sum,
                 "_samples": self._samples,
@@ -349,7 +412,7 @@ class EngineMetrics:
         if dur < self.window_s:
             return
         cur, base = self._window_counters(), self._win_base
-        d = {k: cur[k] - base[k] for k in cur}
+        d = {k: cur[k] - base.get(k, 0) for k in cur}
         steps = d["_samples"]
         sample = {
             "t": round(now - (self.t_start or now), 4),
@@ -387,6 +450,47 @@ class EngineMetrics:
             sample["governor_switches"] = d["governor_switches"]
             sample["faults_detected"] = d["faults_detected"]
             sample["quarantines"] = d["quarantines"]
+        if self._win_probe_runs:
+            # layer-resolved err-var for THIS window (fresh accumulators,
+            # not a lifetime average): the per-layer time-series the
+            # dashboard heatmap and the governor's layer SLOs consume.
+            # probe_layers is a nested dict — it survives JSONL traces;
+            # the Chrome counter export keeps only the numeric scalars.
+            _, _, lvar = self._win_probe_logits
+            lvars = {p: v for p, (_, _, v) in self._win_probe_layers.items()}
+            sample["probe_runs"] = self._win_probe_runs
+            sample["probe_logits_err_var"] = _sig(lvar)
+            if lvars:
+                worst = max(lvars, key=lvars.get)
+                sample["probe_max_layer_err_var"] = _sig(lvars[worst])
+                sample["probe_worst_layer"] = worst
+                sample["probe_layers"] = {p: _sig(v)
+                                          for p, v in sorted(lvars.items())}
+        if self.shadow_numerics is not None:
+            sample["shadow_sampled"] = d["shadow_sampled"]
+            sample["shadow_tokens"] = d["shadow_tokens"]
+            sample["shadow_token_match_rate"] = (
+                round(d["shadow_token_matches"] / d["shadow_tokens"], 4)
+                if d["shadow_tokens"] else None)
+        if self.power_profiles:
+            # this window's modeled power: token mix served per numerics
+            # label x that label's per-layer MAC cost/saving profile
+            mix = {k[len("_tok/"):]: d[k] for k in d
+                   if k.startswith("_tok/") and d[k]}
+            units = saved = 0.0
+            for label, toks in mix.items():
+                for ent in (self.power_profiles.get(label) or {}).values():
+                    u = toks * ent["mac_per_token"]
+                    units += u
+                    saved += u * ent["saving_pct"] / 100.0
+            sample["tokens_by_numerics"] = mix
+            sample["modeled_mac_units"] = round(units, 1)
+            sample["modeled_mac_units_saved"] = round(saved, 1)
+            sample["modeled_power_saving_pct"] = (
+                round(100.0 * saved / units, 3) if units else 0.0)
+        self._win_probe_runs = 0
+        self._win_probe_layers = {}
+        self._win_probe_logits = (0, 0.0, 0.0)
         if len(self.timeseries) == self.timeseries.maxlen:
             self.timeseries_dropped += 1
         self.timeseries.append(sample)
@@ -402,14 +506,19 @@ class EngineMetrics:
         (per-layer + logits ``{n, mean, var}`` of approx-vs-exact output
         deltas) into the running per-layer moments."""
         self.probe_runs += 1
+        self._win_probe_runs += 1
         for path, st in report.get("layers", {}).items():
-            prev = self._probe_layers.get(path, (0, 0.0, 0.0))
+            mom = (st["n"], st["mean"], st["var"])
             self._probe_layers[path] = _merge_moments(
-                prev, (st["n"], st["mean"], st["var"]))
+                self._probe_layers.get(path, (0, 0.0, 0.0)), mom)
+            self._win_probe_layers[path] = _merge_moments(
+                self._win_probe_layers.get(path, (0, 0.0, 0.0)), mom)
         lg = report.get("logits")
         if lg is not None:
-            self._probe_logits = _merge_moments(
-                self._probe_logits, (lg["n"], lg["mean"], lg["var"]))
+            mom = (lg["n"], lg["mean"], lg["var"])
+            self._probe_logits = _merge_moments(self._probe_logits, mom)
+            self._win_probe_logits = _merge_moments(
+                self._win_probe_logits, mom)
 
     def _probe_snapshot(self) -> dict | None:
         if not self.probe_runs and not self._probe_layers:
@@ -427,6 +536,101 @@ class EngineMetrics:
             "mean_layer_err_var": sum(lvars) / len(lvars) if lvars else None,
             "max_layer_err_var": max(lvars) if lvars else None,
             "layers": layers,
+        }
+
+    # -- A/B shadow serving --------------------------------------------------
+
+    def record_shadow(self, rec: dict) -> None:
+        """Fold one :class:`~repro.serving.shadow.ShadowRunner` replay
+        record (``{tokens, matches, logits_err: {n, mean, var, max_abs}}``)
+        into the running shadow counters."""
+        self.shadow_sampled += 1
+        self.shadow_tokens += rec.get("tokens", 0)
+        self.shadow_token_matches += rec.get("matches", 0)
+        le = rec.get("logits_err")
+        if le:
+            self._shadow_logits = _merge_moments(
+                self._shadow_logits, (le["n"], le["mean"], le["var"]))
+            self._shadow_max_abs = max(self._shadow_max_abs,
+                                       le.get("max_abs", 0.0))
+
+    def _shadow_snapshot(self) -> dict | None:
+        if not self.shadow_sampled:
+            return None
+        n, mean, var = self._shadow_logits
+        return {
+            "numerics": self.shadow_numerics,
+            "sampled_requests": self.shadow_sampled,
+            "tokens": self.shadow_tokens,
+            "token_matches": self.shadow_token_matches,
+            "token_match_rate": (
+                round(self.shadow_token_matches / self.shadow_tokens, 4)
+                if self.shadow_tokens else None),
+            "logits_err_n": n,
+            "logits_err_mean": mean,
+            "logits_err_var": var,
+            "logits_err_max_abs": self._shadow_max_abs,
+        }
+
+    # -- modeled power attribution -------------------------------------------
+
+    def set_power_profile(self, label: str, profile: dict) -> None:
+        """Register a per-layer MAC cost/saving profile for one numerics
+        label (``{path: {mac_per_token, saving_pct}}``; see
+        :func:`repro.serving.engine.power_profile_from_params`).  The
+        engine registers the active pack's profile at construction and
+        again after every governor hot-swap."""
+        self.power_profiles[label] = dict(profile)
+
+    def _power_attribution(self) -> dict | None:
+        """Join the served token mix against the registered profiles.
+
+        ``mac_units`` are (tokens x MACs-per-token) — a relative energy
+        proxy: multiply by the per-MAC energy of the exact 8x8 array to
+        get mWh.  ``mac_units_saved`` applies each layer's cost-model
+        saving, so the totals are traffic-weighted deltas, not the static
+        plan percentages."""
+        if not self.power_profiles:
+            return None
+        per_layer: dict[str, dict] = {}
+        per_tier: dict[str, dict] = {}
+        for label, toks in sorted(self._tokens_by_numerics.items()):
+            prof = self.power_profiles.get(label) or {}
+            t_units = t_saved = 0.0
+            for path, ent in prof.items():
+                units = toks * ent["mac_per_token"]
+                saved = units * ent["saving_pct"] / 100.0
+                t_units += units
+                t_saved += saved
+                lay = per_layer.setdefault(
+                    path, {"mac_units": 0.0, "mac_units_saved": 0.0})
+                lay["mac_units"] += units
+                lay["mac_units_saved"] += saved
+            per_tier[label] = {
+                "tokens": toks,
+                "mac_units": round(t_units, 1),
+                "mac_units_saved": round(t_saved, 1),
+                "power_saving_pct": (round(100.0 * t_saved / t_units, 3)
+                                     if t_units else 0.0),
+            }
+        for lay in per_layer.values():
+            lay["saving_pct"] = (
+                round(100.0 * lay["mac_units_saved"] / lay["mac_units"], 3)
+                if lay["mac_units"] else 0.0)
+            lay["mac_units"] = round(lay["mac_units"], 1)
+            lay["mac_units_saved"] = round(lay["mac_units_saved"], 1)
+        units = sum(t["mac_units"] for t in per_tier.values())
+        saved = sum(t["mac_units_saved"] for t in per_tier.values())
+        return {
+            "tokens_attributed": sum(self._tokens_by_numerics.values()),
+            "tokens_by_numerics": dict(sorted(
+                self._tokens_by_numerics.items())),
+            "mac_units": round(units, 1),
+            "mac_units_saved": round(saved, 1),
+            "modeled_power_saving_pct": (round(100.0 * saved / units, 3)
+                                         if units else 0.0),
+            "per_tier": per_tier,
+            "per_layer": dict(sorted(per_layer.items())),
         }
 
     # -- derived -------------------------------------------------------------
@@ -522,6 +726,8 @@ class EngineMetrics:
             "timeseries_samples": len(self.timeseries),
             "timeseries_dropped": self.timeseries_dropped,
             "error_probe": self._probe_snapshot(),
+            "shadow": self._shadow_snapshot(),
+            "power_attribution": self._power_attribution(),
         }
 
     # -- fleet merge ---------------------------------------------------------
@@ -663,4 +869,77 @@ class EngineMetrics:
             }
         else:
             out["error_probe"] = None
+        # A/B shadow: counters sum, logit-delta moments Chan-merge,
+        # match rate recomputes from the summed counters
+        shadows = [s["shadow"] for s in snaps if s.get("shadow")]
+        if shadows:
+            logits = (0, 0.0, 0.0)
+            for sh in shadows:
+                logits = _merge_moments(
+                    logits, (sh["logits_err_n"], sh["logits_err_mean"],
+                             sh["logits_err_var"]))
+            toks = sum(sh["tokens"] for sh in shadows)
+            matches = sum(sh["token_matches"] for sh in shadows)
+            snum = {sh.get("numerics") for sh in shadows}
+            out["shadow"] = {
+                "numerics": snum.pop() if len(snum) == 1 else "mixed",
+                "sampled_requests": sum(sh["sampled_requests"]
+                                        for sh in shadows),
+                "tokens": toks,
+                "token_matches": matches,
+                "token_match_rate": (round(matches / toks, 4)
+                                     if toks else None),
+                "logits_err_n": logits[0],
+                "logits_err_mean": logits[1],
+                "logits_err_var": logits[2],
+                "logits_err_max_abs": max(sh["logits_err_max_abs"]
+                                          for sh in shadows),
+            }
+        else:
+            out["shadow"] = None
+        # power attribution: mac-unit totals sum (they are extensive
+        # quantities), percentages recompute from the summed units
+        powers = [s["power_attribution"] for s in snaps
+                  if s.get("power_attribution")]
+        if powers:
+            per_tier: dict = {}
+            per_layer: dict = {}
+            tok_mix: dict = {}
+            for p in powers:
+                for label, t in p.get("per_tier", {}).items():
+                    cur = per_tier.setdefault(label, {
+                        "tokens": 0, "mac_units": 0.0,
+                        "mac_units_saved": 0.0})
+                    cur["tokens"] += t["tokens"]
+                    cur["mac_units"] += t["mac_units"]
+                    cur["mac_units_saved"] += t["mac_units_saved"]
+                for path, lay in p.get("per_layer", {}).items():
+                    cur = per_layer.setdefault(path, {
+                        "mac_units": 0.0, "mac_units_saved": 0.0})
+                    cur["mac_units"] += lay["mac_units"]
+                    cur["mac_units_saved"] += lay["mac_units_saved"]
+                for label, t in p.get("tokens_by_numerics", {}).items():
+                    tok_mix[label] = tok_mix.get(label, 0) + t
+            for cur in list(per_tier.values()) + list(per_layer.values()):
+                cur["mac_units"] = round(cur["mac_units"], 1)
+                cur["mac_units_saved"] = round(cur["mac_units_saved"], 1)
+                pct = (100.0 * cur["mac_units_saved"] / cur["mac_units"]
+                       if cur["mac_units"] else 0.0)
+                key = "power_saving_pct" if "tokens" in cur else "saving_pct"
+                cur[key] = round(pct, 3)
+            units = sum(t["mac_units"] for t in per_tier.values())
+            saved = sum(t["mac_units_saved"] for t in per_tier.values())
+            out["power_attribution"] = {
+                "tokens_attributed": sum(p["tokens_attributed"]
+                                         for p in powers),
+                "tokens_by_numerics": dict(sorted(tok_mix.items())),
+                "mac_units": round(units, 1),
+                "mac_units_saved": round(saved, 1),
+                "modeled_power_saving_pct": (
+                    round(100.0 * saved / units, 3) if units else 0.0),
+                "per_tier": dict(sorted(per_tier.items())),
+                "per_layer": dict(sorted(per_layer.items())),
+            }
+        else:
+            out["power_attribution"] = None
         return out

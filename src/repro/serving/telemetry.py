@@ -27,7 +27,13 @@ Span taxonomy (:data:`SPAN_KINDS`):
     ``drafted``/``accepted``/``emitted`` ride in args, so per-request
     acceptance is reconstructable from the trace alone
   * ``probe``         — one approximation-error probe result
-    (:mod:`repro.quant.error_probe`)
+    (:mod:`repro.quant.error_probe`); carries the eager probe forward's
+    wall time as its duration, so stall attribution can classify the
+    decode gap it created as probe cost rather than scheduler idle
+  * ``shadow``        — one A/B shadow replay of a finished sampled
+    request through the second pack (:mod:`repro.serving.shadow`);
+    ``tokens``/``matches``/``logits_err_var`` ride in args and the
+    replay's wall time is the duration
   * ``metrics_window``— one windowed time-series sample
     (:class:`~repro.serving.metrics.EngineMetrics`); exported as Chrome
     *counter* events so Perfetto plots the series
@@ -80,6 +86,7 @@ SPAN_KINDS: tuple[str, ...] = (
     "draft",
     "verify",
     "probe",
+    "shadow",
     "metrics_window",
     "governor_switch",
     "fault_detected",

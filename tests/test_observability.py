@@ -1,0 +1,379 @@
+"""Observability layer: layer-resolved attribution, A/B shadow serving,
+OpenMetrics export, and the dashboard/report tooling.
+
+Unit coverage (no model): merge_layer_moments associativity and layout
+independence against pooled numpy moments; the windowed per-layer probe
+section (fresh accumulators each roll); governor per-layer SLOs (breach
+names the layer, config validation, first-match-wins ceilings);
+OpenMetrics writer/parser round-trip including label escaping; the
+fault-spec ``@LAYERS`` segment grammar; trace_report gap-cause
+attribution of probe/shadow overhead on synthetic events; dashboard
+smoke-render from synthetic events.
+
+Integration coverage (reduced model): the shadow control experiment —
+replaying through a shadow pack IDENTICAL to the primary must yield
+token match 1.0, zero logits err-var, zero power delta, and verdict
+keep-primary, without perturbing the primary's emitted tokens.
+"""
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import EngineConfig
+from repro.launch.serve import ServeConfig, build_serving_params
+from repro.models import build_model
+from repro.numerics import get_preset
+from repro.quant.faults import FaultSpec
+from repro.serving import (EngineMetrics, GovernorConfig, NumericsGovernor,
+                           ServingEngine)
+from repro.serving.metrics import merge_layer_moments
+from repro.serving.prom import metric_value, parse_openmetrics, to_openmetrics
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import obs_dashboard  # noqa: E402
+import trace_report  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# per-layer moment merge (no model)
+# ---------------------------------------------------------------------------
+
+
+def _layer_map(rng, layers):
+    out = {}
+    for path in layers:
+        xs = rng.normal(loc=rng.uniform(-1, 1), size=int(rng.integers(3, 40)))
+        out[path] = (len(xs), float(np.mean(xs)), float(np.var(xs)))
+    return out
+
+
+def test_merge_layer_moments_associative_and_layout_independent():
+    rng = np.random.default_rng(3)
+    a = _layer_map(rng, ["blocks/0/q", "blocks/0/k"])
+    b = _layer_map(rng, ["blocks/0/q", "blocks/1/o"])
+    c = _layer_map(rng, ["blocks/1/o", "blocks/2/up"])
+    left = merge_layer_moments(merge_layer_moments(a, b), c)
+    right = merge_layer_moments(a, merge_layer_moments(b, c))
+    flat = merge_layer_moments(a, b, c)
+    # key union never depends on merge order or which map saw a layer first
+    assert set(left) == set(right) == set(flat) == {
+        "blocks/0/q", "blocks/0/k", "blocks/1/o", "blocks/2/up"}
+    for path in left:
+        for other in (right, flat):
+            assert left[path][0] == other[path][0]
+            assert left[path][1] == pytest.approx(other[path][1], rel=1e-9)
+            assert left[path][2] == pytest.approx(other[path][2], rel=1e-9)
+
+
+def test_merge_layer_moments_matches_pooled():
+    rng = np.random.default_rng(7)
+    xs, ys = rng.normal(size=50), rng.normal(loc=2.0, size=31)
+    stat = lambda x: (len(x), float(np.mean(x)), float(np.var(x)))
+    merged = merge_layer_moments({"L": stat(xs)}, {"L": stat(ys)})["L"]
+    pooled = np.concatenate([xs, ys])
+    assert merged[0] == len(pooled)
+    assert merged[1] == pytest.approx(float(np.mean(pooled)))
+    assert merged[2] == pytest.approx(float(np.var(pooled)))
+
+
+# ---------------------------------------------------------------------------
+# windowed per-layer probe section (no model)
+# ---------------------------------------------------------------------------
+
+
+def _probe_report(var, path="blocks/0/q"):
+    return {"row": 0,
+            "layers": {path: {"n": 4, "mean": 0.0, "var": var}},
+            "logits": {"n": 4, "mean": 0.0, "var": var, "max_abs": 1.0}}
+
+
+def test_window_probe_section_resets_each_roll():
+    m = EngineMetrics(window_s=0.01)
+    m.start_clock()
+    m.record_step("decode", 0.5, 0, generated_tokens=1)  # arms the window
+    m.record_probe(_probe_report(2.0))
+    time.sleep(0.012)
+    m.record_step("decode", 0.5, 0, generated_tokens=1)  # rolls window 1
+    assert len(m.timeseries) == 1
+    w1 = m.timeseries[0]
+    assert w1["probe_runs"] == 1
+    assert w1["probe_layers"]["blocks/0/q"] == pytest.approx(2.0)
+    assert w1["probe_worst_layer"] == "blocks/0/q"
+    # window 2 sees ONLY its own probes (fresh accumulators, not deltas
+    # of the running totals — moments are not diffable)
+    m.record_probe(_probe_report(8.0, path="blocks/1/k"))
+    time.sleep(0.012)
+    m.record_step("decode", 0.5, 0, generated_tokens=1)
+    w2 = m.timeseries[1]
+    assert set(w2["probe_layers"]) == {"blocks/1/k"}
+    assert w2["probe_layers"]["blocks/1/k"] == pytest.approx(8.0)
+    # ...while the lifetime snapshot still pools both layers
+    layers = m.snapshot()["error_probe"]["layers"]
+    assert set(layers) == {"blocks/0/q", "blocks/1/k"}
+
+
+# ---------------------------------------------------------------------------
+# governor per-layer SLOs (no model)
+# ---------------------------------------------------------------------------
+
+
+def _rungs(savings=(40.0, 10.0, 0.0)):
+    from repro.numerics.ladder import LadderRung
+
+    return [LadderRung(name=f"rung{i}", spec=None, power_saving_pct=s)
+            for i, s in enumerate(savings)]
+
+
+def test_governor_layer_slo_breach_names_layer():
+    gov = NumericsGovernor(_rungs(), GovernorConfig(
+        slo_err_var=1e9,  # global SLO never trips — the layer one must
+        window_probes=2, clean_windows_to_relax=2,
+        layer_slo={"blocks/0/*": 1e-4}))
+    assert gov.observe_probe(_probe_report(1.0)) is None  # window open
+    d = gov.observe_probe(_probe_report(1.0))
+    assert d is not None and d.action == "escalate"
+    dd = d.to_dict()
+    assert dd["reason"] == "layer_slo_breach"
+    assert dd["layer"] == "blocks/0/q"
+    assert dd["err_var"] == pytest.approx(1.0)
+
+
+def test_governor_layer_slo_ignores_unwatched_layers():
+    gov = NumericsGovernor(_rungs(), GovernorConfig(
+        slo_err_var=1e9, window_probes=1, clean_windows_to_relax=2,
+        layer_slo={"blocks/7/*": 1e-4}))
+    # huge error on a layer no pattern matches: no decision
+    assert gov.observe_probe(_probe_report(50.0, path="blocks/0/q")) is None
+
+
+def test_governor_layer_slo_first_match_wins():
+    gov = NumericsGovernor(_rungs(), GovernorConfig(
+        slo_err_var=1e9, window_probes=1, clean_windows_to_relax=2,
+        layer_slo=(("blocks/0/q", 100.0), ("blocks/0/*", 1e-6))))
+    # the exact pattern (ceiling 100) shadows the wildcard for this layer
+    assert gov.observe_probe(_probe_report(1.0, path="blocks/0/q")) is None
+    d = gov.observe_probe(_probe_report(1.0, path="blocks/0/k"))
+    assert d is not None and d.to_dict()["layer"] == "blocks/0/k"
+
+
+def test_governor_layer_slo_config_validation():
+    with pytest.raises(ValueError, match="non-empty"):
+        GovernorConfig(slo_err_var=1.0, layer_slo={"": 1.0})
+    with pytest.raises(ValueError, match="must be"):
+        GovernorConfig(slo_err_var=1.0, layer_slo={"blocks/*": -1.0})
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics writer/parser (no model)
+# ---------------------------------------------------------------------------
+
+
+def _fake_snapshot():
+    m = EngineMetrics(numerics="int8")
+    m.start_clock()
+    for _ in range(10):
+        m.record_step("decode", 0.75, 2, generated_tokens=1)
+    m.finished = 3
+    m.record_probe(_probe_report(0.25, path='blocks/0/"odd"\npath'))
+    return m.snapshot()
+
+
+def test_prom_round_trip():
+    snap = _fake_snapshot()
+    text = to_openmetrics(snap, labels={"engine": "e0"})
+    assert text.endswith("# EOF\n")
+    assert "# TYPE repro_generated_tokens gauge" in text
+    parsed = parse_openmetrics(text)
+    assert metric_value(parsed, "repro_generated_tokens",
+                        engine="e0") == snap["generated_tokens"]
+    assert metric_value(parsed, "repro_requests_finished") == 3
+    # the per-layer series carries its label through escape + unescape
+    assert metric_value(parsed, "repro_probe_layer_err_var",
+                        layer='blocks/0/"odd"\npath') == pytest.approx(
+        snap["error_probe"]["layers"]['blocks/0/"odd"\npath']["err_var"])
+    # every emitted sample parses (no silent drops)
+    samples = [l for l in text.splitlines()
+               if l and not l.startswith("#")]
+    assert len(parsed) == len(samples)
+
+
+def test_prom_cli_require(tmp_path):
+    path = tmp_path / "metrics.prom"
+    path.write_text(to_openmetrics(_fake_snapshot()))
+    from repro.serving import prom
+    assert prom.main([str(path), "--require", "repro_generated_tokens"]) == 0
+    assert prom.main([str(path), "--require", "repro_nope"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# fault-spec @LAYERS grammar (no model)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_layer_segment_parse():
+    s = FaultSpec.parse("dense-noise@1@blocks/0/*")
+    assert (s.kind, s.every, s.start, s.stop) == ("dense-noise", 1, 0, None)
+    assert s.layers == "blocks/0/*"
+    s = FaultSpec.parse("dense-noise@2@10-30@blocks/0/o")
+    assert (s.start, s.stop, s.layers) == (10, 30, "blocks/0/o")
+    # a range-looking third segment stays a range, not a pattern
+    s = FaultSpec.parse("spike@7@20-60")
+    assert (s.start, s.stop, s.layers) == (20, 60, "*")
+    s = FaultSpec.parse("nan@5")
+    assert (s.start, s.stop, s.layers) == (0, None, "*")
+    with pytest.raises(ValueError, match="at most one layer"):
+        FaultSpec.parse("dense-noise@1@a/*@b/*")
+    with pytest.raises(ValueError):
+        FaultSpec.parse("dense-noise")
+
+
+# ---------------------------------------------------------------------------
+# gap-cause attribution + dashboard render on synthetic events (no model)
+# ---------------------------------------------------------------------------
+
+
+def _ev(kind, t, dur=0.0, rid=None, **data):
+    return {"kind": kind, "rid": rid, "t": t, "dur": dur,
+            "engine": "e0", "data": data}
+
+
+def _decode_pair(rid, t0, gap, filler=None):
+    """Two decode steps with a gap between them, optionally overlapped by
+    a filler span; returns the events."""
+    evs = [_ev("decode_step", t0, 0.01, rid=rid),
+           _ev("decode_step", t0 + 0.01 + gap, 0.01, rid=rid)]
+    if filler is not None:
+        evs.append(filler)
+    return evs
+
+
+def test_gap_cause_probe_shadow_attribution():
+    events = []
+    # rid 1: gap fully covered by a probe forward
+    events += _decode_pair(1, 0.0, 0.1,
+                           _ev("probe", 0.02, 0.08, logits_err_var=0.1))
+    # rid 2: gap covered by a shadow replay
+    events += _decode_pair(2, 1.0, 0.2,
+                           _ev("shadow", 1.02, 0.15, tokens=8, matches=8))
+    # rid 3: nothing ran in the gap
+    events += _decode_pair(3, 2.0, 0.3)
+    # rid 4: a zero-duration probe marker must NOT claim the gap
+    events += _decode_pair(4, 3.0, 0.25, _ev("probe", 3.05, 0.0))
+    gaps = {g["rid"]: g["cause"]
+            for g in trace_report._stall_attribution(events, top=10)}
+    assert gaps[1] == "probe"
+    assert gaps[2] == "shadow"
+    assert gaps[3] == "scheduler_idle"
+    assert gaps[4] == "scheduler_idle"
+
+
+def test_gap_cause_precedence_over_probe():
+    # prefill interference wins even when a probe also ran in the gap
+    events = _decode_pair(1, 0.0, 0.2,
+                          _ev("probe", 0.05, 0.1))
+    events.append(_ev("prefill_chunk", 0.04, 0.05, rid=9))
+    (gap,) = trace_report._stall_attribution(events, top=1)
+    assert gap["cause"] == "prefill_interference"
+
+
+def _synthetic_obs_events():
+    events = []
+    for i in range(3):
+        events.append(_ev("metrics_window", 0.1 * (i + 1), 0.0,
+                          t_rel=None, gen_tok_per_s=100.0 + i,
+                          probe_runs=1, probe_logits_err_var=1e-4,
+                          probe_max_layer_err_var=2e-4 * (i + 1),
+                          probe_worst_layer="blocks/0/q",
+                          probe_layers={"blocks/0/q": 2e-4 * (i + 1),
+                                        "blocks/1/k": 1e-5},
+                          tokens_by_numerics={"int8": 40},
+                          modeled_mac_units=1000.0,
+                          modeled_mac_units_saved=300.0,
+                          modeled_power_saving_pct=30.0))
+    events.append(_ev("shadow", 0.25, 0.02, rid=0, tokens=8, matches=7,
+                      logits_err_var=1e-3))
+    return events
+
+
+def test_dashboard_smoke_render():
+    doc, rendered = obs_dashboard.render(
+        _synthetic_obs_events(),
+        verdicts=[{"primary": "int8", "shadow": "serve-default",
+                   "verdict": "keep-primary", "reason": "test",
+                   "token_match_rate": 0.875, "tokens": 8,
+                   "sampled_requests": 1, "logits_err_var": 1e-3,
+                   "power_delta_pct": 34.6}])
+    assert rendered["windows"] and rendered["heatmap"]
+    assert rendered["shadow"] and rendered["power"]
+    assert not rendered["governor"]  # no switches in these events
+    assert "<svg" in doc and "blocks/0/q" in doc
+    assert "keep-primary" in doc
+
+
+def test_dashboard_cli_assert_sections(tmp_path):
+    trace = tmp_path / "trace.jsonl"
+    with open(trace, "w") as f:
+        for e in _synthetic_obs_events():
+            f.write(json.dumps({"kind": e["kind"], "t": e["t"],
+                                "dur": e["dur"], "rid": e["rid"],
+                                "engine": e["engine"], **e["data"]}) + "\n")
+    out = tmp_path / "dash.html"
+    assert obs_dashboard.main([str(trace), "--out", str(out),
+                               "--assert-sections", "windows", "heatmap",
+                               "shadow", "power"]) == 0
+    assert "<html" in out.read_text()
+    # governor section did not render -> assertion path returns nonzero
+    assert obs_dashboard.main([str(trace), "--out", str(out),
+                               "--assert-sections", "governor"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# shadow control experiment (reduced model)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_shadow_control_is_exact():
+    cfg = dataclasses.replace(get_config("olmo-1b-reduced"),
+                              compute_dtype="float32")
+    api = build_model(cfg)
+    params_float = api.init(jax.random.PRNGKey(0))
+    spec = get_preset("int8")
+    params = build_serving_params(params_float, cfg, ServeConfig(spec=spec))
+
+    def run(shadow):
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(slots=2, max_len=64, prefill_chunk=16,
+                         cache_dtype="float32",
+                         shadow_fraction=1.0 if shadow else 0.0),
+            api=api, numerics=spec.name,
+            shadow_params=params if shadow else None,
+            shadow_numerics=spec.name if shadow else None)
+        rng = np.random.default_rng(11)
+        for _ in range(3):
+            eng.submit(rng.integers(0, cfg.vocab, 9).tolist(), 6)
+        finished = eng.run()
+        assert len(finished) == 3
+        return [r.generated for r in finished], eng
+
+    baseline, _ = run(shadow=False)
+    shadowed, eng = run(shadow=True)
+    # replay must not perturb the primary's own emitted tokens
+    assert shadowed == baseline
+    v = eng.shadow_verdict()
+    assert v is not None and v["sampled_requests"] == 3
+    # identical packs: perfect token match, zero error, zero power delta
+    assert v["token_match_rate"] == 1.0
+    assert v["logits_err_var"] == 0.0
+    assert v["power_delta_pct"] == 0.0
+    assert v["verdict"] == "keep-primary"
+    snap = eng.metrics.snapshot()
+    assert snap["shadow"]["sampled_requests"] == 3
+    assert snap["shadow"]["token_match_rate"] == 1.0

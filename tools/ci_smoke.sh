@@ -19,16 +19,13 @@ python -m repro.launch.serve plan --arch olmo-1b-reduced --preset int8 --json > 
 echo "== quickstart (spec/plan/apply public API) =="
 python examples/quickstart.py
 
-echo "== kernel bench quick mode (1 rep; fails smoke on kernel-path breakage) =="
-python -m benchmarks.kernel_bench --reps 1 --no-write > /dev/null
+echo "== bench regression gate (quick kernel + mixed-load serve runs vs committed BENCH_*.json) =="
+python tools/bench_gate.py --quick
 
 echo "== serving-engine smoke (reduced model, approximate+CV) =="
 python -m repro.launch.serve --engine --requests 8 \
     --arch olmo-1b-reduced --mode perforated --m 2 \
     --slots 4 --max-len 64 --chunk 16
-
-echo "== mixed-load serve bench (decode stall p95, mixed on/off, 1 rep) =="
-python -m benchmarks.serve_bench --mixed-load-only --reps 1 --no-write
 
 echo "== paged KV smoke (block_size=8, shared-prefix pair, prefix hit asserted) =="
 python -m repro.launch.serve --engine --requests 6 \
@@ -88,5 +85,40 @@ python tools/trace_report.py "$FLEET_TRACE_DIR"/trace-*.jsonl --assert-lifecycle
 
 echo "== fleet serve bench (2-tier fleet vs monolithic, token identity asserted, 1 rep) =="
 python -m benchmarks.serve_bench --fleet-only --reps 1 --no-write
+
+echo "== shadow A/B smoke (sampled teacher-forced replay, verdict asserted) + OpenMetrics export =="
+PROM_OUT="$(mktemp -t repro_prom_XXXX.txt)"
+OBS_TRACE="$(mktemp -t repro_obs_trace_XXXX.jsonl)"
+DASH_OUT="$(mktemp -t repro_dash_XXXX.html)"
+trap 'rm -f "$TRACE_OUT" "$FAULT_TRACE" "$PROM_OUT" "$OBS_TRACE" "$DASH_OUT"; rm -rf "$FLEET_TRACE_DIR"' EXIT
+python -m repro.launch.serve --engine --requests 6 \
+    --arch olmo-1b-reduced --preset int8 \
+    --slots 4 --max-len 64 --chunk 16 \
+    --shadow-spec serve-default --shadow-fraction 0.5 --assert-shadow \
+    --trace-out "$OBS_TRACE" --metrics-window 0.05 --error-probe-every 2 \
+    --prom-out "$PROM_OUT"
+
+echo "== OpenMetrics exposition (parse round-trip, required series asserted) =="
+python -m repro.serving.prom "$PROM_OUT" \
+    --require repro_generated_tokens repro_requests_finished repro_gen_tok_per_s
+
+echo "== trace report --format json (shadow section present) =="
+python tools/trace_report.py "$OBS_TRACE" --format json \
+    | python -c "import json,sys; r=json.load(sys.stdin); assert r['shadow'] and r['shadow']['replays'] >= 1, r['shadow']"
+
+echo "== observability dashboard (static HTML from the JSONL trace, sections asserted) =="
+python tools/obs_dashboard.py "$OBS_TRACE" --out "$DASH_OUT" \
+    --assert-sections windows heatmap shadow power
+
+echo "== layer-SLO smoke (single-layer dense fault -> per-layer window err-var + named escalation) =="
+python -m repro.launch.serve --engine --requests 6 \
+    --arch olmo-1b-reduced --mode perforated --m 2 \
+    --slots 4 --max-len 64 --chunk 16 \
+    --governor --slo-err-var 100.0 --layer-slo 'blocks/0/*=1e-6' \
+    --inject-faults 'dense-noise@1@blocks/0/*' --error-probe-every 2 \
+    --metrics-window 0.05 --assert-layer-breach 'blocks/0/*'
+
+echo "== shadow serve bench (verdict + exact-control null experiment, deterministic) =="
+python -m benchmarks.serve_bench --shadow-only --reps 1 --no-write
 
 echo "CI smoke OK"

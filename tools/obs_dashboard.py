@@ -1,0 +1,311 @@
+#!/usr/bin/env python
+"""Render serving traces as a static, self-contained HTML dashboard.
+
+    python tools/obs_dashboard.py /tmp/trace.jsonl --out dash.html
+    python tools/obs_dashboard.py --trace /tmp/fleet/trace-int8-0.jsonl \\
+        --trace /tmp/fleet/trace-exact-0.jsonl --bench BENCH_serve.json \\
+        --out fleet.html --assert-sections windows heatmap
+
+One HTML file, no external assets, no JS dependencies — inline SVG for
+the time-series and CSS-colored tables for everything else, so the file
+opens anywhere (including CI artifact viewers).  Sections, each rendered
+only when the trace carries its data:
+
+  * **windows** — windowed gen tok/s and probe logits err-var series
+    (``metrics_window`` spans);
+  * **heatmap** — per-layer error-variance heatmap, layers x windows,
+    log-scaled color (the ``probe_layers`` dict each window sample
+    carries; JSONL traces only — the Chrome counter export drops nested
+    args);
+  * **governor** — accuracy-SLO governor switch history, including the
+    breaching layer when a per-layer SLO drove the escalation;
+  * **shadow** — A/B shadow replay rollup (token agreement, logit-delta
+    stats, replay cost) plus any verdict rows from ``--verdict`` /
+    ``--bench``;
+  * **power** — modeled power attribution: token mix by numerics label
+    and the traffic-weighted saving series.
+
+Input is any trace ``tools/trace_report.py`` reads (JSONL or Chrome
+JSON; several files merge into a fleet view).  ``--bench`` points at a
+``BENCH_serve.json`` to surface its persisted ``serve/shadow/*`` verdict
+rows; ``--verdict`` embeds one raw verdict JSON (the object
+``ServingEngine.shadow_verdict()`` returns).  ``--assert-sections``
+exits non-zero unless every named section rendered with data — the CI
+smoke's dashboard gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import trace_report  # noqa: E402  (same directory; reuse its loaders)
+
+SECTIONS = ("windows", "heatmap", "governor", "shadow", "power")
+
+_CSS = """
+body { font-family: -apple-system, 'Segoe UI', sans-serif; margin: 2em;
+       background: #fafafa; color: #222; }
+h1 { font-size: 1.4em; } h2 { font-size: 1.1em; margin-top: 2em; }
+table { border-collapse: collapse; font-size: 0.85em; }
+th, td { border: 1px solid #ddd; padding: 3px 8px; text-align: right; }
+th { background: #f0f0f0; } td.l { text-align: left; }
+td.cell { min-width: 2.2em; text-align: center; color: #222; }
+.verdict-adopt-shadow { background: #e6f4e6; }
+.verdict-keep-primary { background: #fdf3e3; }
+.muted { color: #888; font-size: 0.85em; }
+svg { background: #fff; border: 1px solid #ddd; }
+"""
+
+
+def _collect_windows(events: list[dict]) -> list[dict]:
+    """metrics_window samples in time order, engine label attached."""
+    return [{**e["data"], "t": e["t"], "engine": e["engine"]}
+            for e in events if e["kind"] == "metrics_window"]
+
+
+def _svg_series(points: list[tuple[float, float]], title: str,
+                unit: str = "", w: int = 640, h: int = 130) -> str:
+    """One inline-SVG polyline chart (times on x, values on y)."""
+    if not points:
+        return ""
+    pad = 8
+    xs = [p[0] for p in points]
+    ys = [p[1] for p in points]
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = min(ys), max(ys)
+    xr = (x1 - x0) or 1.0
+    yr = (y1 - y0) or 1.0
+
+    def sx(x: float) -> float:
+        return pad + (x - x0) / xr * (w - 2 * pad)
+
+    def sy(y: float) -> float:
+        return h - pad - (y - y0) / yr * (h - 2 * pad - 14)
+
+    pts = " ".join(f"{sx(x):.1f},{sy(y):.1f}" for x, y in points)
+    dots = "".join(f'<circle cx="{sx(x):.1f}" cy="{sy(y):.1f}" r="2.5" '
+                   'fill="#1f77b4"/>' for x, y in points)
+    return (
+        f'<svg width="{w}" height="{h}" role="img">'
+        f'<text x="{pad}" y="14" font-size="12" fill="#555">'
+        f'{html.escape(title)} &#8212; min {y0:.4g} / max {y1:.4g} '
+        f'{html.escape(unit)}</text>'
+        f'<polyline points="{pts}" fill="none" stroke="#1f77b4" '
+        'stroke-width="1.5"/>' + dots + "</svg>")
+
+
+def _heat_color(v: float, lo: float, hi: float) -> str:
+    """Log-scaled white -> red ramp (err variances span decades)."""
+    if v <= 0:
+        return "#ffffff"
+    span = (hi - lo) or 1.0
+    frac = min(1.0, max(0.0, (math.log10(v) - lo) / span))
+    r, g, b = 255, round(245 - 205 * frac), round(240 - 220 * frac)
+    return f"rgb({r},{g},{b})"
+
+
+def _heatmap_html(windows: list[dict]) -> str:
+    """Layers x windows err-var heatmap from the probe_layers samples."""
+    sampled = [w for w in windows if w.get("probe_layers")]
+    if not sampled:
+        return ""
+    layers = sorted({p for w in sampled for p in w["probe_layers"]})
+    vals = [v for w in sampled for v in w["probe_layers"].values() if v > 0]
+    lo = math.log10(min(vals)) if vals else 0.0
+    hi = math.log10(max(vals)) if vals else 1.0
+    head = "".join(f"<th>w{i}</th>" for i in range(len(sampled)))
+    rows = []
+    for path in layers:
+        cells = []
+        for w in sampled:
+            v = w["probe_layers"].get(path)
+            if v is None:
+                cells.append('<td class="cell muted">&#183;</td>')
+            else:
+                cells.append(
+                    f'<td class="cell" title="{v:.3g}" '
+                    f'style="background:{_heat_color(v, lo, hi)}">'
+                    f"{v:.0e}</td>")
+        rows.append(f'<tr><td class="l">{html.escape(path)}</td>'
+                    + "".join(cells) + "</tr>")
+    return ("<h2>Per-layer error variance (heatmap)</h2>"
+            f"<p class='muted'>{len(layers)} layers x {len(sampled)} "
+            "windows; cell = that window's probe err-var, log-scaled "
+            "color, hover for the value.</p>"
+            f"<table><tr><th>layer</th>{head}</tr>{''.join(rows)}</table>")
+
+
+def _governor_html(rep: dict) -> str:
+    rb = rep.get("robustness") or {}
+    switches = rb.get("governor_switches") or []
+    if not switches:
+        return ""
+    rows = []
+    for s in switches:
+        ev = (f"{s['err_var']:.3e}" if isinstance(s.get("err_var"), float)
+              else s.get("err_var"))
+        rows.append(
+            "<tr>"
+            f"<td>{s.get('step')}</td><td class='l'>{s.get('action')}</td>"
+            f"<td class='l'>{html.escape(str(s.get('from')))} &#8594; "
+            f"{html.escape(str(s.get('to')))}</td>"
+            f"<td class='l'>{html.escape(str(s.get('reason')))}</td>"
+            f"<td class='l'>{html.escape(s['layer']) if s.get('layer') else '&#8212;'}</td>"
+            f"<td>{ev}</td><td>{s.get('power_delta_pct')}%</td></tr>")
+    return ("<h2>Governor switch history</h2>"
+            "<table><tr><th>step</th><th>action</th><th>rung</th>"
+            "<th>reason</th><th>layer</th><th>err_var</th>"
+            f"<th>power &#916;</th></tr>{''.join(rows)}</table>")
+
+
+def _shadow_html(rep: dict, verdicts: list[dict]) -> str:
+    sh = rep.get("shadow")
+    if not sh and not verdicts:
+        return ""
+    out = ["<h2>A/B shadow serving</h2>"]
+    if sh:
+        rate = (f"{sh['token_match_rate']:.2%}"
+                if sh["token_match_rate"] is not None else "n/a")
+        out.append(
+            f"<p>{sh['replays']} replays, {sh['token_matches']}/"
+            f"{sh['tokens']} tokens matched ({rate}), replay cost "
+            f"{sh['replay_time_s']*1e3:.2f}ms total.</p>")
+    if verdicts:
+        rows = []
+        for v in verdicts:
+            cls = f"verdict-{v.get('verdict', '')}"
+            rows.append(
+                f"<tr class='{html.escape(cls)}'>"
+                f"<td class='l'>{html.escape(str(v.get('primary')))}</td>"
+                f"<td class='l'>{html.escape(str(v.get('shadow')))}</td>"
+                f"<td>{v.get('sampled_requests')}</td>"
+                f"<td>{v.get('token_match_rate')}</td>"
+                f"<td>{v.get('logits_err_var'):.3g}</td>"
+                f"<td>{v.get('power_delta_pct'):+g}pp</td>"
+                f"<td class='l'><b>{html.escape(str(v.get('verdict')))}</b>"
+                f"</td><td class='l'>{html.escape(str(v.get('reason')))}"
+                "</td></tr>")
+        out.append(
+            "<table><tr><th>primary</th><th>shadow</th><th>sampled</th>"
+            "<th>match rate</th><th>logits err-var</th>"
+            "<th>power &#916;</th><th>verdict</th><th>reason</th></tr>"
+            + "".join(rows) + "</table>")
+    return "".join(out)
+
+
+def _power_html(windows: list[dict]) -> str:
+    powered = [w for w in windows if "modeled_power_saving_pct" in w]
+    if not powered:
+        return ""
+    last = powered[-1]
+    mix = last.get("tokens_by_numerics") or {}
+    rows = "".join(
+        f"<tr><td class='l'>{html.escape(str(k))}</td><td>{v}</td></tr>"
+        for k, v in sorted(mix.items()))
+    series = _svg_series(
+        [(w["t"], w["modeled_power_saving_pct"]) for w in powered],
+        "modeled power saving (traffic-weighted)", "%")
+    return ("<h2>Modeled power attribution</h2>"
+            f"<p>Latest window: {last['modeled_mac_units']:.3g} MAC-units "
+            f"served, {last['modeled_mac_units_saved']:.3g} saved "
+            f"(<b>{last['modeled_power_saving_pct']}%</b> modeled array-"
+            "power saving, cost-model x live token mix).</p>"
+            + (f"<table><tr><th>numerics</th><th>tokens (last window)</th>"
+               f"</tr>{rows}</table>" if rows else "")
+            + series)
+
+
+def render(events: list[dict], verdicts: list[dict] | None = None,
+           title: str = "repro serving dashboard") -> tuple[str, dict]:
+    """Build the dashboard HTML; returns ``(html, rendered_sections)``."""
+    rep = trace_report.report(events)
+    windows = _collect_windows(events)
+    tok = _svg_series([(w["t"], w["gen_tok_per_s"]) for w in windows
+                       if "gen_tok_per_s" in w],
+                      "generated tok/s (windowed)", "tok/s")
+    perr = _svg_series([(w["t"], w["probe_logits_err_var"]) for w in windows
+                        if "probe_logits_err_var" in w],
+                       "probe logits err-var (windowed)")
+    win_html = ""
+    if tok or perr:
+        win_html = "<h2>Windowed time-series</h2>" + tok + perr
+    parts = {
+        "windows": win_html,
+        "heatmap": _heatmap_html(windows),
+        "governor": _governor_html(rep),
+        "shadow": _shadow_html(rep, verdicts or []),
+        "power": _power_html(windows),
+    }
+    kinds = ", ".join(f"{k}={v}" for k, v in rep["kinds"].items())
+    doc = (
+        "<!doctype html><html><head><meta charset='utf-8'>"
+        f"<title>{html.escape(title)}</title><style>{_CSS}</style></head>"
+        f"<body><h1>{html.escape(title)}</h1>"
+        f"<p class='muted'>{rep['events']} events "
+        f"({len(rep['requests'])} requests): {html.escape(kinds)}</p>"
+        + "".join(parts[s] for s in SECTIONS)
+        + "</body></html>\n")
+    return doc, {s: bool(parts[s]) for s in SECTIONS}
+
+
+def _load_verdicts(verdict_path: str | None, bench_path: str | None) -> list[dict]:
+    out: list[dict] = []
+    if verdict_path:
+        with open(verdict_path) as f:
+            v = json.load(f)
+        out.extend(v if isinstance(v, list) else [v])
+    if bench_path:
+        with open(bench_path) as f:
+            doc = json.load(f)
+        for row in doc.get("rows", []):
+            if str(row.get("name", "")).startswith("serve/shadow"):
+                out.append(row)
+    return [v for v in out if v.get("verdict")]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Render serving traces as a static HTML dashboard")
+    ap.add_argument("trace", nargs="*",
+                    help="trace file(s) written by --trace-out / --trace-dir")
+    ap.add_argument("--trace", action="append", dest="traces", default=[],
+                    metavar="FILE", help="additional trace file; repeatable")
+    ap.add_argument("--out", default="obs_dashboard.html",
+                    help="output HTML path (default: %(default)s)")
+    ap.add_argument("--title", default="repro serving dashboard")
+    ap.add_argument("--verdict", metavar="FILE",
+                    help="shadow verdict JSON (ServingEngine.shadow_verdict)")
+    ap.add_argument("--bench", metavar="FILE",
+                    help="BENCH_serve.json; its serve/shadow/* verdict rows "
+                         "are surfaced in the shadow section")
+    ap.add_argument("--assert-sections", nargs="*", default=[],
+                    choices=SECTIONS, metavar="SECTION",
+                    help=f"fail unless these sections rendered {SECTIONS}")
+    args = ap.parse_args(argv)
+    paths = list(args.trace) + list(args.traces)
+    if not paths:
+        ap.error("no trace files given (positional or --trace)")
+    events = trace_report.load_traces(paths)
+    verdicts = _load_verdicts(args.verdict, args.bench)
+    doc, rendered = render(events, verdicts, title=args.title)
+    with open(args.out, "w") as f:
+        f.write(doc)
+    on = [s for s, ok in rendered.items() if ok]
+    print(f"wrote {args.out} ({len(doc)} bytes; sections: "
+          + (", ".join(on) if on else "none") + ")")
+    missing = [s for s in args.assert_sections if not rendered[s]]
+    if missing:
+        print(f"FAIL: dashboard sections missing data: {missing}",
+              file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

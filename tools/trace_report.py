@@ -2,7 +2,7 @@
 """Summarize serving span traces (JSONL or Chrome trace_event JSON).
 
     python tools/trace_report.py /tmp/trace.json
-    python tools/trace_report.py /tmp/trace.jsonl --json
+    python tools/trace_report.py /tmp/trace.jsonl --format json
     python tools/trace_report.py /tmp/trace.json --assert-lifecycle
     python tools/trace_report.py --trace /tmp/fleet/trace-int8-0.jsonl \\
         --trace /tmp/fleet/trace-int8-1.jsonl ...
@@ -18,9 +18,13 @@ prints:
     acceptance rate, the draft-quality signal for the approximate spec;
   * stall attribution — the largest inter-decode-step gaps per request,
     attributed to prefill interference (another request's chunk ran in
-    the gap), capacity stalls, or scheduler idle time;
+    the gap), capacity stalls, an error-probe forward, an A/B shadow
+    replay, or scheduler idle time;
   * probe error trend — the approximation-error probe's logits/layer
     error variance over time (first vs last, min/max);
+  * shadow A/B — sampled replays through the second numerics pack:
+    token agreement, logit-delta stats, and replay cost (``shadow``
+    spans; see repro.serving.shadow);
   * windowed counters — min/median/max of the windowed gen tok/s series;
   * robustness — governor ladder switches (from/to rung, reason, cost-model
     power delta), detected faults, quarantine replays, and deadline
@@ -173,11 +177,19 @@ def _speculative_summary(events: list[dict]) -> dict | None:
 def _stall_attribution(events: list[dict], top: int = 5) -> list[dict]:
     """Largest gaps between a request's consecutive decode steps, with a
     cause guess: prefill interference (another rid's chunk ran inside the
-    gap), a recorded capacity stall, or scheduler idle."""
+    gap), a recorded capacity stall, an error-probe forward or A/B shadow
+    replay that ran in the gap (both carry real wall-time durations), or
+    scheduler idle."""
     per_rid: dict[int, list[dict]] = collections.defaultdict(list)
     for e in events:
         if e["kind"] == "decode_step":
             per_rid[e["rid"]].append(e)
+
+    def overlaps(kind: str, t0: float, t1: float) -> bool:
+        return any(e["kind"] == kind and e["dur"] > 0
+                   and e["t"] < t1 and e["t"] + e["dur"] > t0
+                   for e in events)
+
     gaps = []
     for rid, evs in per_rid.items():
         for a, b in zip(evs, evs[1:]):
@@ -193,7 +205,10 @@ def _stall_attribution(events: list[dict], top: int = 5) -> list[dict]:
                          if e["kind"] == "capacity_stall"
                          and t0 <= e["t"] <= t1)
             cause = ("prefill_interference" if interference
-                     else "capacity_stall" if stalls else "scheduler_idle")
+                     else "capacity_stall" if stalls
+                     else "probe" if overlaps("probe", t0, t1)
+                     else "shadow" if overlaps("shadow", t0, t1)
+                     else "scheduler_idle")
             gaps.append({"rid": rid, "gap_s": round(gap, 6),
                          "t": round(t0, 6), "cause": cause,
                          "interfering_chunks": interference})
@@ -216,6 +231,25 @@ def _probe_trend(events: list[dict]) -> dict | None:
             "logits_err_var_max": max(lv) if lv else None}
 
 
+def _shadow_summary(events: list[dict]) -> dict | None:
+    """A/B shadow replay rollup from the ``shadow`` spans alone (one per
+    sampled finished request; token/match counts and the replay's wall
+    time ride in its args).  None when the run had no shadow serving."""
+    shadows = [e for e in events if e["kind"] == "shadow"]
+    if not shadows:
+        return None
+    tokens = sum(e["data"].get("tokens", 0) for e in shadows)
+    matches = sum(e["data"].get("matches", 0) for e in shadows)
+    evs = [e["data"]["logits_err_var"] for e in shadows
+           if e["data"].get("logits_err_var") is not None]
+    return {"replays": len(shadows), "tokens": tokens,
+            "token_matches": matches,
+            "token_match_rate": (round(matches / tokens, 4)
+                                 if tokens else None),
+            "logits_err_var_last": evs[-1] if evs else None,
+            "replay_time_s": round(sum(e["dur"] for e in shadows), 6)}
+
+
 def _robustness_summary(events: list[dict]) -> dict | None:
     """Governor/fault/deadline activity (PR 8 span kinds).  None when the
     trace predates them or the run had no robustness events — the report
@@ -235,7 +269,7 @@ def _robustness_summary(events: list[dict]) -> dict | None:
     return {
         "governor_switches": [
             {k: e["data"].get(k)
-             for k in ("step", "action", "from", "to", "reason",
+             for k in ("step", "action", "from", "to", "reason", "layer",
                        "err_var", "power_delta_pct")}
             for e in switches],
         "faults_detected": faults,
@@ -320,6 +354,7 @@ def report(events: list[dict]) -> dict:
             "top_decode_gaps": _stall_attribution(events),
             "speculative": _speculative_summary(events),
             "probe": _probe_trend(events),
+            "shadow": _shadow_summary(events),
             "windows": _window_summary(events),
             "robustness": _robustness_summary(events),
             "fleet": _fleet_summary(events)}
@@ -370,6 +405,13 @@ def _print_human(rep: dict) -> None:
               f"{p['last']['logits_err_var']:.3e} (last), "
               f"range [{p['logits_err_var_min']:.3e}, "
               f"{p['logits_err_var_max']:.3e}]")
+    if rep["shadow"]:
+        sh = rep["shadow"]
+        rate = (f"{sh['token_match_rate']:.2%}"
+                if sh["token_match_rate"] is not None else "n/a")
+        print(f"\nshadow A/B: {sh['replays']} replays, "
+              f"{sh['token_matches']}/{sh['tokens']} tokens matched "
+              f"({rate}), replay cost {sh['replay_time_s']*1e3:.2f}ms")
     if rep["windows"]:
         w = rep["windows"]
         print(f"\nwindowed gen tok/s: {w['samples']} samples, "
@@ -385,8 +427,9 @@ def _print_human(rep: dict) -> None:
         for s in rb["governor_switches"]:
             ev = (f"{s['err_var']:.3e}" if isinstance(s["err_var"], float)
                   else s["err_var"])
+            layer = f"  layer={s['layer']}" if s.get("layer") else ""
             print(f"  step {s['step']:5}  {s['action']:8} "
-                  f"{s['from']} -> {s['to']}  [{s['reason']}]  "
+                  f"{s['from']} -> {s['to']}  [{s['reason']}]{layer}  "
                   f"err_var={ev}  power_delta={s['power_delta_pct']}%")
     if rep["fleet"]:
         print("\nfleet (per tier):")
@@ -417,8 +460,10 @@ def main(argv=None) -> int:
                     help="additional trace file; repeatable (several files "
                          "= a fleet: rids get engine-id prefixes and the "
                          "report gains a per-tier fleet section)")
+    ap.add_argument("--format", choices=("text", "json"), default=None,
+                    help="output format (default: text)")
     ap.add_argument("--json", action="store_true",
-                    help="emit the report as JSON")
+                    help="alias for --format json (kept for old scripts)")
     ap.add_argument("--assert-lifecycle", action="store_true",
                     help="fail unless >= 1 span of every lifecycle stage "
                          f"{list(LIFECYCLE)} is present")
@@ -432,7 +477,8 @@ def main(argv=None) -> int:
         ap.error("no trace files given (positional or --trace)")
     events = load_traces(paths)
     rep = report(events)
-    if args.json:
+    fmt = args.format or ("json" if args.json else "text")
+    if fmt == "json":
         print(json.dumps(rep, indent=2))
     else:
         _print_human(rep)
